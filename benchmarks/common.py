@@ -1,0 +1,69 @@
+"""Shared benchmark harness: run every (workload x policy) simulation once
+and cache the SimResults for all figure benchmarks."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+from repro.core.policies import ALL_POLICIES
+from repro.sim import SimResult, simulate
+from repro.workloads import PAPER_ORDER, get_trace, sim_config_for
+
+# paper headline numbers we validate against (§1, §6)
+PAPER = {
+    "conduit_over_cpu": 4.2,
+    "conduit_over_gpu": 1.8,
+    "conduit_over_isp": 3.3,
+    "conduit_over_pud": 2.2,
+    "conduit_over_flash_cosmos": 3.3,
+    "conduit_over_ares_flash": 2.3,
+    "conduit_over_bw": 2.0,
+    "conduit_over_dm": 1.8,
+    "conduit_of_ideal": 0.62,
+    "energy_vs_cpu": 0.218,          # -78.2%
+    "energy_vs_dm": 0.532,           # -46.8%
+    "gpu_over_cpu": 2.33,
+    "overhead_avg_us": 3.77,
+    "overhead_max_us": 33.0,
+}
+
+
+@functools.lru_cache(maxsize=4)
+def full_matrix(scale: str = "paper") -> Dict[Tuple[str, str], SimResult]:
+    out: Dict[Tuple[str, str], SimResult] = {}
+    for wl in PAPER_ORDER:
+        tr = get_trace(wl, scale)
+        cfg = sim_config_for(wl, tr)
+        for pol in ALL_POLICIES:
+            t0 = time.time()
+            out[(wl, pol)] = simulate(tr, pol, config=cfg)
+    return out
+
+
+def geomean(xs):
+    import math
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / max(1, len(xs)))
+
+
+def speedups_vs_cpu(matrix) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for wl in PAPER_ORDER:
+        base = matrix[(wl, "cpu")].makespan_ns
+        out[wl] = {pol: base / matrix[(wl, pol)].makespan_ns
+                   for pol in ALL_POLICIES}
+    return out
+
+
+def energies_vs_cpu(matrix) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for wl in PAPER_ORDER:
+        base = matrix[(wl, "cpu")].total_energy_nj
+        out[wl] = {pol: matrix[(wl, pol)].total_energy_nj / base
+                   for pol in ALL_POLICIES}
+    return out
+
+
+def csv_row(name: str, value, derived="") -> str:
+    return f"{name},{value},{derived}"

@@ -1,0 +1,177 @@
+"""Reproductions of the paper's tables/figures from the simulator.
+
+One function per paper artifact (see DESIGN.md §9 index):
+  fig5_fig7a_speedup      speedups of all policies vs CPU (Figs 5/7a)
+  fig7b_energy            energy + movement/compute breakdown (Fig 7b)
+  fig8_tail_latency       p99/p99.99 instruction latencies (Fig 8)
+  fig9_decisions          per-resource offloading mix (Fig 9)
+  fig10_timeline          instruction->resource timeline (Fig 10)
+  table3_characterize     workload characterization (Table 3)
+  overhead_analysis       §4.5 runtime decision overheads
+Each returns CSV lines "name,value,derived" and prints a human table.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (PAPER, csv_row, energies_vs_cpu, full_matrix,
+                               geomean, speedups_vs_cpu)
+from repro.core.isa import Resource
+from repro.core.policies import ALL_POLICIES
+from repro.workloads import PAPER_ORDER, WORKLOADS, get_trace
+
+
+def fig5_fig7a_speedup() -> List[str]:
+    m = full_matrix()
+    sp = speedups_vs_cpu(m)
+    rows = []
+    print("\n== Fig 5 / Fig 7a: speedup vs CPU (higher is better)")
+    header = f"{'workload':14s} " + " ".join(f"{p:>12s}" for p in ALL_POLICIES)
+    print(header)
+    for wl in PAPER_ORDER:
+        print(f"{wl:14s} " + " ".join(f"{sp[wl][p]:12.2f}"
+                                      for p in ALL_POLICIES))
+        for p in ALL_POLICIES:
+            rows.append(csv_row(f"fig7a/{wl}/{p}", f"{sp[wl][p]:.3f}",
+                                "speedup_vs_cpu"))
+    gm = {p: geomean([sp[wl][p] for wl in PAPER_ORDER])
+          for p in ALL_POLICIES}
+    print(f"{'GEOMEAN':14s} " + " ".join(f"{gm[p]:12.2f}"
+                                         for p in ALL_POLICIES))
+    for p in ALL_POLICIES:
+        rows.append(csv_row(f"fig7a/geomean/{p}", f"{gm[p]:.3f}",
+                            "speedup_vs_cpu"))
+    # paper-claim comparison
+    claims = [
+        ("conduit_over_cpu", gm["conduit"]),
+        ("conduit_over_dm", gm["conduit"] / gm["dm"]),
+        ("conduit_over_bw", gm["conduit"] / gm["bw"]),
+        ("conduit_over_isp", gm["conduit"] / gm["isp"]),
+        ("conduit_over_pud", gm["conduit"] / gm["pud"]),
+        ("conduit_over_flash_cosmos", gm["conduit"] / gm["flash_cosmos"]),
+        ("conduit_over_ares_flash", gm["conduit"] / gm["ares_flash"]),
+        ("conduit_over_gpu", gm["conduit"] / gm["gpu"]),
+        ("conduit_of_ideal", gm["conduit"] / gm["ideal"]),
+        ("gpu_over_cpu", gm["gpu"]),
+    ]
+    print("\n   ours vs paper-claim:")
+    for name, ours in claims:
+        print(f"   {name:28s} ours={ours:6.2f}  paper={PAPER[name]:6.2f}")
+        rows.append(csv_row(f"claims/{name}", f"{ours:.3f}",
+                            f"paper={PAPER[name]}"))
+    return rows
+
+
+def fig7b_energy() -> List[str]:
+    m = full_matrix()
+    en = energies_vs_cpu(m)
+    rows = []
+    print("\n== Fig 7b: energy vs CPU (lower is better), movement share")
+    for wl in PAPER_ORDER:
+        parts = []
+        for p in ALL_POLICIES:
+            r = m[(wl, p)]
+            mv = r.movement_energy_nj / max(1e-9, r.total_energy_nj)
+            parts.append(f"{en[wl][p]:7.3f}({mv:4.0%})")
+            rows.append(csv_row(f"fig7b/{wl}/{p}", f"{en[wl][p]:.4f}",
+                                f"movement_share={mv:.2f}"))
+        print(f"{wl:14s} " + " ".join(parts))
+    gm = {p: geomean([en[wl][p] for wl in PAPER_ORDER]) for p in ALL_POLICIES}
+    print(f"{'GEOMEAN':14s} " + " ".join(f"{gm[p]:13.3f}"
+                                         for p in ALL_POLICIES))
+    rows.append(csv_row("claims/energy_vs_cpu", f"{gm['conduit']:.3f}",
+                        f"paper={PAPER['energy_vs_cpu']}"))
+    rows.append(csv_row("claims/energy_vs_dm",
+                        f"{gm['conduit'] / gm['dm']:.3f}",
+                        f"paper={PAPER['energy_vs_dm']}"))
+    return rows
+
+
+def fig8_tail_latency() -> List[str]:
+    m = full_matrix()
+    rows = []
+    print("\n== Fig 8: p99 / p99.99 instruction latency (us)")
+    for wl in ("llama2_infer", "jacobi1d"):
+        for p in ("ideal", "conduit", "bw", "dm"):
+            r = m[(wl, p)]
+            p99, p9999 = r.p(99) / 1e3, r.p(99.99) / 1e3
+            print(f"  {wl:14s} {p:8s} p99={p99:10.1f}us "
+                  f"p99.99={p9999:10.1f}us")
+            rows.append(csv_row(f"fig8/{wl}/{p}/p99", f"{p99:.2f}", "us"))
+            rows.append(csv_row(f"fig8/{wl}/{p}/p9999", f"{p9999:.2f}",
+                                "us"))
+    return rows
+
+
+def fig9_decisions() -> List[str]:
+    m = full_matrix()
+    rows = []
+    print("\n== Fig 9: fraction of instructions per compute resource")
+    for wl in PAPER_ORDER:
+        for p in ("ideal", "conduit", "dm", "bw"):
+            mix = m[(wl, p)].decision_mix()
+            s = " ".join(f"{r.value}:{f:.0%}" for r, f in sorted(
+                mix.items(), key=lambda kv: kv[0].value) if f > 0.004)
+            print(f"  {wl:14s} {p:8s} {s}")
+            for r, f in mix.items():
+                rows.append(csv_row(f"fig9/{wl}/{p}/{r.value}", f"{f:.4f}",
+                                    "decision_fraction"))
+    return rows
+
+
+def fig10_timeline(n: int = 60) -> List[str]:
+    """Instruction->resource mapping over the first N decisions of LLaMA2
+    inference (the paper plots 12000; we print a compact strip)."""
+    m = full_matrix()
+    rows = []
+    print("\n== Fig 10: llama2_infer instruction->resource strip "
+          f"(first {n} instrs)")
+    glyph = {"isp": "I", "pud": "D", "ifp": "F", "cpu": "c", "gpu": "g"}
+    for p in ("bw", "dm", "conduit"):
+        decs = m[("llama2_infer", p)].decisions[:n]
+        strip = "".join(glyph[d.resource.value] for d in decs)
+        print(f"  {p:8s} {strip}")
+        rows.append(csv_row(f"fig10/llama2_infer/{p}", strip,
+                            "I=isp D=pud F=ifp"))
+    return rows
+
+
+def table3_characterize() -> List[str]:
+    rows = []
+    print("\n== Table 3: workload characterization (ours vs paper)")
+    print(f"{'workload':14s} {'vect%':>6s} {'(p)':>5s} {'reuse':>6s} "
+          f"{'(p)':>5s} {'L/M/H':>12s} {'(paper L/M/H)':>14s} {'instrs':>8s}")
+    for wl in PAPER_ORDER:
+        tr = get_trace(wl, "paper")
+        st = tr.characterize()
+        r = st.as_row()
+        meta = WORKLOADS[wl].META
+        print(f"{wl:14s} {r['vectorizable_pct']:6.1f} "
+              f"{meta['paper_vect']:5.0f} {r['avg_reuse']:6.1f} "
+              f"{meta['paper_reuse']:5.1f} "
+              f"{r['low_pct']:3.0f}/{r['medium_pct']:3.0f}/"
+              f"{r['high_pct']:3.0f} "
+              f"{meta['paper_low']:4.0f}/{meta['paper_med']:3.0f}/"
+              f"{meta['paper_high']:3.0f} {r['instrs']:8d}")
+        rows.append(csv_row(
+            f"table3/{wl}",
+            f"{r['vectorizable_pct']}/{r['avg_reuse']}",
+            f"bands={r['low_pct']}/{r['medium_pct']}/{r['high_pct']}"))
+    return rows
+
+
+def overhead_analysis() -> List[str]:
+    m = full_matrix()
+    rows = []
+    print("\n== §4.5: runtime decision overhead (dynamic policies)")
+    worst = 0.0
+    for wl in PAPER_ORDER:
+        r = m[(wl, "conduit")]
+        avg = r.avg_decision_overhead_ns / 1e3
+        per = [d for d in r.decisions]
+        worst = max(worst, avg)
+        print(f"  {wl:14s} avg={avg:6.2f}us  "
+              f"(paper avg {PAPER['overhead_avg_us']}us, "
+              f"max {PAPER['overhead_max_us']}us)")
+        rows.append(csv_row(f"overhead/{wl}", f"{avg:.3f}", "us_avg"))
+    return rows

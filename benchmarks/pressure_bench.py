@@ -1,0 +1,48 @@
+"""Capacity-pressure sweep: exercises the eviction + lazy-coherence
+machinery (the paper's "footprint exceeds capacity" regime, §5.4) and the
+fault-replay path (§4.4 failure handling)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.sim import SimConfig, simulate
+from repro.workloads import get_trace, sim_config_for
+
+
+def pressure_sweep(workload: str = "aes") -> List[str]:
+    rows = []
+    tr = get_trace(workload, "paper")
+    print(f"\n== capacity-pressure sweep ({workload}, conduit policy)")
+    base = None
+    for pressure in (0.0, 0.5, 0.8, 0.95):
+        cfg = sim_config_for(workload, tr, pressure=pressure)
+        r = simulate(tr, "conduit", config=cfg)
+        if base is None:
+            base = r.makespan_ns
+        slow = r.makespan_ns / base
+        print(f"  pressure={pressure:4.2f} makespan={r.makespan_ns/1e6:9.2f}ms "
+              f"({slow:5.2f}x) evictions={r.evictions:6d} "
+              f"coherence_syncs={r.coherence_syncs:5d}")
+        rows.append(csv_row(f"pressure/{workload}/{pressure}",
+                            f"{r.makespan_ns/1e3:.1f}",
+                            f"us,evictions={r.evictions},"
+                            f"syncs={r.coherence_syncs}"))
+    return rows
+
+
+def fault_replay(workload: str = "jacobi1d") -> List[str]:
+    rows = []
+    tr = get_trace(workload, "paper")
+    cfg0 = sim_config_for(workload, tr)
+    print(f"\n== transient-fault replay ({workload}, conduit policy)")
+    base = simulate(tr, "conduit", config=cfg0).makespan_ns
+    for rate in (0.0, 0.01, 0.05):
+        cfg = sim_config_for(workload, tr, fail_rate=rate)
+        r = simulate(tr, "conduit", config=cfg)
+        print(f"  fail_rate={rate:5.2f} makespan={r.makespan_ns/1e6:8.2f}ms "
+              f"({r.makespan_ns/base:5.2f}x) replays={r.replays}")
+        rows.append(csv_row(f"fault/{workload}/{rate}",
+                            f"{r.makespan_ns/1e3:.1f}",
+                            f"us,replays={r.replays}"))
+    return rows

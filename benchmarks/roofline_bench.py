@@ -1,0 +1,134 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_baseline.json (produced by ``python -m repro.launch.dryrun
+--all``) and renders the per-(arch x shape) three-term table.  When the
+JSON is absent (e.g. CI without the 512-device sweep) it falls back to the
+analytic ConduitScheduler estimates, clearly labeled.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.distributed import ConduitScheduler
+from repro.hw.tpu_spec import TPU_V5E
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN_JSON = os.path.join(_ROOT, "dryrun_optimized.json")
+if not os.path.exists(DRYRUN_JSON):
+    DRYRUN_JSON = os.path.join(_ROOT, "dryrun_baseline.json")
+BASELINE_JSON = os.path.join(_ROOT, "dryrun_baseline.json")
+
+
+def _fmt(rec) -> str:
+    r = rec["roofline"]
+    return (f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"C={r['compute_s']*1e3:9.3f}ms M={r['memory_s']*1e3:9.3f}ms "
+            f"X={r['collective_s']*1e3:9.3f}ms -> {r['dominant']:10s} "
+            f"useful={100*(rec.get('useful_flop_ratio') or 0):5.1f}%")
+
+
+def roofline_table(mesh: str = "16x16") -> List[str]:
+    rows: List[str] = []
+    if os.path.exists(DRYRUN_JSON):
+        with open(DRYRUN_JSON) as f:
+            recs = json.load(f)
+        print(f"\n== §Roofline: measured dry-run terms ({mesh}, per chip)")
+        for rec in recs:
+            if rec.get("skipped"):
+                if mesh == "16x16":
+                    print(f"{rec['arch']:22s} {rec['shape']:12s} SKIP "
+                          f"({rec['skipped'][:60]}...)")
+                    rows.append(csv_row(
+                        f"roofline/{rec['arch']}/{rec['shape']}", "skip",
+                        "long_500k full-attention"))
+                continue
+            if rec.get("error") or rec.get("mesh") != mesh:
+                continue
+            print(_fmt(rec))
+            r = rec["roofline"]
+            rows.append(csv_row(
+                f"roofline/{rec['arch']}/{rec['shape']}",
+                f"{r['bound_s']*1e6:.1f}",
+                f"us_bound,dominant={r['dominant']},"
+                f"useful={(rec.get('useful_flop_ratio') or 0):.3f}"))
+    else:
+        print("\n== §Roofline: dryrun_baseline.json missing — analytic "
+              "estimates (ConduitScheduler)")
+        sched = ConduitScheduler()
+        for arch in configs.ARCHS:
+            cfg = configs.get(arch)
+            for shape, spec in SHAPES.items():
+                from repro.configs.shapes import applicable
+                ok, _ = applicable(cfg, shape)
+                if not ok:
+                    continue
+                best, _ = sched.choose(cfg, spec.kind, spec.global_batch,
+                                       spec.seq_len, 256, 16, 16)
+                rows.append(csv_row(f"roofline_est/{arch}/{shape}",
+                                    f"{best.total_s*1e6:.1f}",
+                                    "us_estimated"))
+    return rows
+
+
+def multi_pod_check() -> List[str]:
+    """Multi-pod pass/fail summary (the MINIMUM deliverable)."""
+    rows: List[str] = []
+    if not os.path.exists(DRYRUN_JSON):
+        print("  (dry-run JSON missing; run repro.launch.dryrun --all)")
+        return rows
+    with open(DRYRUN_JSON) as f:
+        recs = json.load(f)
+    ok = sum(1 for r in recs if r.get("mesh") == "2x16x16"
+             and "roofline" in r)
+    fail = sum(1 for r in recs if r.get("mesh") == "2x16x16"
+               and r.get("error"))
+    skip = sum(1 for r in recs if r.get("skipped"))
+    print(f"\n== §Dry-run multi-pod (2x16x16, 512 chips): "
+          f"{ok} compiled, {fail} failed, {skip} skipped cells")
+    rows.append(csv_row("dryrun/multi_pod_ok", ok, f"fail={fail}"))
+    single_ok = sum(1 for r in recs if r.get("mesh") == "16x16"
+                    and "roofline" in r)
+    rows.append(csv_row("dryrun/single_pod_ok", single_ok, ""))
+    return rows
+
+
+HILLCLIMB_CELLS = (("qwen3-4b", "decode_32k"),
+                   ("deepseek-v2-236b", "train_4k"),
+                   ("minicpm-2b", "train_4k"))
+
+
+def perf_deltas() -> List[str]:
+    """§Perf: baseline vs optimized roofline terms for the three
+    hillclimbed cells (both sweeps committed)."""
+    rows: List[str] = []
+    if not (os.path.exists(BASELINE_JSON) and os.path.exists(DRYRUN_JSON)
+            and BASELINE_JSON != DRYRUN_JSON):
+        print("  (need both dryrun_baseline.json and dryrun_optimized.json)")
+        return rows
+    with open(BASELINE_JSON) as f:
+        base = {(r["arch"], r.get("shape"), r.get("mesh")): r
+                for r in json.load(f) if "roofline" in r}
+    with open(DRYRUN_JSON) as f:
+        opt = {(r["arch"], r.get("shape"), r.get("mesh")): r
+               for r in json.load(f) if "roofline" in r}
+    print("\n== §Perf: baseline -> optimized (16x16, bound term seconds)")
+    for arch, shape in HILLCLIMB_CELLS:
+        kb = base.get((arch, shape, "16x16"))
+        ko = opt.get((arch, shape, "16x16"))
+        if not kb or not ko:
+            continue
+        b, o = kb["roofline"]["bound_s"], ko["roofline"]["bound_s"]
+        ub = (kb.get("useful_flop_ratio") or 0)
+        uo = (ko.get("useful_flop_ratio") or 0)
+        print(f"  {arch:22s} {shape:12s} bound {b:9.3f}s -> {o:9.3f}s "
+              f"({b/max(o,1e-12):5.1f}x)  useful {100*ub:4.1f}% -> "
+              f"{100*uo:4.1f}%")
+        rows.append(csv_row(f"perf/{arch}/{shape}",
+                            f"{b/max(o,1e-12):.2f}",
+                            f"bound_speedup,useful={uo:.3f}"))
+    return rows

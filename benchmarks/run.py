@@ -1,0 +1,63 @@
+"""Benchmark entry point: one function per paper table/figure plus the
+roofline/dry-run, pressure, fault-replay and kernel benches.
+
+Prints human-readable tables followed by a machine-readable
+``name,value,derived`` CSV block.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig7a,table3
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
+                         "overhead,roofline,pressure,fault,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figures, pressure_bench
+    from benchmarks import roofline_bench
+
+    suites = {
+        "table3": paper_figures.table3_characterize,
+        "fig7a": paper_figures.fig5_fig7a_speedup,
+        "fig7b": paper_figures.fig7b_energy,
+        "fig8": paper_figures.fig8_tail_latency,
+        "fig9": paper_figures.fig9_decisions,
+        "fig10": paper_figures.fig10_timeline,
+        "overhead": paper_figures.overhead_analysis,
+        "kernels": kernel_bench.kernel_microbench,
+        "latmodel": kernel_bench.resource_latency_table,
+        "pressure": pressure_bench.pressure_sweep,
+        "fault": pressure_bench.fault_replay,
+        "roofline": roofline_bench.roofline_table,
+        "dryrun": roofline_bench.multi_pod_check,
+        "perf": roofline_bench.perf_deltas,
+    }
+    wanted = (args.only.split(",") if args.only else list(suites))
+    csv_rows = ["name,value,derived"]
+    t0 = time.time()
+    for name in wanted:
+        fn = suites.get(name.strip())
+        if fn is None:
+            print(f"unknown suite {name}", file=sys.stderr)
+            continue
+        try:
+            csv_rows.extend(fn())
+        except Exception as e:  # pragma: no cover
+            print(f"[benchmarks] suite {name} failed: {e}", file=sys.stderr)
+            csv_rows.append(f"error/{name},{e},")
+    print(f"\n[benchmarks] completed in {time.time()-t0:.0f}s")
+    print("\n===== CSV =====")
+    for row in csv_rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

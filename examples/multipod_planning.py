@@ -1,0 +1,27 @@
+"""Conduit-for-TPU: the six-feature cost function planning distributed
+execution of DeepSeek-V2-236B on the 512-chip production mesh.
+
+    PYTHONPATH=src python examples/multipod_planning.py
+"""
+from repro import configs
+from repro.distributed import ConduitScheduler, default_candidates
+
+
+def main():
+    cfg = configs.get("deepseek-v2-236b")
+    sched = ConduitScheduler()
+    print(f"== planning {cfg.name} train_4k on 2x16x16 (512 chips)")
+    best, ests = sched.choose(cfg, "train", global_batch=256, seq_len=4096,
+                              chips=512, data_par=16, model_par=16, pods=2)
+    print(f"{'plan':20s} {'compute':>9s} {'memory':>9s} {'coll.':>9s} "
+          f"{'exposed':>9s} {'HBM/chip':>9s} {'total':>9s} feasible")
+    for e in sorted(ests, key=lambda e: e.total_s):
+        mark = " <== chosen" if e.plan.name == best.plan.name else ""
+        print(f"{e.plan.name:20s} {e.compute_s*1e3:8.1f}ms "
+              f"{e.memory_s*1e3:8.1f}ms {e.collective_s*1e3:8.1f}ms "
+              f"{e.exposed_collective_s*1e3:8.1f}ms {e.hbm_gb:8.1f}GB "
+              f"{e.total_s*1e3:8.1f}ms {str(e.feasible):>5s}{mark}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Conduit reproduction: programmer-transparent NDP offloading (the paper's
+framework, §4) + the same cost-function insight as a multi-pod JAX
+training/serving stack.
+
+Public API:
+    repro.core.vectorize      compile-time pass: JAX fn -> vector IR
+    repro.sim.simulate        event-driven execution under any policy
+    repro.configs.get         the 10 assigned architecture configs
+    repro.launch.*            mesh / dryrun / train / serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""Conduit core: the paper's contribution as a composable library.
+
+Compile-time:  :func:`repro.core.vectorize.vectorize` — programmer-
+transparent tracing of a JAX function into page-aligned vector instructions.
+
+Runtime:       :mod:`repro.core.cost` (six-feature cost function, Eqns 1-2),
+:mod:`repro.core.policies` (Conduit + all baseline offloading policies),
+:mod:`repro.core.mapping` (L2P + lazy coherence).
+"""
+from repro.core.isa import (NDP_RESOURCES, Location, OpClass, Resource,
+                            VectorInstr, compute_energy_nj,
+                            compute_latency_ns, supports)
+from repro.core.cost import (HOME, Features, SystemView, decision_overhead_ns,
+                             dm_energy_nj, dm_latency_ns, features_for)
+from repro.core.mapping import PageEntry, PageTable
+from repro.core.policies import (ALL_POLICIES, ConduitPolicy, DMOffloading,
+                                 BWOffloading, IdealPolicy, Policy,
+                                 make_policy)
+from repro.core.vectorize import Trace, TraceStats, vectorize
+
+__all__ = [
+    "NDP_RESOURCES", "Location", "OpClass", "Resource", "VectorInstr",
+    "compute_energy_nj", "compute_latency_ns", "supports", "HOME",
+    "Features", "SystemView", "decision_overhead_ns", "dm_energy_nj",
+    "dm_latency_ns", "features_for", "PageEntry", "PageTable",
+    "ALL_POLICIES", "ConduitPolicy", "DMOffloading", "BWOffloading",
+    "IdealPolicy", "Policy", "make_policy", "Trace", "TraceStats",
+    "vectorize",
+]

@@ -1,0 +1,163 @@
+"""Conduit's holistic cost function (§4.3.2, Table 1, Eqns 1-2).
+
+For each vector instruction and each candidate resource the cost function
+combines six features:
+
+  (1) operation type          -> latency_comp model (isa.compute_latency_ns)
+  (2) operand location        -> L2P lookups feeding latency_dm
+  (3) data dependence delay   -> delay_dd
+  (4) resource queueing delay -> delay_queue
+  (5) data movement latency   -> latency_dm (precomputed, contention-free)
+  (6) expected comp latency   -> latency_comp
+
+  total_latency_r = latency_comp + latency_dm + max(delay_dd, delay_queue)   (1)
+  target          = argmin_r total_latency_r                                 (2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.isa import (Location, Resource, VectorInstr,
+                            compute_latency_ns, supports)
+from repro.hw.ssd_spec import SSDSpec
+
+# Operand "home" for each compute resource: where operands must reside for
+# the resource to execute on them.
+HOME: Dict[Resource, Location] = {
+    Resource.ISP: Location.DRAM,
+    Resource.PUD: Location.DRAM,
+    Resource.IFP: Location.FLASH,
+    Resource.HOST_CPU: Location.HOST,
+    Resource.HOST_GPU: Location.HOST,
+}
+
+
+def dm_latency_ns(src: Location, dst: Location, nbytes: int,
+                  spec: SSDSpec) -> float:
+    """Contention-free data-movement latency estimate (feature 5).
+
+    Precomputed in the paper and stored in SSD DRAM; we compute it from the
+    same Table 2 link constants.  Movement *into* flash requires an
+    (expensive) SLC-mode program — the reason good policies rarely move
+    DRAM-resident data back into the flash array for IFP.
+    """
+    if src == dst:
+        return 0.0
+    f, d, h = spec.flash, spec.dram, spec.host
+    chan = nbytes * f.channel_ns_per_byte
+    bus = nbytes * d.bus_ns_per_byte
+    pcie = nbytes * h.pcie_ns_per_byte + h.pcie_latency_ns
+
+    table = {
+        (Location.FLASH, Location.DRAM): f.t_read_ns + f.t_dma_ns + chan + bus,
+        (Location.DRAM, Location.FLASH): bus + chan + f.t_dma_ns + f.t_prog_ns,
+        (Location.FLASH, Location.CTRL): f.t_read_ns + f.t_dma_ns + chan,
+        (Location.CTRL, Location.FLASH): chan + f.t_dma_ns + f.t_prog_ns,
+        (Location.DRAM, Location.CTRL): bus,
+        (Location.CTRL, Location.DRAM): bus,
+        (Location.FLASH, Location.HOST): f.t_read_ns + f.t_dma_ns + chan + pcie,
+        (Location.DRAM, Location.HOST): bus + pcie,
+        (Location.CTRL, Location.HOST): pcie,
+        (Location.HOST, Location.FLASH): pcie + chan + f.t_dma_ns + f.t_prog_ns,
+        (Location.HOST, Location.DRAM): pcie + bus,
+        (Location.HOST, Location.CTRL): pcie,
+    }
+    return table[(src, dst)]
+
+
+def dm_energy_nj(src: Location, dst: Location, nbytes: int,
+                 spec: SSDSpec) -> float:
+    """Energy of moving ``nbytes`` between locations (§5.2 energy model)."""
+    if src == dst:
+        return 0.0
+    f, d, h = spec.flash, spec.dram, spec.host
+    kb = nbytes / 1024.0
+    e = 0.0
+    crosses_chan = (Location.FLASH in (src, dst))
+    crosses_pcie = (Location.HOST in (src, dst))
+    if src == Location.FLASH:
+        e += f.e_read_nj_per_channel * 0.3 + f.e_dma_nj_per_channel
+    if dst == Location.FLASH:
+        e += f.e_prog_nj_per_channel + f.e_dma_nj_per_channel
+    if crosses_chan:
+        e += 2.0 * kb                      # channel toggling
+    if Location.DRAM in (src, dst) or (crosses_pcie and not crosses_chan):
+        e += d.e_bus_nj_per_kb * kb
+    if crosses_pcie:
+        e += h.e_pcie_nj_per_kb * kb
+    return e
+
+
+@dataclasses.dataclass
+class Features:
+    """Per-(instruction, resource) feature vector — logged for Fig. 9/10."""
+
+    resource: Resource
+    latency_comp: float
+    latency_dm: float
+    delay_dd: float
+    delay_queue: float
+    supported: bool
+
+    @property
+    def total(self) -> float:
+        # Eqn 1: dd and queue delays overlap -> max().
+        return (self.latency_comp + self.latency_dm
+                + max(self.delay_dd, self.delay_queue))
+
+
+@dataclasses.dataclass
+class SystemView:
+    """Runtime state snapshot the offloader reads (real-time knowledge the
+    SSD controller has of its own resources, §4.3.2)."""
+
+    now_ns: float
+    queue_delay_ns: Callable[[Resource], float]
+    dep_ready_ns: Callable[[VectorInstr], float]     # abs time operands ready
+    location_of: Callable[[int], Location]
+    # queueing on the operand-movement path (defaults to zero: the paper's
+    # static dm estimate; the simulator wires the real path queues in)
+    move_queue_ns: Callable[[Location, Location], float] = lambda s, d: 0.0
+
+
+def features_for(instr: VectorInstr, resource: Resource, view: SystemView,
+                 spec: SSDSpec) -> Features:
+    ok = supports(resource, instr) and instr.op_class.name != "CONTROL" \
+        or resource in (Resource.ISP, Resource.HOST_CPU)
+    home = HOME[resource]
+    dm = 0.0
+    mq = 0.0
+    for s in instr.srcs:
+        loc = view.location_of(s)
+        dm += dm_latency_ns(loc, home, instr.nbytes, spec)
+        if loc != home:
+            mq = max(mq, view.move_queue_ns(loc, home))
+    lat = compute_latency_ns(instr, resource, spec) if ok else float("inf")
+    dd = max(0.0, view.dep_ready_ns(instr) - view.now_ns)
+    q = max(view.queue_delay_ns(resource), mq)
+    return Features(resource=resource, latency_comp=lat, latency_dm=dm,
+                    delay_dd=dd, delay_queue=q, supported=ok)
+
+
+def decision_overhead_ns(instr: VectorInstr, spec: SSDSpec,
+                         l2p_lookup: Optional[Callable[[int], float]] = None,
+                         has_pending_deps: bool = False) -> float:
+    """Runtime latency overhead of one offloading decision (§4.5).
+
+    Components: per-operand L2P lookups (100 ns hit / 30 µs DFTL miss),
+    dependence tracking (1 µs when deps are pending), queue-counter reads
+    (1 µs), precomputed dm-latency lookup (100 ns), comp-latency lookup
+    (150 ns), and instruction transformation (300 ns table lookup).
+    Average ≈ 3.77 µs, worst ≈ 33 µs — validated in tests.
+    """
+    t = 0.0
+    for s in instr.srcs:
+        t += l2p_lookup(s) if l2p_lookup else spec.l2p_lookup_dram_ns
+    if has_pending_deps:
+        t += spec.dep_delay_track_ns
+    t += spec.queue_delay_track_ns
+    t += spec.dm_latency_lookup_ns
+    t += spec.comp_latency_lookup_ns
+    t += spec.translation_lookup_ns
+    return t

@@ -1,0 +1,217 @@
+"""Offloading policies: Conduit + the six evaluated baselines (§5.3).
+
+Every policy maps a vector instruction (plus the runtime SystemView) to a
+target compute resource.  The event-driven simulator (repro.sim) invokes
+``select`` once per instruction at dispatch time.
+
+* ``ConduitPolicy``    — the paper's contribution: Eqns 1-2 over six features.
+* ``BWOffloading``     — lowest bandwidth/queue utilization [28,38,210-213].
+* ``DMOffloading``     — minimize operand data movement [29,36,214,215].
+* ``IdealPolicy``      — lowest computation latency; the simulator runs it
+                         with contention and movement disabled (§5.3).
+* ``StaticPolicy``     — single-resource NDP baselines (ISP, PuD-SSD,
+                         Flash-Cosmos, Ares-Flash) with ISP fallback for
+                         unsupported ops, as the paper's baselines do.
+* ``HostPolicy``       — OSP on host CPU or GPU over NVMe/PCIe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost import HOME, Features, SystemView, features_for
+from repro.core.isa import (NDP_RESOURCES, OpClass, Resource, VectorInstr,
+                            compute_latency_ns, supports)
+from repro.hw.ssd_spec import SSDSpec
+
+
+@dataclasses.dataclass
+class Decision:
+    resource: Resource
+    features: Dict[Resource, Features]
+    reason: str = ""
+
+
+class Policy:
+    name = "base"
+    candidates: Tuple[Resource, ...] = NDP_RESOURCES
+    ignores_contention = False      # Ideal: simulator disables contention
+    # Dynamic policies evaluate runtime features per instruction inside the
+    # SSD controller and pay the §4.5 decision overhead; static policies
+    # (single-resource NDP baselines, host execution) are compile-time
+    # mapped and only pay a queue-push.
+    dynamic = True
+
+    def __init__(self, spec: SSDSpec):
+        self.spec = spec
+
+    def _feats(self, instr: VectorInstr, view: SystemView
+               ) -> Dict[Resource, Features]:
+        return {r: features_for(instr, r, view, self.spec)
+                for r in self.candidates}
+
+    def _supported(self, instr: VectorInstr,
+                   feats: Dict[Resource, Features]) -> List[Resource]:
+        ok = [r for r in self.candidates
+              if feats[r].supported and supports(r, instr)]
+        if instr.op_class is OpClass.CONTROL or not ok:
+            # control-intensive regions always fall back to the cores
+            fallback = (Resource.ISP if Resource.ISP in self.candidates
+                        else self.candidates[0])
+            return [fallback]
+        return ok
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        raise NotImplementedError
+
+
+class ConduitPolicy(Policy):
+    """The paper's holistic cost function: argmin Eqn 1 over resources."""
+
+    name = "conduit"
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        ok = self._supported(instr, feats)
+        best = min(ok, key=lambda r: feats[r].total)
+        return Decision(best, feats, reason=f"min_total={feats[best].total:.0f}ns")
+
+
+class BWOffloading(Policy):
+    """Bandwidth-utilization-based offloading: prefer the least-utilized
+    resource, ignoring operand movement cost (§3.2, §5.3)."""
+
+    name = "bw"
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        ok = self._supported(instr, feats)
+        best = min(ok, key=lambda r: (feats[r].delay_queue,
+                                      feats[r].latency_comp))
+        return Decision(best, feats, reason="min_queue")
+
+
+class DMOffloading(Policy):
+    """Data-movement-minimizing offloading: prefer the resource that moves
+    the fewest operand BYTES, ignoring contention (§3.2, §5.3)."""
+
+    name = "dm"
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        ok = self._supported(instr, feats)
+
+        def moved_bytes(r):
+            home = HOME[r]
+            return sum(instr.nbytes for s in instr.srcs
+                       if view.location_of(s) != home)
+
+        best = min(ok, key=lambda r: (moved_bytes(r), feats[r].latency_comp))
+        return Decision(best, feats, reason="min_dm_bytes")
+
+
+class IdealPolicy(Policy):
+    """Upper bound (§5.3): no queueing, zero movement, fastest resource."""
+
+    name = "ideal"
+    ignores_contention = True
+    dynamic = False
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        ok = self._supported(instr, feats)
+        best = min(ok, key=lambda r: feats[r].latency_comp)
+        return Decision(best, feats, reason="min_comp")
+
+
+class StaticPolicy(Policy):
+    """Single-resource NDP baselines with ISP fallback (§5.3).
+
+    ``ops`` restricts which mnemonics the primary resource accelerates
+    (e.g. Flash-Cosmos: MWS AND/OR/NOT only)."""
+
+    dynamic = False
+
+    def __init__(self, spec: SSDSpec, primary: Resource,
+                 ops: Optional[Sequence[str]] = None, name: str = ""):
+        super().__init__(spec)
+        self.primary = primary
+        self.ops = frozenset(ops) if ops is not None else None
+        self.name = name or primary.value
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        ok_primary = (feats[self.primary].supported
+                      and supports(self.primary, instr)
+                      and instr.op_class is not OpClass.CONTROL
+                      and (self.ops is None or instr.op in self.ops))
+        if ok_primary and self.primary is Resource.IFP:
+            # Flash-Cosmos/Ares-Flash compute on data stored in the flash
+            # array (or chained in latches); they never program operands
+            # back into flash just to compute on them.
+            from repro.core.isa import Location
+            ok_primary = all(view.location_of(s) == Location.FLASH
+                             for s in instr.srcs)
+        target = self.primary if ok_primary else Resource.ISP
+        return Decision(target, feats, reason="static")
+
+
+class HostPolicy(Policy):
+    """Outside-storage processing on host CPU/GPU (§5.3)."""
+
+    ignores_contention = False
+    dynamic = False
+
+    def __init__(self, spec: SSDSpec, device: Resource):
+        super().__init__(spec)
+        assert device in (Resource.HOST_CPU, Resource.HOST_GPU)
+        self.device = device
+        self.name = device.value
+        # GPU baselines run control-intensive regions on the host CPU.
+        self.candidates = ((device,) if device is Resource.HOST_CPU
+                           else (device, Resource.HOST_CPU))
+
+    def select(self, instr: VectorInstr, view: SystemView) -> Decision:
+        feats = self._feats(instr, view)
+        target = self.device
+        if (instr.op_class is OpClass.CONTROL
+                and self.device is Resource.HOST_GPU):
+            target = Resource.HOST_CPU
+        return Decision(target, feats, reason="host")
+
+
+# -- factory -----------------------------------------------------------------
+
+FLASH_COSMOS_OPS = ("and", "or", "nand", "nor", "not", "xor")
+ARES_FLASH_OPS = FLASH_COSMOS_OPS + ("add", "sub", "mul", "copy")
+
+
+def make_policy(name: str, spec: SSDSpec) -> Policy:
+    name = name.lower()
+    if name == "conduit":
+        return ConduitPolicy(spec)
+    if name in ("bw", "bw_offloading"):
+        return BWOffloading(spec)
+    if name in ("dm", "dm_offloading"):
+        return DMOffloading(spec)
+    if name == "ideal":
+        return IdealPolicy(spec)
+    if name == "isp":
+        return StaticPolicy(spec, Resource.ISP, name="isp")
+    if name in ("pud", "pud_ssd"):
+        return StaticPolicy(spec, Resource.PUD, name="pud")
+    if name in ("flash_cosmos", "flashcosmos"):
+        return StaticPolicy(spec, Resource.IFP, FLASH_COSMOS_OPS,
+                            name="flash_cosmos")
+    if name in ("ares_flash", "aresflash", "ifp"):
+        return StaticPolicy(spec, Resource.IFP, ARES_FLASH_OPS,
+                            name="ares_flash")
+    if name == "cpu":
+        return HostPolicy(spec, Resource.HOST_CPU)
+    if name == "gpu":
+        return HostPolicy(spec, Resource.HOST_GPU)
+    raise ValueError(f"unknown policy {name!r}")
+
+
+ALL_POLICIES = ("cpu", "gpu", "isp", "pud", "flash_cosmos", "ares_flash",
+                "bw", "dm", "conduit", "ideal")

@@ -1,0 +1,5 @@
+from repro.distributed.scheduler import (CandidatePlan, ConduitScheduler,
+                                         PlanEstimate, default_candidates)
+
+__all__ = ["CandidatePlan", "ConduitScheduler", "PlanEstimate",
+           "default_candidates"]

@@ -1,0 +1,5 @@
+"""Hardware models: simulated SSD (paper Table 2) and target TPU v5e constants."""
+from repro.hw.ssd_spec import SSDSpec, DEFAULT_SSD
+from repro.hw.tpu_spec import TPUSpec, TPU_V5E
+
+__all__ = ["SSDSpec", "DEFAULT_SSD", "TPUSpec", "TPU_V5E"]

@@ -1,0 +1,53 @@
+"""Target TPU hardware constants for roofline analysis.
+
+The container is CPU-only; TPU v5e is the *target*.  These constants feed
+the three-term roofline derived from the compiled dry-run artifacts:
+
+  compute term    = HLO_FLOPs       / (chips * peak_flops)
+  memory term     = HLO_bytes       / (chips * hbm_bw)
+  collective term = collective_bytes/ (chips * ici_bw)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu_v5e"
+    peak_bf16_flops: float = 197e12      # FLOP/s per chip
+    hbm_bw: float = 819e9                # bytes/s per chip
+    hbm_bytes: float = 16e9              # HBM capacity per chip
+    ici_bw_per_link: float = 50e9        # bytes/s per ICI link
+    ici_links: int = 4                   # 2D torus: 4 links/chip
+    dcn_bw: float = 25e9 / 8             # inter-pod (data-center network), bytes/s/chip
+    vmem_bytes: float = 128e6 / 1        # ~128MB vector memory (v5e: 128MiB shared)
+    mxu_dim: int = 128                   # systolic array edge
+    lane_count: int = 128                # VPU lanes
+    sublane_count: int = 8
+
+    @property
+    def ici_bw(self) -> float:
+        # Bisection-style per-chip collective bandwidth: a well-scheduled
+        # ring/torus all-reduce streams over all links concurrently, but we
+        # use the conservative single-direction per-link figure times 2
+        # (bidirectional ring) as the per-chip collective bandwidth.
+        return self.ici_bw_per_link * 2
+
+    def roofline_terms(self, flops: float, hbm_bytes: float,
+                       collective_bytes: float, chips: int) -> dict:
+        """Return the three roofline terms in seconds (per-step)."""
+        ct = flops / (chips * self.peak_bf16_flops)
+        mt = hbm_bytes / (chips * self.hbm_bw)
+        xt = collective_bytes / (chips * self.ici_bw)
+        dominant = max((ct, "compute"), (mt, "memory"), (xt, "collective"))[1]
+        return {
+            "compute_s": ct,
+            "memory_s": mt,
+            "collective_s": xt,
+            "dominant": dominant,
+            "bound_s": max(ct, mt, xt),
+        }
+
+
+TPU_V5E = TPUSpec()

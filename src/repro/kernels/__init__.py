@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots the paper's resources model.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+jit'd wrapper in ops.py, pure-jnp oracle in ref.py.  Validated in
+interpret mode on CPU; compiled on TPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

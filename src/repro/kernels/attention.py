@@ -1,0 +1,90 @@
+"""Tiled attention with online softmax (FlashAttention-style Pallas kernel).
+
+Used by the LM-family architectures' prefill path.  Grid = (heads,
+q-blocks); each invocation holds one q tile in VMEM and streams k/v tiles
+with the running (max, normalizer, accumulator) online-softmax state — no
+[seq, seq] score materialization, which is what makes 32k-token prefill
+VMEM-feasible on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, out_ref, *, block_q: int,
+                 block_k: int, seq_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
+    bq, d = q.shape
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        start = kb * block_k
+        k = k_ref[0, pl.ds(start, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(start, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                  # [bq, bk]
+        if causal:
+            k_pos = start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    nkb = seq_k // block_k
+    if causal:
+        # skip fully-masked k blocks past the diagonal
+        nkb_eff = jnp.minimum(nkb, (qi + 1) * block_q // block_k
+                              + (1 if block_q % block_k or True else 0))
+        nkb_eff = jnp.minimum(nkb, ((qi + 1) * block_q + block_k - 1)
+                              // block_k)
+    else:
+        nkb_eff = nkb
+    m, l, acc = jax.lax.fori_loop(0, nkb_eff, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Attention over ``q/k/v [heads, seq, dh]`` with online softmax."""
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    grid = (h, sq // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq_k=sk,
+        causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, sk, d), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda hh, qq: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

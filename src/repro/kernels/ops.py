@@ -1,0 +1,105 @@
+"""Jit'd public wrappers for the Pallas kernels (shape checks + padding).
+
+``interpret`` defaults to True on CPU backends (this container) and False
+on real TPU — resolved once at import.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as _attention
+from repro.kernels import bitserial as _bitserial
+from repro.kernels import int8_matmul as _int8_matmul
+from repro.kernels import mws as _mws
+from repro.kernels import search as _search
+from repro.kernels import shift_add as _shift_add
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult_rows, mult_cols):
+    r, c = x.shape[-2:]
+    pr = (-r) % mult_rows
+    pc = (-c) % mult_cols
+    if pr or pc:
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+        x = jnp.pad(x, pad)
+    return x, r, c
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def mws_bitwise(stack: jnp.ndarray, op: str = "and") -> jnp.ndarray:
+    """Bulk bitwise reduce of stacked pages (Flash-Cosmos MWS)."""
+    assert stack.ndim == 3, "expected [n_ops, rows, cols]"
+    assert jnp.issubdtype(stack.dtype, jnp.integer)
+    padded, r, c = _pad_to(stack, 8, 128)
+    out = _mws.mws_bitwise(padded, op=op, interpret=INTERPRET)
+    return out[:r, :c]
+
+
+@jax.jit
+def bitserial_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    assert a.shape == b.shape and a.dtype == b.dtype
+    pa, r, c = _pad_to(a, 8, 128)
+    pb, _, _ = _pad_to(b, 8, 128)
+    return _bitserial.bitserial_add(pa, pb, interpret=INTERPRET)[:r, :c]
+
+
+@jax.jit
+def bitserial_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    assert a.shape == b.shape and a.dtype == b.dtype
+    pa, r, c = _pad_to(a, 8, 128)
+    pb, _, _ = _pad_to(b, 8, 128)
+    return _bitserial.bitserial_mul(pa, pb, interpret=INTERPRET)[:r, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def shift_add_mul(a: jnp.ndarray, b: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    assert a.shape == b.shape and a.dtype == b.dtype
+    pa, r, c = _pad_to(a, 8, 128)
+    pb, _, _ = _pad_to(b, 8, 128)
+    return _shift_add.shift_add_mul(pa, pb, bits=bits,
+                                    interpret=INTERPRET)[:r, :c]
+
+
+@jax.jit
+def int8_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    m, k = a.shape
+    k2, n = b.shape
+    bm = min(128, m) if m % 128 else 128
+    bn = min(128, n) if n % 128 else 128
+    bk = min(128, k) if k % 128 else 128
+    # fall back to largest dividing power-of-two block
+    def blk(dim, pref):
+        b = min(pref, dim)
+        while dim % b:
+            b //= 2
+        return max(1, b)
+    return _int8_matmul.int8_matmul(
+        a, b, block_m=blk(m, 128), block_n=blk(n, 128), block_k=blk(k, 128),
+        interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True) -> jnp.ndarray:
+    def blk(dim, pref):
+        b = min(pref, dim)
+        while dim % b:
+            b //= 2
+        return max(1, b)
+    return _attention.flash_attention(
+        q, k, v, causal=causal,
+        block_q=blk(q.shape[1], 128), block_k=blk(k.shape[1], 128),
+        interpret=INTERPRET)
+
+
+@jax.jit
+def search_pages(stack: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """In-flash exact-match search (§7 extensibility kernel)."""
+    assert stack.ndim == 2 and query.ndim == 1
+    padded, r, c = _pad_to(stack, 8, stack.shape[1])
+    return _search.search_pages(padded, query, interpret=INTERPRET)[:r]

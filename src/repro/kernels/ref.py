@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``ref_*`` implements the mathematical specification with plain jnp ops;
+tests sweep shapes/dtypes and assert the Pallas kernels (interpret mode on
+CPU, compiled on TPU) match bit-exactly for integer kernels and to fp
+tolerance for the attention kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_mws(stack: jnp.ndarray, op: str) -> jnp.ndarray:
+    """Multi-wordline-sensing bulk bitwise reduce over operand axis 0.
+
+    Flash-Cosmos semantics: one simultaneous multi-wordline sense computes
+    the AND (wired-AND of series-connected cells) / OR (across blocks) of up
+    to 48 stacked pages in a single array operation.
+    """
+    if op == "and":
+        return jax.lax.reduce(stack, jnp.array(-1, stack.dtype),
+                              jnp.bitwise_and, (0,))
+    if op == "or":
+        return jax.lax.reduce(stack, jnp.array(0, stack.dtype),
+                              jnp.bitwise_or, (0,))
+    if op == "xor":
+        return jax.lax.reduce(stack, jnp.array(0, stack.dtype),
+                              jnp.bitwise_xor, (0,))
+    if op == "nand":
+        return ~ref_mws(stack, "and")
+    if op == "nor":
+        return ~ref_mws(stack, "or")
+    raise ValueError(op)
+
+
+def ref_bitserial_add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bit-serial ripple add (SIMDRAM MAJ/XOR circuit) == integer add."""
+    return a + b
+
+
+def ref_bitserial_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bit-serial shift-add multiply == integer multiply (wrapping)."""
+    return a * b
+
+
+def ref_shift_add_mul(a: jnp.ndarray, b: jnp.ndarray,
+                      bits: int = 8) -> jnp.ndarray:
+    """Ares-Flash shift-and-add over the low ``bits`` of b (unsigned)."""
+    mask = (1 << bits) - 1
+    return a * (b & mask)
+
+
+def ref_int8_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """INT8 x INT8 -> INT32 matmul (the quantized-workload GEMM, §5.4)."""
+    return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, scale: float | None = None
+                  ) -> jnp.ndarray:
+    """Standard softmax attention, [heads, seq, dh] layout."""
+    h, sq, d = q.shape
+    sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = np.tril(np.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_search(stack: jnp.ndarray, query: jnp.ndarray) -> jnp.ndarray:
+    """Exact-match search oracle: record r of page p matches iff all its
+    words equal the query words."""
+    rows, words = stack.shape
+    wpr = query.shape[0]
+    recv = stack.reshape(rows, words // wpr, wpr)
+    return jnp.all(recv == query[None, None, :], axis=-1)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16x16 = 256 chips, (data, model).  Multi-pod:
+2 pods x 256 = 512 chips, (pod, data, model) — the "pod" axis carries
+data-parallel gradient reduction over the inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> tuple:
+    """(data_axes, model_axis) for a mesh built by make_production_mesh."""
+    names = mesh.axis_names
+    model = "model" if "model" in names else None
+    data = tuple(a for a in names if a in ("pod", "data"))
+    return data, model
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

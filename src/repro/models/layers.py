@@ -1,0 +1,524 @@
+"""Transformer building blocks shared by the 10 architectures.
+
+Everything is a pure function over a params dict so layer stacks can be
+``jax.lax.scan``-ed over stacked parameters (O(1) HLO size in depth) and
+``jax.checkpoint``-ed for remat.  Sharding is expressed with
+``with_sharding_constraint`` hints on the canonical axes:
+
+  batch/tokens -> ("pod","data")     heads / ffn / experts -> "model"
+
+GSPMD propagates the rest and inserts the collectives the roofline
+analysis measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+Params = Dict[str, Any]
+
+# Mesh axis names used by the sharding hints; the launcher rebinds these to
+# the active mesh (("pod","data") on the multi-pod mesh, ("data",) on the
+# single-pod mesh, () when running unsharded smoke tests on CPU).
+_MESH_AXES = {"data": (), "model": None}
+
+
+def set_mesh_axes(data_axes: Tuple[str, ...], model_axis: Optional[str]):
+    _MESH_AXES["data"] = tuple(data_axes)
+    _MESH_AXES["model"] = model_axis
+
+
+def data_axes() -> Tuple[str, ...]:
+    return _MESH_AXES["data"]
+
+
+def model_axis() -> Optional[str]:
+    return _MESH_AXES["model"]
+
+
+def _maybe_shard(x, spec):
+    """Sharding hint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, KeyError, TypeError):
+        return x
+
+
+def shard_tokens(x):
+    da = data_axes()
+    if not da:
+        return x
+    if x.ndim >= 3 and model_axis():
+        # activation sharding: batch over data axes, features over model
+        return _maybe_shard(x, P(da, *([None] * (x.ndim - 2)), model_axis()))
+    if x.ndim >= 2:
+        return _maybe_shard(x, P(da, *([None] * (x.ndim - 1))))
+    return x
+
+
+def shard_model_last(x):
+    da = data_axes()
+    if not da or not model_axis():
+        return x
+    return _maybe_shard(x, P(da, *([None] * (x.ndim - 2)), model_axis()))
+
+
+# -- init ---------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-5):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x [..., S, H, dh]; positions [..., S] (int)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta=10_000.0, sections=(2, 1, 1)):
+    """Qwen2-VL multimodal RoPE: the rotary dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x [B, S, H, dh]; positions3 [3, B, S].
+    """
+    dh = x.shape[-1]
+    total = sum(sections)
+    cuts = [dh * s // total for s in sections]
+    cuts[-1] = dh - sum(cuts[:-1])
+    outs = []
+    off = 0
+    for sec, width in enumerate(cuts):
+        seg = x[..., off:off + width]
+        outs.append(apply_rope(seg, positions3[sec], theta))
+        off += width
+    return jnp.concatenate(outs, axis=-1)
+
+
+# -- attention ----------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+SDPA_CHUNK = 512   # q-block size for chunked attention (long sequences)
+
+
+def _sdpa_block(q, k, v, causal: bool, q_offset):
+    # perf iteration T2: bf16 contraction with fp32 accumulation — operand
+    # astype(f32) would materialize q/k/v at double width.
+    dh = q.shape[-1]
+    scale = 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        logits = jnp.where((qpos >= kpos)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0):
+    """q [B,Sq,H,dh], k/v [B,Sk,H,dh] -> [B,Sq,H,dh]; fp32 softmax.
+
+    Long sequences are processed in q-row blocks (scan) so the [Sq, Sk]
+    score matrix never materializes — O(Sq/C) blocks of [B,H,C,Sk].  (On
+    real TPU the repro.kernels.attention Pallas kernel replaces this path;
+    the chunked form keeps the CPU dry-run/interpret path identical in
+    FLOPs and memory-bounded.)
+    """
+    b, sq, h, dh = q.shape
+    if sq <= SDPA_CHUNK or sq % SDPA_CHUNK != 0:
+        return _sdpa_block(q, k, v, causal, q_offset)
+    nblk = sq // SDPA_CHUNK
+    qb = q.reshape(b, nblk, SDPA_CHUNK, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def blk(carry, inp):
+        i, qq = inp
+        out = _sdpa_block(qq, k, v, causal, q_offset + i * SDPA_CHUNK)
+        return carry, out
+
+    _, outs = jax.lax.scan(blk, (), (jnp.arange(nblk), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def gqa_attention(p: Params, cfg: ArchConfig, x, positions,
+                  cache: Optional[Dict] = None, pos3=None,
+                  causal: bool = True,
+                  kv_source: Optional[jnp.ndarray] = None,
+                  kv_positions=None):
+    """GQA self-attention (or cross-attention when kv_source is given).
+
+    ``cache``: {"k","v" [B,Smax,Hkv,dh], "index" scalar} — decode appends
+    the new token at ``index`` and attends over the valid prefix.
+    """
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    src = kv_source if kv_source is not None else x
+    sk = src.shape[1]
+    k = (src @ p["wk"]).reshape(b, sk, cfg.n_kv_heads, dh)
+    v = (src @ p["wv"]).reshape(b, sk, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if kv_source is None:             # self-attention: rotary on q and k
+        if cfg.mrope and pos3 is not None:
+            q = apply_mrope(q, pos3, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_model_last(q.reshape(b, s, -1)).reshape(b, s, cfg.n_heads, dh)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if cache is not None:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "index": idx + s}
+        # GQA without materializing repeated K/V (perf iteration D1,
+        # EXPERIMENTS.md §Perf): fold the group dim into q instead of
+        # jnp.repeat-ing the cache n_rep times — the cache is read once.
+        qg = q.reshape(b, s, cfg.n_kv_heads, n_rep, dh)
+        smax = ck.shape[1]
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (s, smax), 1)
+        qpos = idx + jax.lax.broadcasted_iota(jnp.int32, (s, smax), 0)
+        mask = kpos <= qpos          # causal over the filled prefix
+        # perf iteration D3: contract the cache in bf16 with fp32
+        # accumulation — upcasting ck/cv with astype would materialize the
+        # whole KV cache in fp32 (2x its bytes) before the einsum.
+        logits = jnp.einsum("bqhrd,bkhd->bhrqk", qg, ck,
+                            preferred_element_type=jnp.float32) / np.sqrt(dh)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(x.dtype), cv,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, s, cfg.n_heads, dh).astype(x.dtype)
+    else:
+        kk = _repeat_kv(k, n_rep)
+        vv = _repeat_kv(v, n_rep)
+        out = _sdpa(q, kk, vv, causal=causal and kv_source is None)
+        new_cache = None
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return out @ p["wo"], new_cache
+
+
+# -- MLA (DeepSeek-V2 multi-head latent attention) ----------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, dh, r = cfg.d_model, cfg.head_dim, cfg.kv_lora_rank
+    rd = cfg.rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        # compressed KV path: d -> r (+ decoupled rope key)
+        "w_dkv": dense_init(ks[0], d, r + rd, dtype),
+        "kv_norm": rmsnorm_init(r, dtype),
+        "w_uk": dense_init(ks[1], r, cfg.n_heads * dh, dtype),
+        "w_uv": dense_init(ks[2], r, cfg.n_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["w_uq"] = dense_init(ks[5], cfg.q_lora_rank,
+                               cfg.n_heads * (dh + rd), dtype)
+    else:
+        p["w_q"] = dense_init(ks[5], d, cfg.n_heads * (dh + rd), dtype)
+    return p
+
+
+def mla_attention(p: Params, cfg: ArchConfig, x, positions,
+                  cache: Optional[Dict] = None):
+    """Multi-head latent attention: KV compressed to ``kv_lora_rank`` (the
+    cache stores only the r+rope_dim latent — the paper's 93% KV memory
+    saving) and up-projected per head at attention time."""
+    b, s, d = x.shape
+    dh, r, rd = cfg.head_dim, cfg.kv_lora_rank, cfg.rope_head_dim
+    h = cfg.n_heads
+
+    if cfg.q_lora_rank:
+        q = rmsnorm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps) @ p["w_uq"]
+    else:
+        q = x @ p["w_q"]
+    q = q.reshape(b, s, h, dh + rd)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]                       # [b, s, r+rd]
+    latent, k_rope = dkv[..., :r], dkv[..., r:]
+    latent = rmsnorm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is not None:
+        idx = cache["index"]
+        cl = jax.lax.dynamic_update_slice(cache["latent"], latent, (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                          k_rope[:, :, 0, :], (0, idx, 0))
+        new_cache = {"latent": cl, "k_rope": cr, "index": idx + s}
+        latent_all, k_rope_all = cl, cr[:, :, None, :]
+        q_base = idx
+    else:
+        new_cache = None
+        latent_all, k_rope_all = latent, k_rope
+        q_base = None
+
+    k_nope = (latent_all @ p["w_uk"]).reshape(b, -1, h, dh)
+    v = (latent_all @ p["w_uv"]).reshape(b, -1, h, dh)
+    sk = k_nope.shape[1]
+    scale = 1.0 / np.sqrt(dh + rd)
+    k_rope_flat = k_rope_all[:, :, 0, :]
+
+    def block(qn, qr, offset):
+        lg = (jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope_flat,
+                           preferred_element_type=jnp.float32)) * scale
+        sq = qn.shape[1]
+        base = offset if cache is None else q_base + offset
+        qpos = base + jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        lg = jnp.where((qpos >= kpos)[None, None], lg, -1e30)
+        probs = jax.nn.softmax(lg, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(x.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    if s > SDPA_CHUNK and s % SDPA_CHUNK == 0 and cache is None:
+        nblk = s // SDPA_CHUNK
+        qn_b = q_nope.reshape(b, nblk, SDPA_CHUNK, h, dh
+                              ).transpose(1, 0, 2, 3, 4)
+        qr_b = q_rope.reshape(b, nblk, SDPA_CHUNK, h, rd
+                              ).transpose(1, 0, 2, 3, 4)
+
+        def scan_blk(_, inp):
+            i, qn, qr = inp
+            return (), block(qn, qr, i * SDPA_CHUNK)
+        _, outs = jax.lax.scan(scan_blk, (),
+                               (jnp.arange(nblk), qn_b, qr_b))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    else:
+        out = block(q_nope, q_rope, 0)
+    out = out.astype(x.dtype).reshape(b, s, h * dh)
+    return out @ p["wo"], new_cache
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"w1": dense_init(ks[0], d, d_ff, dtype),
+            "w3": dense_init(ks[1], d, d_ff, dtype),
+            "w2": dense_init(ks[2], d_ff, d, dtype)}
+
+
+def mlp_apply(p: Params, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = shard_model_last(h)
+    return h @ p["w2"]
+
+
+# -- MoE ----------------------------------------------------------------------
+
+def moe_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    e = cfg.n_experts
+
+    def expert(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"w1": dense_init(k1, d, ff, dtype),
+                "w3": dense_init(k2, d, ff, dtype),
+                "w2": dense_init(k3, ff, d, dtype)}
+
+    p = {
+        "router": dense_init(ks[0], d, e, dtype, scale=0.02),
+        "experts": jax.vmap(expert)(jax.random.split(ks[1], e)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[2], d, ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _moe_dispatch_local(cfg: ArchConfig, capacity_factor: float,
+                        model_ax: str):
+    """Per-device MoE dispatch body for shard_map (perf iteration T1).
+
+    Each (data, model) device holds its data-shard's tokens (replicated
+    along the model axis) and E/model_size experts: the token->expert
+    assignment is computed locally, expert GEMMs run on local buffers, and
+    one psum over the model axis combines contributions — replacing the
+    GSPMD-replicated scatter/gather (which all-gathered the full [T*k, D]
+    dispatch tensor per layer) with a single [T_local, D] reduction.
+    """
+    e_total = cfg.n_experts
+    k = cfg.experts_per_tok
+
+    def body(xf, top_idx, probs, w1, w3, w2):
+        e_loc = w1.shape[0]
+        t_loc, d = xf.shape
+        ax = jax.lax.axis_index(model_ax)
+        e_start = ax * e_loc
+        cap = max(8, int(capacity_factor * t_loc * k / e_total))
+        flat_e = top_idx.reshape(-1) - e_start
+        mine = (flat_e >= 0) & (flat_e < e_loc)
+        fe = jnp.where(mine, flat_e, 0)
+        onehot = jax.nn.one_hot(fe, e_loc, dtype=jnp.int32) * mine[:, None]
+        incl = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+        slot = jnp.take_along_axis(incl - onehot, fe[:, None], axis=1)[:, 0]
+        keep = mine & (slot < cap)
+        slot = jnp.where(keep, slot, cap - 1)
+        x_rep = jnp.broadcast_to(xf[:, None, :], (t_loc, k, d)
+                                 ).reshape(t_loc * k, d)
+        buf = jnp.zeros((e_loc, cap, d), xf.dtype)
+        buf = buf.at[fe, slot].add(jnp.where(keep[:, None], x_rep, 0))
+        h = jnp.einsum("ecd,edf->ecf", buf, w1)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+        out_e = jnp.einsum("ecf,efd->ecd", h, w2)
+        y = out_e[fe, slot] * jnp.where(keep[:, None], 1, 0)
+        y = (y.reshape(t_loc, k, d)
+             * probs.reshape(t_loc, k)[..., None].astype(y.dtype)).sum(1)
+        return jax.lax.psum(y, model_ax)
+
+    return body
+
+
+def _moe_routed_sharded(p, cfg, xf, top_idx, probs,
+                        capacity_factor) -> Optional[jnp.ndarray]:
+    """shard_map expert-parallel path; None if inapplicable (no mesh /
+    non-divisible experts) — caller falls back to the dense path."""
+    model_ax = model_axis()
+    da = data_axes()
+    if not model_ax or not da:
+        return None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or model_ax not in mesh.shape:
+            return None
+        msize = mesh.shape[model_ax]
+        dsize = 1
+        for a in da:
+            dsize *= mesh.shape[a]
+    except Exception:
+        return None
+    if cfg.n_experts % msize or xf.shape[0] % max(1, dsize):
+        return None
+    from jax.experimental.shard_map import shard_map
+    body = _moe_dispatch_local(cfg, capacity_factor, model_ax)
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(da, None), P(da, None), P(da, None),
+                  P(model_ax, None, None), P(model_ax, None, None),
+                  P(model_ax, None, None)),
+        out_specs=P(da, None))
+    return f(xf, top_idx, probs, p["experts"]["w1"], p["experts"]["w3"],
+             p["experts"]["w2"])
+
+
+def moe_apply(p: Params, cfg: ArchConfig, x, capacity_factor: float = 1.25):
+    """Top-k token-choice MoE with capacity-bounded dispatch.
+
+    Routing (router GEMM + top-k) runs data-parallel; the routed-expert
+    compute uses the shard_map expert-parallel path when a mesh is active
+    (see ``_moe_dispatch_local``), else a dense scatter/gather fallback
+    (single-device smoke tests).
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_tok
+    e = cfg.n_experts
+    xf = x.reshape(t, d)
+
+    gates = (xf @ p["router"]).astype(jnp.float32)          # [T, E]
+    top_vals, top_idx = jax.lax.top_k(gates, k)             # [T, k]
+    probs = jax.nn.softmax(top_vals, axis=-1).astype(x.dtype)
+
+    y = _moe_routed_sharded(p, cfg, xf, top_idx, probs, capacity_factor)
+    if y is not None:
+        if cfg.n_shared_experts:
+            y = y + mlp_apply(p["shared"], xf)
+        return y.reshape(b, s, d)
+
+    # tiny batches (CPU tests/examples) run drop-free so prefill+decode and
+    # full-forward routing agree exactly; at scale the standard capacity
+    # bound applies
+    cap = t * k if t * k <= 1024 else max(8, int(capacity_factor * t * k / e))
+    flat_e = top_idx.reshape(-1)                            # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    # log-depth prefix sum (associative_scan) — a plain cumsum lowers to a
+    # quadratic reduce-window on some backends
+    incl = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+    slot = jnp.take_along_axis(incl - onehot,
+                               flat_e[:, None], axis=1)[:, 0]   # [T*k]
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap - 1)
+
+    x_rep = jnp.broadcast_to(xf[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, slot].add(jnp.where(keep[:, None], x_rep, 0))
+    if model_axis():
+        buf = _maybe_shard(buf, P(model_axis(), data_axes() or None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w1"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w3"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w2"])
+
+    y = out_e[flat_e, slot] * jnp.where(keep[:, None], 1, 0)
+    y = (y.reshape(t, k, d) * probs[..., None]).sum(axis=1)
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xf)
+    return y.reshape(b, s, d)

@@ -1,0 +1,336 @@
+"""Model assembly: any ArchConfig -> init / loss / prefill / decode.
+
+Layers with identical block kinds are grouped into *segments*; each segment
+stacks its parameters along a leading layer axis and executes under
+``jax.lax.scan`` — HLO size is O(#segments), not O(depth), which keeps the
+236B-parameter dry-run compiles fast.  Heterogeneous patterns (zamba2's
+mamba blocks + shared attention, xLSTM's mlstm/slstm alternation) become
+short segment lists.  ``jax.checkpoint`` wraps the block body when
+``cfg.remat`` (activation rematerialization for training).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# -- pattern segmentation ------------------------------------------------------
+
+def segments_of(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    segs: List[Tuple[str, int]] = []
+    for kind in cfg.pattern:
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+# -- per-block init -------------------------------------------------------------
+
+def _attn_init(key, cfg, dtype):
+    if cfg.mla:
+        return L.mla_init(key, cfg, dtype)
+    return L.gqa_init(key, cfg, dtype)
+
+
+def _block_init(kind: str, key, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+                "attn": _attn_init(ks[0], cfg, dtype),
+                "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+                "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+    if kind == "moe":
+        return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+                "attn": _attn_init(ks[0], cfg, dtype),
+                "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+                "moe": L.moe_init(ks[1], cfg, dtype)}
+    if kind == "xdec":   # encoder-decoder decoder block (self + cross + mlp)
+        return {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+                "attn": L.gqa_init(ks[0], cfg, dtype),
+                "lnx": L.rmsnorm_init(cfg.d_model, dtype),
+                "xattn": L.gqa_init(ks[1], cfg, dtype),
+                "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+                "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)}
+    if kind == "mamba":
+        return S.mamba_init(key, cfg, dtype)
+    if kind == "mlstm":
+        return S.mlstm_init(key, cfg, dtype)
+    if kind == "slstm":
+        return S.slstm_init(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "emb": L.dense_init(keys[0], cfg.vocab, cfg.d_model, dtype, scale=0.02),
+        "ln_f": L.rmsnorm_init(cfg.d_model, dtype),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        p["unemb"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    seg_keys = jax.random.split(keys[2], max(1, len(segments_of(cfg))))
+    for (kind, count), sk in zip(segments_of(cfg), seg_keys):
+        if kind == "sattn":   # shared block: parameters stored once
+            p["segments"].append(None)
+            continue
+        stacked = jax.vmap(
+            lambda k: _block_init(kind, k, cfg, dtype))(
+                jax.random.split(sk, count))
+        p["segments"].append(stacked)
+    if cfg.shared_attn_every:
+        p["shared_attn"] = _block_init("attn", keys[3], cfg, dtype)
+    if cfg.enc_layers:
+        enc = jax.vmap(
+            lambda k: _block_init("attn", k, cfg, dtype))(
+                jax.random.split(keys[4], cfg.enc_layers))
+        p["encoder"] = enc
+    return p
+
+
+# -- per-block apply -------------------------------------------------------------
+
+def _attention(p, cfg, x, positions, cache, pos3):
+    if cfg.mla:
+        return L.mla_attention(p, cfg, x, positions, cache)
+    return L.gqa_attention(p, cfg, x, positions, cache, pos3=pos3)
+
+
+def block_apply(kind: str, cfg: ArchConfig, p: Params, x, positions,
+                cache=None, pos3=None, enc_out=None):
+    """Returns (x, new_cache)."""
+    if kind in ("attn", "moe", "xdec"):
+        h, new_cache = _attention(p["attn"], cfg,
+                                  L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                  positions, cache, pos3)
+        x = x + h
+        if kind == "xdec" and enc_out is not None:
+            h, _ = L.gqa_attention(p["xattn"], cfg,
+                                   L.rmsnorm(x, p["lnx"], cfg.norm_eps),
+                                   positions, None, kv_source=enc_out)
+            x = x + h
+        xin = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            x = x + L.moe_apply(p["moe"], cfg, xin)
+        else:
+            x = x + L.mlp_apply(p["mlp"], xin)
+        return x, new_cache
+    if kind == "mamba":
+        return S.mamba_apply(p, cfg, x, cache)
+    if kind == "mlstm":
+        return S.mlstm_apply(p, cfg, x, cache)
+    if kind == "slstm":
+        return S.slstm_apply(p, cfg, x, cache)
+    raise ValueError(kind)
+
+
+# -- caches / states ---------------------------------------------------------
+
+def _block_cache(kind: str, cfg: ArchConfig, batch: int, max_seq: int):
+    dtype = jnp.dtype(cfg.dtype)
+    if kind in ("attn", "moe", "xdec"):
+        if cfg.mla:
+            return {"latent": jnp.zeros((batch, max_seq, cfg.kv_lora_rank),
+                                        dtype),
+                    "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim),
+                                        dtype)}
+        return {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                               dtype)}
+    if kind == "mamba":
+        return S.mamba_state(cfg, batch)
+    if kind == "mlstm":
+        return S.mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return S.slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> List[Any]:
+    caches = []
+    for kind, count in segments_of(cfg):
+        one = _block_cache("attn" if kind == "sattn" else kind,
+                           cfg, batch, max_seq)
+        caches.append(jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one))
+    return caches
+
+
+# -- forward -------------------------------------------------------------------
+
+def _with_index(cache, idx):
+    if cache is None:
+        return None
+    if "k" in cache or "latent" in cache:
+        return dict(cache, index=idx)
+    return cache
+
+
+def _strip_index(cache):
+    if cache is None:
+        return None
+    return {k: v for k, v in cache.items() if k != "index"}
+
+
+def forward(cfg: ArchConfig, params: Params, x, positions,
+            caches: Optional[List] = None, index=None, pos3=None,
+            enc_out=None):
+    """Backbone forward. ``x`` [B,S,D] embeddings; returns (h, new_caches)."""
+    new_caches: List[Any] = []
+    shared_count = 0
+    for si, (seg_params, (kind, count)) in enumerate(
+            zip(params["segments"], segments_of(cfg))):
+        seg_cache = caches[si] if caches is not None else None
+
+        if kind == "sattn":
+            cache_in = None
+            if seg_cache is not None:
+                cache_in = _with_index(jax.tree_util.tree_map(
+                    lambda a: a[0], seg_cache), index)
+            x, nc = block_apply("attn", cfg, params["shared_attn"], x,
+                                positions, cache_in, pos3, enc_out)
+            if seg_cache is not None:
+                nc = _strip_index(nc)
+                new_caches.append(jax.tree_util.tree_map(
+                    lambda a: a[None], nc))
+            else:
+                new_caches.append(None)
+            shared_count += 1
+            continue
+
+        body_kind = kind
+
+        if seg_cache is None:
+            def run_block(p_l, xh):
+                out, _ = block_apply(body_kind, cfg, p_l, xh, positions,
+                                     None, pos3, enc_out)
+                return out
+            if cfg.remat:
+                run_block = jax.checkpoint(run_block)
+            x, _ = jax.lax.scan(
+                lambda c, p_l: (run_block(p_l, c), None), x, seg_params)
+            new_caches.append(None)
+        else:
+            def body(carry, xs):
+                p_l, c_l = xs
+                out, nc = block_apply(body_kind, cfg, p_l, carry, positions,
+                                      _with_index(c_l, index), pos3, enc_out)
+                return out, _strip_index(nc)
+            x, ncs = jax.lax.scan(body, x, (seg_params, seg_cache))
+            new_caches.append(ncs)
+    return x, new_caches
+
+
+def encode(cfg: ArchConfig, params: Params, feats, positions):
+    """Bidirectional encoder over (stubbed) frontend features [B,S,D]."""
+    def body(x, p_l):
+        h, _ = L.gqa_attention(p_l["attn"], cfg,
+                               L.rmsnorm(x, p_l["ln1"], cfg.norm_eps),
+                               positions, None, causal=False)
+        x = x + h
+        x = x + L.mlp_apply(p_l["mlp"],
+                            L.rmsnorm(x, p_l["ln2"], cfg.norm_eps))
+        return x, None
+    out, _ = jax.lax.scan(body, feats, params["encoder"])
+    return out
+
+
+def embed(cfg: ArchConfig, params: Params, tokens):
+    return jnp.take(params["emb"], tokens, axis=0)
+
+
+def logits_of(cfg: ArchConfig, params: Params, h, pad_vocab: bool = False):
+    """Final projection.  ``pad_vocab`` (perf iteration M2): odd vocabularies
+    (e.g. minicpm's 122753) cannot shard over a 16-way model axis, leaving
+    the [B,S,V] fp32 logits replicated along it; padding the output dim to a
+    512-multiple makes the largest activation of the training step
+    model-shardable.  Padded columns are -inf so logsumexp is unchanged."""
+    h = L.rmsnorm(h, params["ln_f"], cfg.norm_eps)
+    unemb = params["emb"].T if cfg.tie_embeddings else params["unemb"]
+    pad = (-cfg.vocab) % 512 if pad_vocab else 0
+    if pad:
+        unemb = jnp.pad(unemb, ((0, 0), (0, pad)))
+    logits = h @ unemb
+    if pad:
+        neg = jnp.full((pad,), -1e30, logits.dtype)
+        logits = logits.at[..., cfg.vocab:].set(neg)
+    return logits
+
+
+# -- task-level functions --------------------------------------------------------
+
+def lm_loss(cfg: ArchConfig, params: Params, tokens, labels,
+            extra_embeds=None, pos3=None, enc_feats=None):
+    """Causal-LM cross entropy.  ``extra_embeds`` (VLM patch stubs) are
+    prepended; ``enc_feats`` (audio stubs) drive the encoder of enc-dec
+    architectures."""
+    x = embed(cfg, params, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = L.shard_tokens(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc_out = None
+    if cfg.enc_layers and enc_feats is not None:
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_feats.shape[1]),
+                                   enc_feats.shape[:2])
+        enc_out = encode(cfg, params, enc_feats.astype(x.dtype), enc_pos)
+    h, _ = forward(cfg, params, x, positions, pos3=pos3, enc_out=enc_out)
+    logits = logits_of(cfg, params, h, pad_vocab=bool(L.model_axis()))
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    # logits shard vocab over the model axis (the [B,S,V] fp32 tensor is by
+    # far the largest activation; see EXPERIMENTS.md §Perf)
+    logits = L.shard_tokens(logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens, caches,
+            extra_embeds=None, pos3=None, enc_feats=None):
+    """Run the prompt through the model, filling caches; returns
+    (last-token logits, caches)."""
+    x = embed(cfg, params, tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = L.shard_tokens(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc_out = None
+    if cfg.enc_layers and enc_feats is not None:
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_feats.shape[1]),
+                                   enc_feats.shape[:2])
+        enc_out = encode(cfg, params, enc_feats.astype(x.dtype), enc_pos)
+    h, caches = forward(cfg, params, x, positions, caches=caches, index=0,
+                        pos3=pos3, enc_out=enc_out)
+    return logits_of(cfg, params, h[:, -1:]), caches
+
+
+def decode_step(cfg: ArchConfig, params: Params, token, index, caches,
+                enc_out=None):
+    """One decode step: ``token`` [B] at position ``index`` (scalar)."""
+    x = embed(cfg, params, token[:, None])
+    b = x.shape[0]
+    positions = jnp.full((b, 1), index, jnp.int32)
+    pos3 = (jnp.broadcast_to(positions, (3, b, 1))
+            if cfg.mrope else None)
+    h, caches = forward(cfg, params, x, positions, caches=caches,
+                        index=index, pos3=pos3, enc_out=enc_out)
+    return logits_of(cfg, params, h)[:, 0], caches

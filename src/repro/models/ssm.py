@@ -1,0 +1,222 @@
+"""Sub-quadratic sequence blocks: Mamba2 (zamba2) and xLSTM (sLSTM/mLSTM).
+
+These blocks carry O(1)-per-token recurrent state, which is what makes the
+``long_500k`` decode shape feasible: one decode step updates the state in
+place instead of attending over a 524k-token cache.
+
+The implementations are compact but real: Mamba2's selective state-space
+recurrence with input-dependent (Δ, B, C) and a short causal conv; xLSTM's
+exponentially-gated scalar (sLSTM) and matrix (mLSTM) memories per head.
+Sequence processing uses ``jax.lax.scan`` over time (TPU-friendly: the
+per-step body is dense einsums on the VPU/MXU).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+# -- Mamba2 -------------------------------------------------------------------
+
+def mamba_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),        # -> (u, z)
+        "w_bc": dense_init(ks[1], d, 2 * n, dtype),         # -> (B, C)
+        "w_dt": dense_init(ks[2], d, di, dtype, scale=0.01),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_kernel, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "a_log": jnp.zeros((di,), jnp.float32),             # A = -exp(a_log)
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[4], di, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def _causal_conv(u, w, state: Optional[jnp.ndarray] = None):
+    """u [B,S,di], w [K,di]; returns conv + final (K-1)-tap state."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    padded = jnp.concatenate([state, u], axis=1)
+    out = sum(padded[:, i:i + u.shape[1], :] * w[i] for i in range(k))
+    new_state = padded[:, -(k - 1):, :] if k > 1 else state
+    return out, new_state
+
+
+def mamba_apply(p: Params, cfg: ArchConfig, x,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Selective SSM.  state = {"h" [B,di,N], "conv" [B,K-1,di]}."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    uz = xn @ p["w_in"]
+    u, z = uz[..., :di], uz[..., di:]
+    bc = xn @ p["w_bc"]
+    bmat, cmat = bc[..., :n], bc[..., n:]                    # [B,S,N]
+    dt = jax.nn.softplus((xn @ p["w_dt"]).astype(jnp.float32))  # [B,S,di]
+    u, conv_state = _causal_conv(u, p["conv_w"],
+                                 state["conv"] if state else None)
+    u = jax.nn.silu(u)
+    a = -jnp.exp(p["a_log"])                                 # [di]
+
+    h0 = (state["h"] if state else
+          jnp.zeros((b, di, n), jnp.float32))
+
+    def step(h, inp):
+        u_t, b_t, c_t, dt_t = inp                            # [B,di],[B,N],[B,N],[B,di]
+        decay = jnp.exp(dt_t * a)                            # [B,di]
+        h = h * decay[..., None] + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = (h * c_t[:, None, :]).sum(-1)                    # [B,di]
+        return h, y
+
+    xs = (u.transpose(1, 0, 2).astype(jnp.float32),
+          bmat.transpose(1, 0, 2).astype(jnp.float32),
+          cmat.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)                # [B,S,di]
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return x + out, {"h": h_final, "conv": conv_state}
+
+
+def mamba_state(cfg: ArchConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di),
+                              jnp.dtype(cfg.dtype))}
+
+
+# -- xLSTM --------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "w_if": dense_init(ks[3], d, 2 * h, dtype, scale=0.02),
+        "wo": dense_init(ks[4], d, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+        "out_norm": rmsnorm_init(dh, dtype),
+    }
+
+
+def mlstm_apply(p: Params, cfg: ArchConfig, x,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Matrix-memory LSTM: C_t = f C + i v k^T;  y = C q / max(|n.q|, 1).
+
+    state = {"c" [B,H,dh,dh], "n" [B,H,dh], "m" [B,H]} (m = log-stabilizer).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (xn @ p["wk"]).reshape(b, s, h, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (xn @ p["wv"]).reshape(b, s, h, dh).astype(jnp.float32)
+    gi, gf = jnp.split((xn @ p["w_if"]).astype(jnp.float32), 2, -1)  # [B,S,H]
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        c0, n0, m0 = state["c"], state["n"], state["m"]
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp
+        logf = -jax.nn.softplus(-f_t)                        # log sigmoid(f)
+        m_new = jnp.maximum(logf + m, i_t)
+        fgate = jnp.exp(logf + m - m_new)                    # [B,H]
+        igate = jnp.exp(i_t - m_new)
+        c = c * fgate[..., None, None] + \
+            igate[..., None, None] * (v_t[..., :, None] * k_t[..., None, :])
+        n = n * fgate[..., None] + igate[..., None] * k_t
+        denom = jnp.maximum(jnp.abs((n * q_t).sum(-1)), 1.0)  # [B,H]
+        y = (c * q_t[..., None, :]).sum(-1) / denom[..., None]
+        return (c, n, m_new), y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+               for a in (q, k, v, gi, gf))
+    (cF, nF, mF), ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3)                             # [B,S,H,dh]
+    y = rmsnorm(y.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    out = y.reshape(b, s, d) @ p["wo"]
+    return x + out, {"c": cF, "n": nF, "m": mF}
+
+
+def mlstm_state(cfg: ArchConfig, batch: int):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {"c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def slstm_init(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),       # i, f, z, o
+        "r_gates": dense_init(ks[1], d, 4 * d, dtype, scale=0.02),
+        "wo": dense_init(ks[2], d, d, dtype),
+        "norm": rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_apply(p: Params, cfg: ArchConfig, x,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Scalar-memory LSTM with exponential gating and recurrent connection.
+
+    state = {"c","n","hid" [B,D], "m" [B,D]}.
+    """
+    b, s, d = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    wx = (xn @ p["w_gates"]).astype(jnp.float32)             # [B,S,4D]
+
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        st = (z, z, z, z)
+    else:
+        st = (state["c"], state["n"], state["hid"], state["m"])
+
+    r_gates = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, hid, m = carry
+        g = wx_t + hid @ r_gates
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        logf = -jax.nn.softplus(-gf)
+        m_new = jnp.maximum(logf + m, gi)
+        fgate = jnp.exp(logf + m - m_new)
+        igate = jnp.exp(gi - m_new)
+        c = fgate * c + igate * jnp.tanh(gz)
+        n = fgate * n + igate
+        hid = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+        return (c, n, hid, m_new), hid
+
+    (cF, nF, hF, mF), ys = jax.lax.scan(step, st, wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    out = y @ p["wo"]
+    return x + out, {"c": cF, "n": nF, "hid": hF, "m": mF}
+
+
+def slstm_state(cfg: ArchConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"c": z, "n": z, "hid": z, "m": z}

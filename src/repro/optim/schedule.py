@@ -1,0 +1,35 @@
+"""LR schedules.  minicpm-2b trains with WSD (warmup-stable-decay,
+arXiv:2404.06395); everything else defaults to cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, base_lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, 1-cycle decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, (step + 1) / jnp.maximum(1, warmup))
+    in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(1, decay),
+                        0.0, 1.0)
+    decay_mult = 1.0 - (1.0 - final_frac) * in_decay
+    return jnp.where(step < warmup + stable, warm, base_lr * decay_mult)
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, (step + 1) / jnp.maximum(1, warmup))
+    t = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, base_lr * cos)
+
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup: int | None = None):
+    warmup = warmup if warmup is not None else max(10, total_steps // 50)
+    if kind == "wsd":
+        stable = int(0.8 * (total_steps - warmup))
+        decay = total_steps - warmup - stable
+        return lambda s: wsd_schedule(s, base_lr, warmup, stable, decay)
+    return lambda s: cosine_schedule(s, base_lr, warmup, total_steps)

@@ -1,0 +1,7 @@
+"""Event-ordered SSD NDP simulator (the paper's §5 evaluation vehicle)."""
+from repro.sim.machine import SimConfig, Simulation, simulate
+from repro.sim.servers import ServerPool
+from repro.sim.stats import DecisionRecord, SimResult, percentile
+
+__all__ = ["SimConfig", "Simulation", "simulate", "ServerPool",
+           "DecisionRecord", "SimResult", "percentile"]

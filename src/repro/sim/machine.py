@@ -1,0 +1,488 @@
+"""Event-ordered SSD NDP simulator (§5.1-§5.2).
+
+Inherits MQSim's structural model — channels/dies as contended units, L2P
+mapping with a DFTL-style cache, per-resource execution queues — and adds
+the five Conduit NDP extensions (§5.1): (1) an internal DRAM model,
+(2) compute models for ISP / PuD-SSD / IFP, (3) dedicated execution queues
+per compute resource, (4) offloader-coupled scheduling of operand movement,
+(5) NDP-aware page placement (same-block constraint for MWS ops).
+
+Instructions dispatch in program order through the offloader core (which
+serializes decisions and charges the §4.5 overhead); execution overlaps
+freely across resources subject to SSA dependencies, operand movement over
+contended links, and per-resource queue (server) availability — the same
+semantics as an event heap with FIFO resource queues, computed in
+dispatch order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
+                             dm_energy_nj)
+from repro.core.isa import (Location, OpClass, Resource, VectorInstr,
+                            compute_energy_nj, compute_latency_ns)
+from repro.core.policies import Policy, make_policy
+from repro.core.vectorize import Trace
+from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
+from repro.sim.servers import ServerPool
+from repro.sim.stats import DecisionRecord, SimResult
+
+
+@dataclasses.dataclass
+class SimConfig:
+    dram_capacity_pages: Optional[int] = None    # default: footprint/8
+    host_capacity_pages: Optional[int] = None    # default: footprint/4
+    fail_rate: float = 0.0                       # transient-fault injection
+    move_outputs_to_host: bool = True            # epilogue (§4.4 trigger ii)
+    pud_units: int = 8                           # per-bank bbop engines
+    seed: int = 0x5AFA11
+
+
+STATIC_DISPATCH_NS = 200.0   # queue-push cost for compile-time-mapped policies
+BUFFER_DEPTH = 4             # pages buffered per plane (S/A/B/C data latches)
+
+
+import bisect
+
+
+def _hash01(iid: int, seed: int) -> float:
+    x = (iid * 2654435761 + seed) & 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x45D9F3B) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x / 2**32
+
+
+class Simulation:
+    def __init__(self, trace: Trace, policy: Policy,
+                 spec: SSDSpec = DEFAULT_SSD,
+                 config: Optional[SimConfig] = None):
+        self.trace = trace
+        self.policy = policy
+        self.spec = spec
+        self.cfg = config or SimConfig()
+        f = spec.flash
+        self.pools: Dict[Resource, ServerPool] = {
+            Resource.ISP: ServerPool("isp", spec.isp.compute_cores),
+            Resource.PUD: ServerPool("pud", self.cfg.pud_units),
+            # one pool models the dies: IFP execution, read senses and
+            # program write-backs all occupy a die (a die cannot sense
+            # while programming) — so die congestion is visible to the
+            # cost function's queue feature.
+            Resource.IFP: ServerPool("ifp_die", f.total_dies),
+            Resource.HOST_CPU: ServerPool("cpu", 1),
+            Resource.HOST_GPU: ServerPool("gpu", 1),
+        }
+        # computation mode (§4.4) suspends host I/O: every controller core
+        # not used for ISP compute runs offloading/transformation tasks.
+        self.offloader = ServerPool(
+            "offloader", max(1, spec.isp.cores - spec.isp.compute_cores))
+        self.channels = ServerPool("flash_chan", f.channels)
+        self.dies = self.pools[Resource.IFP]   # alias: same physical units
+        self.dram_bus = ServerPool("dram_bus", 1)
+        self.pcie = ServerPool("pcie", 1)
+
+        self.pages = trace.pages
+        if not self.pages._initial:
+            self.pages.snapshot_initial()
+        self.pages.reset()
+        npages = len(self.pages)
+        self.dram_cap = self.cfg.dram_capacity_pages or max(32, npages // 8)
+        self.host_cap = self.cfg.host_capacity_pages or max(32, npages // 4)
+        self.dram_lru: "OrderedDict[int, float]" = OrderedDict()
+        self.host_lru: "OrderedDict[int, float]" = OrderedDict()
+
+        self.completion: Dict[int, float] = {}
+        # IFP page buffers: each channel-unit holds up to BUFFER_DEPTH pages
+        # in its planes' S/D latches; page -> unit map gives latch affinity.
+        self.unit_buffers: Dict[int, List[int]] = {}
+        self.buffered: Dict[int, int] = {}             # page -> unit
+        # Static per-version liveness (compile-time metadata): a page is
+        # live at instruction i iff its next event after i is a READ; if the
+        # next event is a WRITE (the value is dead — the physical page gets
+        # recycled) it can be discarded from latches/caches without a
+        # write-back.
+        self.page_events: Dict[int, List[Tuple[int, bool]]] = {}
+        for ins in trace.instrs:
+            for s in ins.srcs:
+                self.page_events.setdefault(s, []).append((ins.iid, True))
+            self.page_events.setdefault(ins.dst, []).append((ins.iid, False))
+        self.out_pages_set = {p for pl in trace.output_pages for p in pl}
+        self._cursor_iid = 0
+
+        # accounting
+        self.compute_energy = 0.0
+        self.movement_energy = 0.0
+        self.overhead_total = 0.0
+        self.coherence_syncs = 0
+        self.evictions = 0
+        self.replays = 0
+        self.colocations = 0
+        self.decisions: List[DecisionRecord] = []
+        self.resource_counts: Dict[Resource, int] = {r: 0 for r in Resource}
+
+    # -- data movement --------------------------------------------------------
+
+    def _move_page(self, pid: int, to: Location, ready: float) -> float:
+        """Move one page; returns completion time.  Occupies the interconnect
+        servers on the path and performs the §4.4 lazy-coherence updates."""
+        ent = self.pages[pid]
+        src = ent.location
+        if src == to:
+            self._touch(pid, to, ready)
+            return ready
+        f, d, h = self.spec.flash, self.spec.dram, self.spec.host
+        nb = self.spec.page_size
+        t = ready
+        if ent.dirty and ent.owner not in (Location.FLASH, to):
+            self.coherence_syncs += 1      # cross-resource request on dirty page
+
+        sense = 0.0 if pid in self.buffered else f.t_read_ns
+        if src == Location.FLASH:
+            if sense:
+                t = self.dies.acquire(t, sense, unit=ent.die).end
+            t = self.channels.acquire(
+                t, f.t_dma_ns + nb * f.channel_ns_per_byte,
+                unit=ent.channel).end
+            if to in (Location.DRAM, Location.CTRL):
+                t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+            elif to == Location.HOST:
+                t = self.pcie.acquire(
+                    t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+        elif src in (Location.DRAM, Location.CTRL):
+            t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+            if to == Location.FLASH:
+                t = self.channels.acquire(
+                    t, nb * f.channel_ns_per_byte + f.t_dma_ns,
+                    unit=ent.channel).end
+                t = self.dies.acquire(t, f.t_prog_ns, unit=ent.die).end
+            elif to == Location.HOST:
+                t = self.pcie.acquire(
+                    t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+        elif src == Location.HOST:
+            t = self.pcie.acquire(
+                t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+            if to == Location.FLASH:
+                t = self.channels.acquire(
+                    t, nb * f.channel_ns_per_byte + f.t_dma_ns,
+                    unit=ent.channel).end
+                t = self.dies.acquire(t, f.t_prog_ns, unit=ent.die).end
+            elif to in (Location.DRAM, Location.CTRL):
+                t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+        self.movement_energy += dm_energy_nj(src, to, nb, self.spec)
+        if pid in self.buffered:
+            u = self.buffered.pop(pid)
+            if pid in self.unit_buffers.get(u, []):
+                self.unit_buffers[u].remove(pid)
+        if to == Location.FLASH:
+            ent.owner = Location.FLASH
+            ent.dirty = False
+            ent.version = 0                 # commit (§4.4)
+        self.pages.move(pid, to)
+        self._touch(pid, to, t)
+        return t
+
+    def _touch(self, pid: int, loc: Location, now: float) -> None:
+        if loc in (Location.DRAM, Location.CTRL):
+            lru, cap = self.dram_lru, self.dram_cap
+        elif loc == Location.HOST:
+            lru, cap = self.host_lru, self.host_cap
+        else:
+            self.dram_lru.pop(pid, None)
+            self.host_lru.pop(pid, None)
+            return
+        lru.pop(pid, None)
+        lru[pid] = now
+        while len(lru) > cap:
+            victim, _ = lru.popitem(last=False)
+            self._evict(victim, now)
+
+    def _evict(self, pid: int, now: float) -> None:
+        """Capacity eviction — sync trigger (iii) of §4.4.
+
+        Dead pages (no future reader, not a trace output) are scratch the
+        runtime can discard; only live data pays the flash commit."""
+        ent = self.pages[pid]
+        self.evictions += 1
+        if not self._is_live(pid, self._cursor_iid - 1):
+            ent.owner = Location.FLASH
+            ent.dirty = False
+            self.pages.move(pid, Location.FLASH)
+            return
+        if ent.owner in (Location.DRAM, Location.CTRL, Location.HOST):
+            # latest version off-flash -> commit asynchronously
+            f, d = self.spec.flash, self.spec.dram
+            nb = self.spec.page_size
+            t = self.dram_bus.acquire(now, nb * d.bus_ns_per_byte).end \
+                if ent.location != Location.HOST else \
+                self.pcie.acquire(now, nb * self.spec.host.pcie_ns_per_byte).end
+            t = self.channels.acquire(
+                t, nb * f.channel_ns_per_byte + f.t_dma_ns,
+                unit=ent.channel).end
+            self.dies.acquire(t, f.t_prog_ns, unit=ent.die)
+            self.movement_energy += dm_energy_nj(
+                ent.location, Location.FLASH, nb, self.spec)
+            self.coherence_syncs += 1
+        ent.owner = Location.FLASH
+        ent.dirty = False
+        ent.version = 0
+        self.pages.move(pid, Location.FLASH)
+
+    def _is_live(self, pid: int, after_iid: int) -> bool:
+        """True iff the page's current value will be read again (its next
+        trace event strictly after ``after_iid`` is a read), or it is a
+        trace output."""
+        ev = self.page_events.get(pid)
+        if ev is not None:
+            k = bisect.bisect_right(ev, (after_iid, True))
+            if k < len(ev):
+                return ev[k][1]
+        return pid in self.out_pages_set
+
+    def _path_queue_ns(self, src: Location, dst: Location, now: float) -> float:
+        """Queueing delay along the movement path src->dst (feature 4
+        generalized: the instruction waits on these queues too)."""
+        if src == dst:
+            return 0.0
+        pools = []
+        if src == Location.FLASH or dst == Location.FLASH:
+            pools += [self.dies, self.channels]
+        if Location.DRAM in (src, dst) or Location.CTRL in (src, dst):
+            pools.append(self.dram_bus)
+        if Location.HOST in (src, dst):
+            pools.append(self.pcie)
+        return max((p.queue_delay_ns(now) for p in pools), default=0.0)
+
+    # -- execution ------------------------------------------------------------
+
+    def _exec_on(self, instr: VectorInstr, r: Resource, ready: float,
+                 allow_contention: bool = True) -> Tuple[float, float]:
+        """Run ``instr`` on resource ``r``; returns (start, end)."""
+        latched = False
+        if r is Resource.IFP:
+            flash_srcs = [s for s in instr.srcs
+                          if self.pages.location(s) == Location.FLASH
+                          and s not in self.buffered]   # latched pages are
+                          # in the peripheral latches, not the array: MWS
+                          # same-block placement does not apply to them
+            # Flash-Cosmos same-block layout constraint for MWS ops
+            if instr.op in ("and", "or", "nand", "nor") and len(flash_srcs) > 1:
+                if not self.pages.same_block(flash_srcs):
+                    moved = self.pages.co_locate(flash_srcs)
+                    self.colocations += moved
+                    f = self.spec.flash
+                    for s in flash_srcs[1:1 + moved]:
+                        t0 = self.dies.acquire(
+                            ready, f.t_read_ns, unit=self.pages[s].die).end
+                        t0 = self.channels.acquire(
+                            t0, self.spec.page_size * f.channel_ns_per_byte,
+                            unit=self.pages[s].channel).end
+                        ready = self.dies.acquire(
+                            t0, f.t_prog_ns, unit=self.pages[s].die).end
+                        self.movement_energy += (
+                            f.e_read_nj_per_channel * 0.3 + f.e_prog_nj_per_channel)
+            # latch affinity: prefer the unit already buffering an operand
+            unit = None
+            for s in instr.srcs:
+                if s in self.buffered:
+                    unit = self.buffered[s]
+                    latched = True
+                    break
+            if unit is None:
+                unit = (self.pages[instr.srcs[0]].die
+                        if instr.srcs else 0)
+        else:
+            unit = None
+        if r is Resource.PUD:
+            # ACT/PRE command issue serializes on the DRAM command/data bus
+            # even though banks execute bbops concurrently (MIMDRAM model).
+            issue = 0.18 * compute_latency_ns(instr, r, self.spec)
+            ready = self.dram_bus.acquire(ready, issue).end
+
+        lat = compute_latency_ns(instr, r, self.spec, operands_latched=latched)
+        pool = self.pools[r]
+        if allow_contention:
+            acq = pool.acquire(ready, lat, unit=unit)
+            start, end = acq.start, acq.end
+        else:
+            start, end = ready, ready + lat
+            pool.busy_ns += lat
+            pool.jobs += 1
+        self.compute_energy += compute_energy_nj(instr, r, self.spec, lat)
+
+        home = HOME[r]
+        self.pages.record_write(instr.dst, home)
+        if r is Resource.IFP:
+            # Result lands in the plane's page buffer (S/D latches hold up to
+            # BUFFER_DEPTH pages per unit).  Displacing a buffered page
+            # triggers its (pipelined) SLC program write-back — but only if
+            # that page is still LIVE (future reader or trace output); dead
+            # latch intermediates are discarded, as in Flash-Cosmos chaining.
+            buf = self.unit_buffers.setdefault(unit, [])
+            if instr.dst in buf:
+                buf.remove(instr.dst)
+            buf.append(instr.dst)
+            self.buffered[instr.dst] = unit
+            self.pages[instr.dst].die = unit           # affinity follows data
+            self.pages[instr.dst].channel = unit % self.spec.flash.channels
+            while len(buf) > BUFFER_DEPTH:
+                prev = buf.pop(0)
+                self.buffered.pop(prev, None)
+                if self._is_live(prev, instr.iid):
+                    # live result flows UP the hierarchy: DMA out of the
+                    # page buffer to SSD DRAM (a program back into the
+                    # array would cost 400us; the controller drains hot
+                    # data through the normal read path instead).
+                    f = self.spec.flash
+                    nb = self.spec.page_size
+                    t = self.channels.acquire(
+                        end, f.t_dma_ns + nb * f.channel_ns_per_byte,
+                        unit=self.pages[prev].channel).end
+                    t = self.dram_bus.acquire(
+                        t, nb * self.spec.dram.bus_ns_per_byte).end
+                    self.movement_energy += dm_energy_nj(
+                        Location.FLASH, Location.DRAM, nb, self.spec)
+                    self.pages[prev].owner = Location.DRAM
+                    self.pages[prev].dirty = True
+                    self.pages.move(prev, Location.DRAM)
+                    self._touch(prev, Location.DRAM, t)
+                else:
+                    self.pages[prev].dirty = False
+                    self.pages[prev].owner = Location.FLASH
+        else:
+            self._touch(instr.dst, home, end)
+        return start, end
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self) -> SimResult:
+        spec = self.spec
+        ideal = self.policy.ignores_contention
+        prev_decide_end = 0.0
+        makespan = 0.0
+
+        for instr in self.trace.instrs:
+            self._cursor_iid = instr.iid
+            deps_ready = max((self.completion[d] for d in instr.deps
+                              if d in self.completion), default=0.0)
+            if ideal:
+                # Ideal (§5.3): zero data-movement latency, zero decision
+                # overhead, fastest resource per instruction.  Execution
+                # still occupies the (contention-free scheduled) compute
+                # units — an upper bound on realizable offloading.
+                view = SystemView(0.0, lambda r: 0.0, lambda i: deps_ready,
+                                  self.pages.location)
+                decision = self.policy.select(instr, view)
+                r = decision.resource
+                lat = compute_latency_ns(instr, r, spec)
+                acq = self.pools[r].acquire(deps_ready, lat)
+                start, end = acq.start, acq.end
+                self.compute_energy += compute_energy_nj(instr, r, spec, lat)
+                self.pages.record_write(instr.dst, HOME[r])
+                self.completion[instr.iid] = end
+                self.resource_counts[r] += 1
+                self.decisions.append(DecisionRecord(
+                    instr.iid, instr.op, r, start, start, end, 0.0))
+                makespan = max(makespan, end)
+                continue
+
+            if self.policy.dynamic:
+                pending = any(d in self.completion
+                              and self.completion[d] > prev_decide_end
+                              for d in instr.deps)
+                overhead = decision_overhead_ns(
+                    instr, spec, l2p_lookup=self.pages.lookup_latency_ns,
+                    has_pending_deps=pending)
+            else:
+                # compile-time-mapped policy: queue push only
+                overhead = STATIC_DISPATCH_NS
+            # in-order issue, pipelined across the offloader cores
+            acq = self.offloader.acquire(prev_decide_end, overhead)
+            now, decide_end = acq.start, acq.end
+            prev_decide_end = acq.start
+            self.overhead_total += overhead
+
+            view = SystemView(
+                now_ns=now,
+                queue_delay_ns=lambda r: self.pools[r].queue_delay_ns(now),
+                dep_ready_ns=lambda i: deps_ready,
+                location_of=self.pages.location,
+                move_queue_ns=lambda src, dst: self._path_queue_ns(src, dst, now),
+            )
+            decision = self.policy.select(instr, view)
+            r = decision.resource
+
+            # operand movement to the resource's home (overlapped per page)
+            ready = max(decide_end, deps_ready)
+            home = HOME[r]
+            move_end = ready
+            dm_ns = 0.0
+            for s in instr.srcs:
+                if self.pages.location(s) != home:
+                    t = self._move_page(s, home, ready)
+                    dm_ns += t - ready
+                    move_end = max(move_end, t)
+                else:
+                    self._touch(s, home, ready)
+
+            start, end = self._exec_on(instr, r, move_end)
+
+            # transient-fault injection (§4.4 failure handling): replay on
+            # another resource using the latest data version.
+            if self.cfg.fail_rate > 0.0 and \
+                    _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate:
+                self.replays += 1
+                alts = [x for x in self.policy.candidates
+                        if x != r and decision.features.get(x) is not None
+                        and decision.features[x].supported] or [Resource.ISP]
+                alt = min(alts, key=lambda x: decision.features[x].latency_comp
+                          if x in decision.features else float("inf"))
+                ready2 = end
+                for s in instr.srcs:
+                    if self.pages.location(s) != HOME[alt]:
+                        ready2 = max(ready2, self._move_page(s, HOME[alt], end))
+                _, end = self._exec_on(instr, alt, ready2)
+                r = alt
+
+            self.completion[instr.iid] = end
+            self.resource_counts[r] += 1
+            self.decisions.append(DecisionRecord(
+                instr.iid, instr.op, r, now, start, end, dm_ns,
+                replayed=self.cfg.fail_rate > 0.0
+                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
+            makespan = max(makespan, end)
+
+        # epilogue: results become visible to the host (§4.4 trigger ii)
+        if self.cfg.move_outputs_to_host and not ideal:
+            for pl in self.trace.output_pages:
+                for pid in pl:
+                    if self.pages.location(pid) != Location.HOST:
+                        makespan = max(
+                            makespan, self._move_page(pid, Location.HOST, makespan))
+
+        busy = {p.name: p.busy_ns for p in
+                list(self.pools.values()) + [self.offloader, self.channels,
+                                             self.dram_bus, self.pcie]}
+        return SimResult(
+            policy=self.policy.name, workload=self.trace.name,
+            makespan_ns=makespan, n_instrs=len(self.trace.instrs),
+            compute_energy_nj=self.compute_energy,
+            movement_energy_nj=self.movement_energy,
+            decision_overhead_ns_total=self.overhead_total,
+            decisions=self.decisions,
+            resource_counts={r: c for r, c in self.resource_counts.items() if c},
+            resource_busy_ns=busy,
+            coherence_syncs=self.coherence_syncs, evictions=self.evictions,
+            replays=self.replays, colocations=self.colocations)
+
+
+def simulate(trace: Trace, policy: str | Policy,
+             spec: SSDSpec = DEFAULT_SSD,
+             config: Optional[SimConfig] = None) -> SimResult:
+    """Run one workload trace under one offloading policy."""
+    if isinstance(policy, str):
+        policy = make_policy(policy, spec)
+    return Simulation(trace, policy, spec, config).run()

@@ -1,0 +1,63 @@
+"""Server pools: the contention model of the event-driven simulator.
+
+Every contended unit in the SSD — compute resources (ISP core, DRAM bank
+groups, flash channels' compute), interconnects (flash channels, DRAM bus,
+PCIe link) and the offloader core itself — is a :class:`ServerPool` with k
+units.  Work items acquire a unit FIFO; the pool tracks per-unit
+free-times, total busy time, and the queue-delay feature (Table 1,
+``delay_queue``) the cost function reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Acquisition:
+    unit: int
+    start: float
+    end: float
+
+
+class ServerPool:
+    def __init__(self, name: str, units: int):
+        assert units >= 1
+        self.name = name
+        self.units = units
+        self.free: List[float] = [0.0] * units
+        self.busy_ns: float = 0.0
+        self.jobs: int = 0
+        # Running counter of enqueued-but-unfinished work (the paper's §4.5
+        # footnote 5 incremental queue counter).
+        self._pending_work: float = 0.0
+
+    def queue_delay_ns(self, now: float) -> float:
+        """Expected wait before a new job could start (Table 1 feature)."""
+        waits = [max(0.0, f - now) for f in self.free]
+        return min(waits)
+
+    def pending_work_ns(self, now: float) -> float:
+        return sum(max(0.0, f - now) for f in self.free)
+
+    def utilization(self, makespan: float) -> float:
+        if makespan <= 0:
+            return 0.0
+        return self.busy_ns / (makespan * self.units)
+
+    def acquire(self, ready: float, dur: float,
+                unit: Optional[int] = None) -> Acquisition:
+        """FIFO-acquire a unit at the earliest feasible start >= ready."""
+        if unit is None:
+            unit = min(range(self.units), key=lambda u: self.free[u])
+        start = max(ready, self.free[unit])
+        end = start + dur
+        self.free[unit] = end
+        self.busy_ns += dur
+        self.jobs += 1
+        return Acquisition(unit=unit, start=start, end=end)
+
+    def peek_start(self, ready: float, unit: Optional[int] = None) -> float:
+        if unit is None:
+            unit = min(range(self.units), key=lambda u: self.free[u])
+        return max(ready, self.free[unit])

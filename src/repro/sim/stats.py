@@ -1,0 +1,83 @@
+"""Simulation results: makespan, energy breakdown, latency percentiles,
+offloading-decision logs (Figs. 7-10 raw data)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.isa import Resource
+
+
+def percentile(values: List[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0,100])."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    k = max(0, min(len(s) - 1, math.ceil(p / 100.0 * len(s)) - 1))
+    return s[k]
+
+
+@dataclasses.dataclass
+class DecisionRecord:
+    iid: int
+    op: str
+    resource: Resource
+    t_decide: float
+    t_start: float
+    t_end: float
+    dm_ns: float
+    replayed: bool = False
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    workload: str
+    makespan_ns: float
+    n_instrs: int
+    compute_energy_nj: float
+    movement_energy_nj: float
+    decision_overhead_ns_total: float
+    decisions: List[DecisionRecord]
+    resource_counts: Dict[Resource, int]
+    resource_busy_ns: Dict[str, float]
+    coherence_syncs: int
+    evictions: int
+    replays: int
+    colocations: int
+
+    @property
+    def total_energy_nj(self) -> float:
+        return self.compute_energy_nj + self.movement_energy_nj
+
+    @property
+    def latencies_ns(self) -> List[float]:
+        return [d.t_end - d.t_decide for d in self.decisions]
+
+    def p(self, pct: float) -> float:
+        return percentile(self.latencies_ns, pct)
+
+    @property
+    def avg_decision_overhead_ns(self) -> float:
+        return self.decision_overhead_ns_total / max(1, self.n_instrs)
+
+    def decision_mix(self) -> Dict[Resource, float]:
+        total = max(1, sum(self.resource_counts.values()))
+        return {r: c / total for r, c in self.resource_counts.items()}
+
+    def summary(self) -> Dict[str, object]:
+        mix = self.decision_mix()
+        return {
+            "policy": self.policy,
+            "workload": self.workload,
+            "makespan_ms": self.makespan_ns / 1e6,
+            "energy_mj": self.total_energy_nj / 1e6,
+            "movement_energy_pct": round(
+                100 * self.movement_energy_nj / max(1e-9, self.total_energy_nj), 1),
+            "p99_us": self.p(99) / 1e3,
+            "p9999_us": self.p(99.99) / 1e3,
+            "mix": {r.value: round(100 * f, 1) for r, f in mix.items()},
+            "avg_overhead_us": self.avg_decision_overhead_ns / 1e3,
+            "instrs": self.n_instrs,
+        }

@@ -1,0 +1,71 @@
+"""The six evaluated workloads (§5.4, Table 3) as traceable JAX programs.
+
+Each workload module exposes ``make_fn(scale)`` (the JAX program),
+``make_inputs(scale, seed)`` (its inputs), ``SIM`` (simulator pressure
+knobs) and ``META`` (the paper's Table 3 characterization for comparison).
+
+``get_trace`` runs Conduit's compile-time preprocessing on the workload;
+``sim_config_for`` derives the per-workload capacity pressure (the paper
+sizes footprints beyond capacity to induce movement, §5.4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+from repro.core.vectorize import Trace, vectorize
+from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
+from repro.sim.machine import SimConfig
+from repro.workloads import (aes, heat3d, jacobi1d, llama2_infer, llm_train,
+                             xor_filter)
+
+WORKLOADS = {
+    "aes": aes,
+    "xor_filter": xor_filter,
+    "heat3d": heat3d,
+    "jacobi1d": jacobi1d,
+    "llama2_infer": llama2_infer,
+    "llm_train": llm_train,
+}
+
+PAPER_ORDER = ("aes", "xor_filter", "heat3d", "jacobi1d", "llama2_infer",
+               "llm_train")
+
+
+@functools.lru_cache(maxsize=32)
+def get_trace(name: str, scale: str = "paper",
+              spec: SSDSpec = DEFAULT_SSD) -> Trace:
+    mod = WORKLOADS[name]
+    fn = mod.make_fn(scale)
+    args = mod.make_inputs(scale)
+    kw = getattr(mod, "VECTORIZE_KW", {})
+    return vectorize(fn, *args, spec=spec, name=name, **kw)
+
+
+def sim_config_for(name: str, trace: Trace, pressure: float = 0.0,
+                   **kw) -> SimConfig:
+    """Simulator config for a workload.
+
+    ``pressure=0`` (default): capacities fit the reduced-scale footprint —
+    the paper's capacity effects exist at TB scale and adding artificial
+    thrash cliffs at MB scale only injects noise.  ``pressure>0`` shrinks
+    SSD-DRAM/host capacity to ``(1-pressure)`` of the footprint to exercise
+    the eviction + lazy-coherence machinery (see the pressure benchmark).
+    """
+    mod = WORKLOADS[name]
+    npages = len(trace.pages)
+    keep = max(0.02, 1.0 - pressure)
+    return SimConfig(
+        dram_capacity_pages=max(32, int(keep * mod.SIM["dram_frac"] * npages)
+                                if pressure else npages + 64),
+        host_capacity_pages=max(32, int(keep * mod.SIM["host_frac"] * npages)
+                                if pressure else npages + 64),
+        **kw)
+
+
+def run_numeric(name: str, scale: str = "tiny"):
+    """Execute the workload numerically (unquantized) — sanity oracle."""
+    mod = WORKLOADS[name]
+    fn = mod.make_fn(scale)
+    args = mod.make_inputs(scale)
+    return fn(*args)

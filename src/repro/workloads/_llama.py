@@ -1,0 +1,85 @@
+"""Reduced-dimension LLaMA2-architecture model used by the LLM workloads.
+
+The paper evaluates INT8 LLaMA2-7B inference and training (llama2.c [308]);
+full-scale traces would be billions of page-ops, so — like the paper's own
+12,000-instruction execution windows (Fig. 10) — we trace a
+dimension-reduced model with the identical architecture (RMSNorm, RoPE,
+multi-head attention with causal mask, SwiGLU MLP, weight-tied logits).
+The vectorizer quantizes every tensor to INT8 lanes (§5.4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_params(rng: np.random.Generator, d: int, n_layers: int, n_heads: int,
+                d_ff: int, vocab: int) -> Dict:
+    def w(*shape):
+        return jnp.asarray(rng.normal(0, 0.02, size=shape).astype(np.float32))
+
+    layers = []
+    for _ in range(n_layers):
+        layers.append(dict(
+            wq=w(d, d), wk=w(d, d), wv=w(d, d), wo=w(d, d),
+            w1=w(d, d_ff), w2=w(d_ff, d), w3=w(d, d_ff),
+            ln1=jnp.ones((d,), jnp.float32), ln2=jnp.ones((d,), jnp.float32),
+        ))
+    return dict(emb=w(vocab, d), lnf=jnp.ones((d,), jnp.float32),
+                layers=layers)
+
+
+def rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def rope(x, cos, sin):
+    h = x.shape[-1] // 2
+    x1, x2 = x[..., :h], x[..., h:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def attention(x, layer, n_heads, cos, sin, mask):
+    seq, d = x.shape
+    dh = d // n_heads
+    q = (x @ layer["wq"]).reshape(seq, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ layer["wk"]).reshape(seq, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ layer["wv"]).reshape(seq, n_heads, dh).transpose(1, 0, 2)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(dh)
+    scores = jnp.where(mask, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, v)
+    out = out.transpose(1, 0, 2).reshape(seq, d)
+    return out @ layer["wo"]
+
+
+def mlp(x, layer):
+    return (jax.nn.silu(x @ layer["w1"]) * (x @ layer["w3"])) @ layer["w2"]
+
+
+def forward(params, tokens, cos, sin, mask, n_heads: int):
+    x = jnp.take(params["emb"], tokens, axis=0)
+    for layer in params["layers"]:
+        x = x + attention(rmsnorm(x, layer["ln1"]), layer, n_heads, cos, sin,
+                          mask)
+        x = x + mlp(rmsnorm(x, layer["ln2"]), layer)
+    x = rmsnorm(x, params["lnf"])
+    return x @ params["emb"].T          # weight-tied logits
+
+
+def make_rope_tables(rng, seq: int, dh: int):
+    t = np.arange(seq)[:, None]
+    freqs = 1.0 / (10000 ** (np.arange(dh // 2)[None, :] / (dh // 2)))
+    ang = t * freqs
+    return (jnp.asarray(np.cos(ang), jnp.float32),
+            jnp.asarray(np.sin(ang), jnp.float32))
+
+
+def causal_mask(seq: int):
+    return jnp.asarray(np.tril(np.ones((seq, seq), bool)))[None, :, :]

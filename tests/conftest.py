@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see 1 CPU device (the dry-run sets its own
+# flag before any import) — never force the 512-device fake platform here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

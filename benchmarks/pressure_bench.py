@@ -1,12 +1,14 @@
 """Capacity-pressure sweep: exercises the eviction + lazy-coherence
-machinery (the paper's "footprint exceeds capacity" regime, §5.4) and the
-fault-replay path (§4.4 failure handling)."""
+machinery (the paper's "footprint exceeds capacity" regime, §5.4), the
+fault-replay path (§4.4 failure handling), and the multi-tenant
+interference regime (several traces + host I/O sharing one fabric)."""
 from __future__ import annotations
 
 from typing import List
 
 from benchmarks.common import csv_row
-from repro.sim import SimConfig, simulate
+from repro.sim import (HostIOStream, SimConfig, jain_fairness, simulate,
+                       simulate_mix)
 from repro.workloads import get_trace, sim_config_for
 
 
@@ -45,4 +47,36 @@ def fault_replay(workload: str = "jacobi1d") -> List[str]:
         rows.append(csv_row(f"fault/{workload}/{rate}",
                             f"{r.makespan_ns/1e3:.1f}",
                             f"us,replays={r.replays}"))
+    return rows
+
+
+def tenant_interference(workloads=("jacobi1d", "aes"),
+                        policy: str = "conduit") -> List[str]:
+    """Multi-tenant interference sweep: co-run the workloads on one shared
+    fabric at increasing host-I/O intensity; report per-tenant slowdown
+    vs. solo, Jain fairness, and host I/O p99."""
+    rows = []
+    traces = [get_trace(wl, "tiny") for wl in workloads]
+    print(f"\n== multi-tenant interference ({'+'.join(workloads)}, "
+          f"{policy} policy)")
+    # the solo baselines are identical across iops levels: compute once
+    solo = {f"t{i}:{wl}": simulate(tr, policy).makespan_ns
+            for i, (wl, tr) in enumerate(zip(workloads, traces))}
+    for iops in (0, 25_000, 100_000, 400_000):
+        io = (HostIOStream(rate_iops=iops, n_requests=128)
+              if iops else None)
+        mix = simulate_mix(traces, policy, io_stream=io, compute_solo=False)
+        slow = {k: mix.tenant(k).makespan_ns / v for k, v in solo.items()}
+        fairness = jain_fairness(list(slow.values()))
+        io_p99 = mix.host_io.p(99) / 1e3 if mix.host_io else 0.0
+        sl_txt = " ".join(f"{k.split(':')[1]}={v:5.2f}x"
+                          for k, v in slow.items())
+        print(f"  io={iops:7d}iops {sl_txt} fairness={fairness:.3f} "
+              f"io_p99={io_p99:8.1f}us")
+        for k, v in slow.items():
+            rows.append(csv_row(f"mix/{k.split(':')[1]}/{iops}",
+                                f"{v:.4f}", "slowdown_x"))
+        rows.append(csv_row(f"mix/fairness/{iops}", f"{fairness:.4f}", ""))
+        if mix.host_io:
+            rows.append(csv_row(f"mix/io_p99/{iops}", f"{io_p99:.1f}", "us"))
     return rows

@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
-                         "overhead,roofline,pressure,fault,kernels")
+                         "overhead,roofline,pressure,fault,mix,kernels")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_figures, pressure_bench
@@ -36,6 +36,7 @@ def main() -> None:
         "latmodel": kernel_bench.resource_latency_table,
         "pressure": pressure_bench.pressure_sweep,
         "fault": pressure_bench.fault_replay,
+        "mix": pressure_bench.tenant_interference,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,

@@ -119,6 +119,10 @@ class SystemView:
     # queueing on the operand-movement path (defaults to zero: the paper's
     # static dm estimate; the simulator wires the real path queues in)
     move_queue_ns: Callable[[Location, Location], float] = lambda s, d: 0.0
+    # Multi-tenant plumbing: which trace/tenant this decision serves.  The
+    # single-tenant simulator passes the trace name; simulate_mix passes a
+    # unique tenant id — a QoS-aware policy can prioritize per tenant.
+    tenant: str = ""
 
 
 def features_for(instr: VectorInstr, resource: Resource, view: SystemView,

@@ -1,7 +1,19 @@
-"""Event-ordered SSD NDP simulator (the paper's §5 evaluation vehicle)."""
-from repro.sim.machine import SimConfig, Simulation, simulate
-from repro.sim.servers import ServerPool
-from repro.sim.stats import DecisionRecord, SimResult, percentile
+"""Discrete-event SSD NDP simulator (the paper's §5 evaluation vehicle).
 
-__all__ = ["SimConfig", "Simulation", "simulate", "ServerPool",
-           "DecisionRecord", "SimResult", "percentile"]
+Single-tenant entry point: :func:`simulate` (one trace, one policy).
+Multi-tenant entry point: :func:`simulate_mix` (several traces plus an
+optional synthetic host I/O stream sharing one fabric).  Both run on the
+time-ordered event heap in :mod:`repro.sim.events`.
+"""
+from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.machine import SimConfig, Simulation, simulate
+from repro.sim.servers import Fabric, ServerPool
+from repro.sim.stats import (DecisionRecord, HostIOStats, MixResult,
+                             SimResult, jain_fairness, percentile)
+from repro.sim.tenancy import HostIOStream, simulate_mix
+
+__all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
+           "Event", "EventEngine", "EventKind",
+           "HostIOStream", "simulate_mix",
+           "DecisionRecord", "HostIOStats", "MixResult", "SimResult",
+           "jain_fairness", "percentile"]

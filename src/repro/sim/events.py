@@ -1,0 +1,110 @@
+"""Discrete-event core of the SSD NDP simulator (MQSim/FTL-SIM style).
+
+The simulator is organised around a single time-ordered event heap
+(:class:`EventEngine`) plus FIFO resource queues (:class:`ServerPool` /
+:class:`~repro.sim.servers.Fabric`).  Every concurrent activity in the
+machine — a tenant's offloader dispatching its next vector instruction, a
+host I/O request arriving at the NVMe front end, a trace's epilogue flush —
+is an :class:`Event` with a typed :class:`EventKind`; handlers book time on
+the contended server pools and schedule their own follow-on events.
+
+Semantics:
+
+* Events pop in (time, sequence) order; the sequence counter breaks ties
+  deterministically, so identical inputs always replay identically.
+* Timestamps are monotone: a handler may only schedule events at or after
+  the engine's current time (asserted), so the global timeline never runs
+  backwards — the invariant `tests/test_events.py` checks.
+* Resource occupancy uses the *lazy-acquire* discipline of
+  :class:`~repro.sim.servers.ServerPool`: a handler processed at time *t*
+  books a unit from the unit's free time onwards, which serialises work in
+  event (== dispatch) order per unit — the FIFO queue of an event-driven
+  SSD simulator without materialising one pending-job list per unit.
+  Caveat: a dispatch whose operands are not ready yet still reserves its
+  unit *now* for a start in the future, so a later arrival (another
+  tenant, a host I/O request) queues behind work that has not physically
+  started even if the unit is idle in between.  This keeps single-trace
+  results identical to the pre-event-engine simulator and is conservative
+  (pessimistic) for cross-tenant interference; operand-ready re-queueing
+  is a ROADMAP follow-on.
+
+Single-trace runs degenerate to a single event source processed in program
+order, which is why :func:`repro.sim.tenancy.simulate_mix` with one trace
+reproduces :func:`repro.sim.machine.simulate` exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class EventKind(enum.Enum):
+    """Typed events of the NDP simulation (§5.1 simulator structure)."""
+
+    DISPATCH = "dispatch"        # offloader decides + issues one instruction
+    EPILOGUE = "epilogue"        # end-of-trace result flush to host (§4.4 ii)
+    IO_ARRIVAL = "io_arrival"    # host read/write request enters the SSD
+    IO_COMPLETE = "io_complete"  # host request leaves (latency accounting)
+    TIMER = "timer"              # generic callback (tests, future policies)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int
+    kind: EventKind
+    handler: Callable[["Event"], None] = dataclasses.field(compare=False)
+    payload: Any = dataclasses.field(default=None, compare=False)
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventEngine:
+    """Time-ordered event heap with deterministic tie-breaking.
+
+    ``record=True`` keeps a ``(time, kind)`` log of every processed event —
+    used by the monotonicity tests and handy for debugging interleavings.
+    """
+
+    #: tolerance for the monotone-schedule assertion (float round-off)
+    EPS = 1e-6
+
+    def __init__(self, record: bool = False):
+        self.now: float = 0.0
+        self.processed: int = 0
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self.record = record
+        self.log: List[Tuple[float, EventKind]] = []
+
+    def schedule(self, time: float, kind: EventKind,
+                 handler: Callable[[Event], None],
+                 payload: Any = None) -> Event:
+        """Schedule ``handler`` at ``time`` (>= now: time cannot run back)."""
+        if time < self.now - self.EPS:
+            raise ValueError(
+                f"event {kind} scheduled at {time} < now {self.now}")
+        ev = Event(time=max(time, self.now), seq=next(self._seq),
+                   kind=kind, handler=handler, payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def empty(self) -> bool:
+        return not self._heap
+
+    def run(self, until: Optional[float] = None) -> float:
+        """Process events in time order; returns the final clock value."""
+        while self._heap:
+            if until is not None and self._heap[0].time > until:
+                break
+            ev = heapq.heappop(self._heap)
+            self.now = max(self.now, ev.time)
+            self.processed += 1
+            if self.record:
+                self.log.append((self.now, ev.kind))
+            ev.handler(ev)
+        return self.now

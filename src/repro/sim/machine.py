@@ -1,4 +1,4 @@
-"""Event-ordered SSD NDP simulator (§5.1-§5.2).
+"""Discrete-event SSD NDP simulator (§5.1-§5.2).
 
 Inherits MQSim's structural model — channels/dies as contended units, L2P
 mapping with a DFTL-style cache, per-resource execution queues — and adds
@@ -7,27 +7,34 @@ the five Conduit NDP extensions (§5.1): (1) an internal DRAM model,
 per compute resource, (4) offloader-coupled scheduling of operand movement,
 (5) NDP-aware page placement (same-block constraint for MWS ops).
 
-Instructions dispatch in program order through the offloader core (which
-serializes decisions and charges the §4.5 overhead); execution overlaps
-freely across resources subject to SSA dependencies, operand movement over
-contended links, and per-resource queue (server) availability — the same
-semantics as an event heap with FIFO resource queues, computed in
-dispatch order.
+Execution is driven by the time-ordered event heap in
+:mod:`repro.sim.events`: each trace's offloader core emits ``DISPATCH``
+events (in-order issue, pipelined across offloader cores, charging the §4.5
+overhead); the handler decides a target resource, books operand movement
+over the contended links, books execution on the resource's FIFO queue, and
+schedules the next dispatch.  Instruction *completion* is therefore
+out-of-order — across resources within one trace, and across tenants when
+several traces share one :class:`~repro.sim.servers.Fabric` (see
+:func:`repro.sim.tenancy.simulate_mix`).  A single trace degenerates to one
+event source processed in program order, so :func:`simulate` is the exact
+single-tenant special case of the event engine.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
                              dm_energy_nj)
-from repro.core.isa import (Location, OpClass, Resource, VectorInstr,
+from repro.core.isa import (Location, Resource, VectorInstr,
                             compute_energy_nj, compute_latency_ns)
 from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
-from repro.sim.servers import ServerPool
+from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.servers import Fabric, ServerPool
 from repro.sim.stats import DecisionRecord, SimResult
 
 
@@ -45,9 +52,6 @@ STATIC_DISPATCH_NS = 200.0   # queue-push cost for compile-time-mapped policies
 BUFFER_DEPTH = 4             # pages buffered per plane (S/A/B/C data latches)
 
 
-import bisect
-
-
 def _hash01(iid: int, seed: int) -> float:
     x = (iid * 2654435761 + seed) & 0xFFFFFFFF
     x ^= x >> 16
@@ -57,33 +61,31 @@ def _hash01(iid: int, seed: int) -> float:
 
 
 class Simulation:
+    """One trace executing on one (possibly shared) SSD fabric.
+
+    ``fabric=None`` builds a private :class:`Fabric` — the single-tenant
+    case.  :func:`repro.sim.tenancy.simulate_mix` passes a shared fabric
+    plus a shared :class:`EventEngine` so several Simulations interleave on
+    the same channels/dies/buses in global time order.
+    """
+
     def __init__(self, trace: Trace, policy: Policy,
                  spec: SSDSpec = DEFAULT_SSD,
-                 config: Optional[SimConfig] = None):
+                 config: Optional[SimConfig] = None,
+                 fabric: Optional[Fabric] = None,
+                 tenant: str = ""):
         self.trace = trace
         self.policy = policy
         self.spec = spec
         self.cfg = config or SimConfig()
-        f = spec.flash
-        self.pools: Dict[Resource, ServerPool] = {
-            Resource.ISP: ServerPool("isp", spec.isp.compute_cores),
-            Resource.PUD: ServerPool("pud", self.cfg.pud_units),
-            # one pool models the dies: IFP execution, read senses and
-            # program write-backs all occupy a die (a die cannot sense
-            # while programming) — so die congestion is visible to the
-            # cost function's queue feature.
-            Resource.IFP: ServerPool("ifp_die", f.total_dies),
-            Resource.HOST_CPU: ServerPool("cpu", 1),
-            Resource.HOST_GPU: ServerPool("gpu", 1),
-        }
-        # computation mode (§4.4) suspends host I/O: every controller core
-        # not used for ISP compute runs offloading/transformation tasks.
-        self.offloader = ServerPool(
-            "offloader", max(1, spec.isp.cores - spec.isp.compute_cores))
-        self.channels = ServerPool("flash_chan", f.channels)
-        self.dies = self.pools[Resource.IFP]   # alias: same physical units
-        self.dram_bus = ServerPool("dram_bus", 1)
-        self.pcie = ServerPool("pcie", 1)
+        self.tenant = tenant or trace.name
+        self.fabric = fabric or Fabric(spec, pud_units=self.cfg.pud_units)
+        self.pools: Dict[Resource, ServerPool] = self.fabric.pools
+        self.offloader = self.fabric.offloader
+        self.channels = self.fabric.channels
+        self.dies = self.fabric.dies
+        self.dram_bus = self.fabric.dram_bus
+        self.pcie = self.fabric.pcie
 
         self.pages = trace.pages
         if not self.pages._initial:
@@ -112,6 +114,13 @@ class Simulation:
             self.page_events.setdefault(ins.dst, []).append((ins.iid, False))
         self.out_pages_set = {p for pl in trace.output_pages for p in pl}
         self._cursor_iid = 0
+
+        # event-driven dispatch state
+        self.engine: Optional[EventEngine] = None
+        self._idx = 0                       # next instruction to dispatch
+        self._prev_decide_end = 0.0         # offloader pipeline cursor
+        self._makespan = 0.0
+        self.done = False
 
         # accounting
         self.compute_energy = 0.0
@@ -356,133 +365,188 @@ class Simulation:
             self._touch(instr.dst, home, end)
         return start, end
 
-    # -- main loop -------------------------------------------------------------
+    # -- event-driven dispatch -------------------------------------------------
 
-    def run(self) -> SimResult:
-        spec = self.spec
-        ideal = self.policy.ignores_contention
-        prev_decide_end = 0.0
-        makespan = 0.0
+    def bind(self, engine: EventEngine) -> None:
+        """Attach this trace to an event engine and schedule its first
+        dispatch.  Several Simulations sharing one engine + fabric
+        interleave their dispatches in global time order."""
+        self.engine = engine
+        self._idx = 0
+        self._prev_decide_end = 0.0
+        self._makespan = 0.0
+        self.done = False
+        if self.trace.instrs:
+            engine.schedule(0.0, EventKind.DISPATCH, self._on_dispatch)
+        elif (self.cfg.move_outputs_to_host
+              and not self.policy.ignores_contention):
+            # degenerate empty trace: the epilogue flush still runs
+            engine.schedule(0.0, EventKind.EPILOGUE, self._on_epilogue)
+        else:
+            self.done = True
 
-        for instr in self.trace.instrs:
-            self._cursor_iid = instr.iid
-            deps_ready = max((self.completion[d] for d in instr.deps
-                              if d in self.completion), default=0.0)
-            if ideal:
-                # Ideal (§5.3): zero data-movement latency, zero decision
-                # overhead, fastest resource per instruction.  Execution
-                # still occupies the (contention-free scheduled) compute
-                # units — an upper bound on realizable offloading.
-                view = SystemView(0.0, lambda r: 0.0, lambda i: deps_ready,
-                                  self.pages.location)
-                decision = self.policy.select(instr, view)
-                r = decision.resource
-                lat = compute_latency_ns(instr, r, spec)
-                acq = self.pools[r].acquire(deps_ready, lat)
-                start, end = acq.start, acq.end
-                self.compute_energy += compute_energy_nj(instr, r, spec, lat)
-                self.pages.record_write(instr.dst, HOME[r])
-                self.completion[instr.iid] = end
-                self.resource_counts[r] += 1
-                self.decisions.append(DecisionRecord(
-                    instr.iid, instr.op, r, start, start, end, 0.0))
-                makespan = max(makespan, end)
-                continue
+    def _deps_ready(self, instr: VectorInstr) -> float:
+        return max((self.completion[d] for d in instr.deps
+                    if d in self.completion), default=0.0)
 
-            if self.policy.dynamic:
-                pending = any(d in self.completion
-                              and self.completion[d] > prev_decide_end
-                              for d in instr.deps)
-                overhead = decision_overhead_ns(
-                    instr, spec, l2p_lookup=self.pages.lookup_latency_ns,
-                    has_pending_deps=pending)
+    def _after_instr(self, instr_end: float) -> None:
+        """Schedule the next dispatch (or the epilogue) after one
+        instruction has been issued."""
+        self._makespan = max(self._makespan, instr_end)
+        self._idx += 1
+        engine = self.engine
+        if self._idx < len(self.trace.instrs):
+            if self.policy.ignores_contention:
+                nxt = self._deps_ready(self.trace.instrs[self._idx])
+                when = max(engine.now, nxt)
             else:
-                # compile-time-mapped policy: queue push only
-                overhead = STATIC_DISPATCH_NS
-            # in-order issue, pipelined across the offloader cores
-            acq = self.offloader.acquire(prev_decide_end, overhead)
-            now, decide_end = acq.start, acq.end
-            prev_decide_end = acq.start
-            self.overhead_total += overhead
+                # in-order issue, pipelined across the offloader cores: the
+                # next decision may start once this one occupies its core.
+                when = max(engine.now, self._prev_decide_end)
+            engine.schedule(when, EventKind.DISPATCH, self._on_dispatch)
+        elif self.cfg.move_outputs_to_host and not self.policy.ignores_contention:
+            engine.schedule(max(engine.now, self._makespan),
+                            EventKind.EPILOGUE, self._on_epilogue)
+        else:
+            self.done = True
 
-            view = SystemView(
-                now_ns=now,
-                queue_delay_ns=lambda r: self.pools[r].queue_delay_ns(now),
-                dep_ready_ns=lambda i: deps_ready,
-                location_of=self.pages.location,
-                move_queue_ns=lambda src, dst: self._path_queue_ns(src, dst, now),
-            )
+    def _on_dispatch(self, ev: Event) -> None:
+        """Offloader core picks up the next instruction in program order:
+        decide (§4.5 overhead), move operands, book execution."""
+        spec = self.spec
+        instr = self.trace.instrs[self._idx]
+        self._cursor_iid = instr.iid
+        deps_ready = self._deps_ready(instr)
+
+        if self.policy.ignores_contention:
+            # Ideal (§5.3): zero data-movement latency, zero decision
+            # overhead, fastest resource per instruction.  Execution
+            # still occupies the (contention-free scheduled) compute
+            # units — an upper bound on realizable offloading.
+            view = SystemView(0.0, lambda r: 0.0, lambda i: deps_ready,
+                              self.pages.location, tenant=self.tenant)
             decision = self.policy.select(instr, view)
             r = decision.resource
-
-            # operand movement to the resource's home (overlapped per page)
-            ready = max(decide_end, deps_ready)
-            home = HOME[r]
-            move_end = ready
-            dm_ns = 0.0
-            for s in instr.srcs:
-                if self.pages.location(s) != home:
-                    t = self._move_page(s, home, ready)
-                    dm_ns += t - ready
-                    move_end = max(move_end, t)
-                else:
-                    self._touch(s, home, ready)
-
-            start, end = self._exec_on(instr, r, move_end)
-
-            # transient-fault injection (§4.4 failure handling): replay on
-            # another resource using the latest data version.
-            if self.cfg.fail_rate > 0.0 and \
-                    _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate:
-                self.replays += 1
-                alts = [x for x in self.policy.candidates
-                        if x != r and decision.features.get(x) is not None
-                        and decision.features[x].supported] or [Resource.ISP]
-                alt = min(alts, key=lambda x: decision.features[x].latency_comp
-                          if x in decision.features else float("inf"))
-                ready2 = end
-                for s in instr.srcs:
-                    if self.pages.location(s) != HOME[alt]:
-                        ready2 = max(ready2, self._move_page(s, HOME[alt], end))
-                _, end = self._exec_on(instr, alt, ready2)
-                r = alt
-
+            lat = compute_latency_ns(instr, r, spec)
+            acq = self.pools[r].acquire(deps_ready, lat)
+            start, end = acq.start, acq.end
+            self.compute_energy += compute_energy_nj(instr, r, spec, lat)
+            self.pages.record_write(instr.dst, HOME[r])
             self.completion[instr.iid] = end
             self.resource_counts[r] += 1
             self.decisions.append(DecisionRecord(
-                instr.iid, instr.op, r, now, start, end, dm_ns,
-                replayed=self.cfg.fail_rate > 0.0
-                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
-            makespan = max(makespan, end)
+                instr.iid, instr.op, r, start, start, end, 0.0))
+            self._after_instr(end)
+            return
 
-        # epilogue: results become visible to the host (§4.4 trigger ii)
-        if self.cfg.move_outputs_to_host and not ideal:
-            for pl in self.trace.output_pages:
-                for pid in pl:
-                    if self.pages.location(pid) != Location.HOST:
-                        makespan = max(
-                            makespan, self._move_page(pid, Location.HOST, makespan))
+        if self.policy.dynamic:
+            pending = any(d in self.completion
+                          and self.completion[d] > self._prev_decide_end
+                          for d in instr.deps)
+            overhead = decision_overhead_ns(
+                instr, spec, l2p_lookup=self.pages.lookup_latency_ns,
+                has_pending_deps=pending)
+        else:
+            # compile-time-mapped policy: queue push only
+            overhead = STATIC_DISPATCH_NS
+        acq = self.offloader.acquire(self._prev_decide_end, overhead)
+        now, decide_end = acq.start, acq.end
+        self._prev_decide_end = acq.start
+        self.overhead_total += overhead
 
-        busy = {p.name: p.busy_ns for p in
-                list(self.pools.values()) + [self.offloader, self.channels,
-                                             self.dram_bus, self.pcie]}
+        view = SystemView(
+            now_ns=now,
+            queue_delay_ns=lambda r: self.pools[r].queue_delay_ns(now),
+            dep_ready_ns=lambda i: deps_ready,
+            location_of=self.pages.location,
+            move_queue_ns=lambda src, dst: self._path_queue_ns(src, dst, now),
+            tenant=self.tenant,
+        )
+        decision = self.policy.select(instr, view)
+        r = decision.resource
+
+        # operand movement to the resource's home (overlapped per page)
+        ready = max(decide_end, deps_ready)
+        home = HOME[r]
+        move_end = ready
+        dm_ns = 0.0
+        for s in instr.srcs:
+            if self.pages.location(s) != home:
+                t = self._move_page(s, home, ready)
+                dm_ns += t - ready
+                move_end = max(move_end, t)
+            else:
+                self._touch(s, home, ready)
+
+        start, end = self._exec_on(instr, r, move_end)
+
+        # transient-fault injection (§4.4 failure handling): replay on
+        # another resource using the latest data version.
+        if self.cfg.fail_rate > 0.0 and \
+                _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate:
+            self.replays += 1
+            alts = [x for x in self.policy.candidates
+                    if x != r and decision.features.get(x) is not None
+                    and decision.features[x].supported] or [Resource.ISP]
+            alt = min(alts, key=lambda x: decision.features[x].latency_comp
+                      if x in decision.features else float("inf"))
+            ready2 = end
+            for s in instr.srcs:
+                if self.pages.location(s) != HOME[alt]:
+                    ready2 = max(ready2, self._move_page(s, HOME[alt], end))
+            _, end = self._exec_on(instr, alt, ready2)
+            r = alt
+
+        self.completion[instr.iid] = end
+        self.resource_counts[r] += 1
+        self.decisions.append(DecisionRecord(
+            instr.iid, instr.op, r, now, start, end, dm_ns,
+            replayed=self.cfg.fail_rate > 0.0
+            and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
+        self._after_instr(end)
+
+    def _on_epilogue(self, ev: Event) -> None:
+        """End of trace: results become visible to the host (§4.4 ii)."""
+        makespan = self._makespan
+        for pl in self.trace.output_pages:
+            for pid in pl:
+                if self.pages.location(pid) != Location.HOST:
+                    makespan = max(
+                        makespan, self._move_page(pid, Location.HOST, makespan))
+        self._makespan = makespan
+        self.done = True
+
+    def result(self) -> SimResult:
+        """Collect the per-trace result (call after the engine drained)."""
         return SimResult(
             policy=self.policy.name, workload=self.trace.name,
-            makespan_ns=makespan, n_instrs=len(self.trace.instrs),
+            makespan_ns=self._makespan, n_instrs=len(self.trace.instrs),
             compute_energy_nj=self.compute_energy,
             movement_energy_nj=self.movement_energy,
             decision_overhead_ns_total=self.overhead_total,
             decisions=self.decisions,
             resource_counts={r: c for r, c in self.resource_counts.items() if c},
-            resource_busy_ns=busy,
+            resource_busy_ns=self.fabric.busy_ns(),
             coherence_syncs=self.coherence_syncs, evictions=self.evictions,
-            replays=self.replays, colocations=self.colocations)
+            replays=self.replays, colocations=self.colocations,
+            tenant=self.tenant)
+
+    def run(self) -> SimResult:
+        """Single-tenant convenience: drive a private event loop to empty."""
+        engine = EventEngine()
+        self.bind(engine)
+        engine.run()
+        return self.result()
 
 
 def simulate(trace: Trace, policy: str | Policy,
              spec: SSDSpec = DEFAULT_SSD,
              config: Optional[SimConfig] = None) -> SimResult:
-    """Run one workload trace under one offloading policy."""
+    """Run one workload trace under one offloading policy.
+
+    The single-tenant special case of the event engine; for concurrent
+    traces sharing the SSD see :func:`repro.sim.tenancy.simulate_mix`.
+    """
     if isinstance(policy, str):
         policy = make_policy(policy, spec)
     return Simulation(trace, policy, spec, config).run()

@@ -6,11 +6,16 @@ PCIe link) and the offloader core itself — is a :class:`ServerPool` with k
 units.  Work items acquire a unit FIFO; the pool tracks per-unit
 free-times, total busy time, and the queue-delay feature (Table 1,
 ``delay_queue``) the cost function reads.
+
+:class:`Fabric` groups one full SSD's worth of pools so that several
+concurrent tenants (and a background host I/O stream) can contend for the
+*same* channels, dies, DRAM bus and PCIe link — the multi-tenant regime of
+:func:`repro.sim.tenancy.simulate_mix`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -61,3 +66,55 @@ class ServerPool:
         if unit is None:
             unit = min(range(self.units), key=lambda u: self.free[u])
         return max(ready, self.free[unit])
+
+    @property
+    def horizon_ns(self) -> float:
+        """Latest booked completion across units (end of all queued work)."""
+        return max(self.free)
+
+
+class Fabric:
+    """One SSD's contended hardware: compute pools plus interconnects.
+
+    A :class:`~repro.sim.machine.Simulation` owns a private Fabric for
+    single-trace runs; :func:`repro.sim.tenancy.simulate_mix` builds one
+    Fabric and hands it to every tenant so all traces (and the synthetic
+    host I/O stream) share channels, dies, the DRAM bus and the PCIe link.
+    """
+
+    def __init__(self, spec, pud_units: int = 8):
+        # late import: repro.core.isa imports hw specs, no cycle via servers
+        from repro.core.isa import Resource
+        f = spec.flash
+        self.spec = spec
+        self.pools: Dict = {
+            Resource.ISP: ServerPool("isp", spec.isp.compute_cores),
+            Resource.PUD: ServerPool("pud", pud_units),
+            # one pool models the dies: IFP execution, read senses and
+            # program write-backs all occupy a die (a die cannot sense
+            # while programming) — so die congestion is visible to the
+            # cost function's queue feature.
+            Resource.IFP: ServerPool("ifp_die", f.total_dies),
+            Resource.HOST_CPU: ServerPool("cpu", 1),
+            Resource.HOST_GPU: ServerPool("gpu", 1),
+        }
+        # computation mode (§4.4) suspends host I/O: every controller core
+        # not used for ISP compute runs offloading/transformation tasks.
+        self.offloader = ServerPool(
+            "offloader", max(1, spec.isp.cores - spec.isp.compute_cores))
+        self.channels = ServerPool("flash_chan", f.channels)
+        self.dies = self.pools[Resource.IFP]   # alias: same physical units
+        self.dram_bus = ServerPool("dram_bus", 1)
+        self.pcie = ServerPool("pcie", 1)
+
+    def all_pools(self) -> List[ServerPool]:
+        return list(self.pools.values()) + [
+            self.offloader, self.channels, self.dram_bus, self.pcie]
+
+    def busy_ns(self) -> Dict[str, float]:
+        return {p.name: p.busy_ns for p in self.all_pools()}
+
+    @property
+    def horizon_ns(self) -> float:
+        """End of all booked work anywhere in the fabric."""
+        return max(p.horizon_ns for p in self.all_pools())

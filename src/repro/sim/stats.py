@@ -1,5 +1,10 @@
 """Simulation results: makespan, energy breakdown, latency percentiles,
-offloading-decision logs (Figs. 7-10 raw data)."""
+offloading-decision logs (Figs. 7-10 raw data).
+
+Multi-tenant additions: :class:`MixResult` bundles one :class:`SimResult`
+per tenant plus the fairness / interference metrics of the shared-SSD
+regime — per-tenant slowdown vs. a solo run, Jain's fairness index over
+the slowdowns, and host-I/O tail latency (:class:`HostIOStats`)."""
 from __future__ import annotations
 
 import dataclasses
@@ -46,6 +51,7 @@ class SimResult:
     evictions: int
     replays: int
     colocations: int
+    tenant: str = ""                 # tenant id in a simulate_mix run
 
     @property
     def total_energy_nj(self) -> float:
@@ -81,3 +87,99 @@ class SimResult:
             "avg_overhead_us": self.avg_decision_overhead_ns / 1e3,
             "instrs": self.n_instrs,
         }
+
+
+@dataclasses.dataclass
+class HostIOStats:
+    """Latency accounting for the synthetic host read/write I/O stream
+    competing with NDP traffic for channels, dies and the PCIe link."""
+
+    n_reads: int
+    n_writes: int
+    latencies_ns: List[float]
+
+    @property
+    def n_requests(self) -> int:
+        return self.n_reads + self.n_writes
+
+    @property
+    def mean_ns(self) -> float:
+        if not self.latencies_ns:
+            return 0.0
+        return sum(self.latencies_ns) / len(self.latencies_ns)
+
+    def p(self, pct: float) -> float:
+        return percentile(self.latencies_ns, pct)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "io_requests": self.n_requests,
+            "io_reads": self.n_reads,
+            "io_mean_us": self.mean_ns / 1e3,
+            "io_p50_us": self.p(50) / 1e3,
+            "io_p99_us": self.p(99) / 1e3,
+            "io_p999_us": self.p(99.9) / 1e3,
+        }
+
+
+def jain_fairness(values: List[float]) -> float:
+    """Jain's fairness index over per-tenant slowdowns: 1.0 = perfectly
+    fair, 1/n = one tenant monopolizes the fabric."""
+    if not values:
+        return 1.0
+    num = sum(values) ** 2
+    den = len(values) * sum(v * v for v in values)
+    return num / den if den > 0 else 1.0
+
+
+@dataclasses.dataclass
+class MixResult:
+    """Result of a multi-tenant run (:func:`repro.sim.tenancy.simulate_mix`).
+
+    ``tenants`` holds one :class:`SimResult` per trace (keyed by
+    ``SimResult.tenant``); ``solo_makespan_ns`` the corresponding
+    uncontended makespans when ``compute_solo`` was requested, enabling
+    the per-tenant *slowdown* interference metric.
+    """
+
+    tenants: List[SimResult]
+    solo_makespan_ns: Dict[str, float]
+    host_io: Optional[HostIOStats]
+    fabric_busy_ns: Dict[str, float]
+    makespan_ns: float               # end of all tenants + host I/O
+
+    def tenant(self, name: str) -> SimResult:
+        for r in self.tenants:
+            if r.tenant == name:
+                return r
+        raise KeyError(name)
+
+    @property
+    def slowdowns(self) -> Dict[str, float]:
+        """Per-tenant makespan inflation vs. running alone on the SSD."""
+        out = {}
+        for r in self.tenants:
+            solo = self.solo_makespan_ns.get(r.tenant)
+            if solo:
+                out[r.tenant] = r.makespan_ns / solo
+        return out
+
+    @property
+    def fairness(self) -> float:
+        return jain_fairness(list(self.slowdowns.values()))
+
+    @property
+    def total_energy_nj(self) -> float:
+        return sum(r.total_energy_nj for r in self.tenants)
+
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "tenants": len(self.tenants),
+            "makespan_ms": self.makespan_ns / 1e6,
+            "energy_mj": self.total_energy_nj / 1e6,
+            "fairness": round(self.fairness, 4),
+            "slowdowns": {k: round(v, 3) for k, v in self.slowdowns.items()},
+        }
+        if self.host_io is not None:
+            out.update(self.host_io.summary())
+        return out

@@ -1,0 +1,190 @@
+"""Multi-tenant trace interleaving on one shared SSD (§5 scaled out).
+
+The paper evaluates one trace at a time; the regime the ROADMAP targets —
+heavy traffic from many users — means *several* NDP programs plus ordinary
+host read/write I/O contending for the same channels, dies, DRAM bus and
+PCIe link.  :func:`simulate_mix` builds one shared
+:class:`~repro.sim.servers.Fabric`, binds every trace's
+:class:`~repro.sim.machine.Simulation` to one
+:class:`~repro.sim.events.EventEngine`, and optionally injects a synthetic
+:class:`HostIOStream`; dispatches interleave in global time order, so
+completion is out-of-order across tenants and the interference is visible
+in per-tenant slowdown, Jain fairness and host-I/O tail latency
+(:class:`~repro.sim.stats.MixResult`).
+
+API::
+
+    mix = simulate_mix([trace_a, trace_b], "conduit",
+                       io_stream=HostIOStream(rate_iops=50_000))
+    mix.slowdowns        # {tenant: makespan / solo_makespan}
+    mix.host_io.p(99)    # host I/O tail latency under NDP interference
+
+``simulate_mix([trace])`` with no I/O stream reproduces
+:func:`~repro.sim.machine.simulate` exactly (the equivalence law in
+``tests/test_events.py``).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.core.policies import Policy, make_policy
+from repro.core.vectorize import Trace
+from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
+from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.machine import SimConfig, Simulation, _hash01, simulate
+from repro.sim.servers import Fabric
+from repro.sim.stats import HostIOStats, MixResult
+
+PolicyLike = Union[str, Policy]
+
+
+@dataclasses.dataclass(frozen=True)
+class HostIOStream:
+    """Synthetic background host I/O: page-sized NVMe reads/writes.
+
+    Arrivals follow a deterministic pseudo-Poisson process (inverse-CDF
+    exponential gaps from a hashed uniform stream), so identical seeds
+    replay identical workloads.  Each request occupies a hashed die and
+    its channel plus the PCIe link — the same contended units NDP operand
+    movement uses."""
+
+    rate_iops: float = 50_000.0      # mean arrival rate (requests / second)
+    read_fraction: float = 0.7       # remainder are (SLC-program) writes
+    n_requests: int = 256
+    seed: int = 0xC0FFEE
+    start_ns: float = 0.0
+
+    def arrival_times_ns(self) -> List[float]:
+        mean_gap = 1e9 / max(1e-9, self.rate_iops)
+        t = self.start_ns
+        out = []
+        for i in range(self.n_requests):
+            u = min(0.999999, max(1e-9, _hash01(i, self.seed)))
+            t += -mean_gap * math.log(1.0 - u)
+            out.append(t)
+        return out
+
+
+class _HostIOModel:
+    """Binds a :class:`HostIOStream` to the engine + fabric."""
+
+    def __init__(self, stream: HostIOStream, fabric: Fabric,
+                 spec: SSDSpec, engine: EventEngine):
+        self.stream = stream
+        self.fabric = fabric
+        self.spec = spec
+        self.engine = engine
+        self.latency_by_req: Dict[int, float] = {}
+        self.n_reads = 0
+        self.n_writes = 0
+        self.last_complete_ns = 0.0
+        for i, t in enumerate(stream.arrival_times_ns()):
+            engine.schedule(t, EventKind.IO_ARRIVAL, self._on_arrival,
+                            payload=i)
+
+    def _on_arrival(self, ev: Event) -> None:
+        i = ev.payload
+        s, f, h = self.stream, self.spec.flash, self.spec.host
+        nb = self.spec.page_size
+        die = int(_hash01(i, s.seed ^ 0xD1E) * f.total_dies) % f.total_dies
+        chan = die % f.channels
+        is_read = _hash01(i, s.seed ^ 0x4EAD) < s.read_fraction
+        now = self.engine.now
+        xfer = f.t_dma_ns + nb * f.channel_ns_per_byte
+        link = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
+        if is_read:
+            self.n_reads += 1
+            t = self.fabric.dies.acquire(now, f.t_read_ns, unit=die).end
+            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
+            t = self.fabric.pcie.acquire(t, link).end
+        else:
+            self.n_writes += 1
+            t = self.fabric.pcie.acquire(now, link).end
+            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
+            t = self.fabric.dies.acquire(t, f.t_prog_ns, unit=die).end
+        self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
+                             payload=(i, now))
+
+    def _on_complete(self, ev: Event) -> None:
+        i, arrival = ev.payload
+        self.latency_by_req[i] = self.engine.now - arrival
+        self.last_complete_ns = max(self.last_complete_ns, self.engine.now)
+
+    def stats(self) -> HostIOStats:
+        # latencies indexed by request id (not completion order), so two
+        # runs of the same stream compare request-for-request
+        lats = [self.latency_by_req[i] for i in sorted(self.latency_by_req)]
+        return HostIOStats(n_reads=self.n_reads, n_writes=self.n_writes,
+                           latencies_ns=lats)
+
+
+def _as_policies(policies: Union[PolicyLike, Sequence[PolicyLike]],
+                 n: int, spec: SSDSpec) -> List[Policy]:
+    if isinstance(policies, (str, Policy)):
+        policies = [policies] * n
+    if len(policies) != n:
+        raise ValueError(f"{len(policies)} policies for {n} traces")
+    return [make_policy(p, spec) if isinstance(p, str) else p
+            for p in policies]
+
+
+def simulate_mix(traces: Sequence[Trace],
+                 policies: Union[PolicyLike, Sequence[PolicyLike]] = "conduit",
+                 io_stream: Optional[HostIOStream] = None,
+                 spec: SSDSpec = DEFAULT_SSD,
+                 config: Optional[SimConfig] = None,
+                 compute_solo: bool = True,
+                 engine: Optional[EventEngine] = None) -> MixResult:
+    """Run several traces concurrently on one SSD, plus optional host I/O.
+
+    ``policies`` is one policy (applied to every trace) or one per trace;
+    strings go through :func:`make_policy`.  ``compute_solo`` additionally
+    runs each (trace, policy) alone on a private fabric to provide the
+    solo makespans behind :attr:`MixResult.slowdowns` — disable it for
+    large sweeps where only the contended numbers matter.  Pass a
+    ``record=True`` :class:`EventEngine` to capture the event timeline.
+    """
+    traces = list(traces)
+    if not traces:
+        raise ValueError("simulate_mix needs at least one trace")
+    cfg = config or SimConfig()
+    pols = _as_policies(policies, len(traces), spec)
+
+    # A Trace owns its PageTable (mutable residency state): tenants must
+    # not share one, so duplicate Trace objects get a deep copy.
+    seen: set = set()
+    tenant_traces: List[Trace] = []
+    for tr in traces:
+        if id(tr) in seen:
+            tr = copy.deepcopy(tr)
+        seen.add(id(tr))
+        tenant_traces.append(tr)
+
+    names = [f"t{i}:{tr.name or 'trace'}"
+             for i, tr in enumerate(tenant_traces)]
+
+    solo: Dict[str, float] = {}
+    if compute_solo:
+        for name, tr, pol in zip(names, tenant_traces, pols):
+            solo[name] = simulate(tr, pol, spec, cfg).makespan_ns
+
+    engine = engine or EventEngine()
+    fabric = Fabric(spec, pud_units=cfg.pud_units)
+    sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name)
+            for name, tr, pol in zip(names, tenant_traces, pols)]
+    for sim in sims:
+        sim.bind(engine)
+    io = (_HostIOModel(io_stream, fabric, spec, engine)
+          if io_stream is not None else None)
+    engine.run()
+
+    results = [sim.result() for sim in sims]
+    makespan = max([r.makespan_ns for r in results]
+                   + ([io.last_complete_ns] if io else []))
+    return MixResult(tenants=results, solo_makespan_ns=solo,
+                     host_io=io.stats() if io else None,
+                     fabric_busy_ns=fabric.busy_ns(),
+                     makespan_ns=makespan)

@@ -1,0 +1,41 @@
+"""Shared synthetic-trace builder for the simulator test modules.
+
+Lives outside any test module so both the hypothesis property suite
+(`test_sim_properties.py`, skipped when hypothesis is absent) and the
+always-on fallback/event-engine suites can use it.
+"""
+from repro.core.isa import VectorInstr
+from repro.core.mapping import PageTable
+from repro.core.vectorize import Trace
+from repro.hw.ssd_spec import DEFAULT_SSD
+
+SPEC = DEFAULT_SSD
+PAGE = SPEC.page_size
+OPS = ["and", "or", "xor", "add", "sub", "mul", "cmp", "max", "copy"]
+
+
+def synth_trace(op_ids, n_arrays=4, pages_per_array=2, name="synth",
+                outputs=True):
+    """Deterministic synthetic trace from a list of op indices.
+
+    ``outputs=False`` emits no output pages — with an empty ``op_ids`` that
+    yields a trace that books no resources at all (a pure-I/O baseline)."""
+    pt = PageTable(SPEC)
+    arrays = [pt.alloc_array(pages_per_array * PAGE, name=f"a{i}")
+              for i in range(n_arrays)]
+    flat = [p for a in arrays for p in a]
+    instrs = []
+    producer = {}
+    for i, oi in enumerate(op_ids):
+        op = OPS[oi % len(OPS)]
+        s1 = flat[(oi * 7 + i) % len(flat)]
+        s2 = flat[(oi * 13 + 3 * i) % len(flat)]
+        dst = flat[(oi * 5 + 2 * i + 1) % len(flat)]
+        deps = tuple(sorted({producer[s] for s in (s1, s2, dst)
+                             if s in producer}))
+        instrs.append(VectorInstr(iid=i, op=op, vlen=PAGE, elem_bytes=1,
+                                  srcs=(s1, s2), dst=dst, deps=deps))
+        producer[dst] = i
+    return Trace(instrs=instrs, pages=pt,
+                 input_pages={"in0": arrays[0]},
+                 output_pages=[arrays[-1]] if outputs else [], name=name)

@@ -26,6 +26,11 @@ def _extras(cfg, B, S, rng):
     return kw
 
 
+# The per-arch matrix compiles ~10 reduced models (several minutes of XLA
+# time): slow tier — even one reduced model compiles for 10+ s on a small
+# CPU box.  The fast tier's model canary is
+# test_models.py::test_decode_matches_full_forward[tinyllama-1.1b].
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCHS)
 def test_smoke_forward_train_decode(arch):
     cfg = configs.get(arch).reduced()

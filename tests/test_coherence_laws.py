@@ -1,0 +1,129 @@
+"""Deterministic fallback for the simulator coherence/conservation laws.
+
+Runs in bare environments (no ``hypothesis``): the same invariants as
+``test_sim_properties.py`` but over a small fixed family of synthetic
+traces instead of randomized examples, plus the PageTable unit laws.
+"""
+import numpy as np
+import pytest
+
+from repro.core.isa import Location
+from repro.core.mapping import PageTable
+from repro.hw.ssd_spec import DEFAULT_SSD
+from repro.sim import SimConfig, simulate
+
+from _synth import synth_trace
+
+SPEC = DEFAULT_SSD
+PAGE = SPEC.page_size
+
+# A fixed family standing in for the hypothesis-generated op-id lists:
+# short, long, repetitive, and skewed-mix cases.
+FIXED_EXAMPLES = [
+    [0],
+    list(range(40)),
+    [3] * 25,
+    [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 3,
+]
+
+
+@pytest.mark.parametrize("op_ids", FIXED_EXAMPLES, ids=["one", "ramp",
+                                                        "repeat", "mixed"])
+def test_completion_monotone_and_conserved(op_ids):
+    tr = synth_trace(op_ids)
+    for pol in ("conduit", "dm", "bw"):
+        r = simulate(tr, pol)
+        assert r.n_instrs == len(op_ids)
+        assert len(r.decisions) == len(op_ids)
+        for d in r.decisions:
+            assert d.t_decide <= d.t_start <= d.t_end
+            assert np.isfinite(d.t_end)
+        assert sum(r.resource_counts.values()) == len(op_ids)
+        assert r.makespan_ns >= max(d.t_end for d in r.decisions) - 1e-6
+
+
+@pytest.mark.parametrize("op_ids", FIXED_EXAMPLES[1:], ids=["ramp", "repeat",
+                                                            "mixed"])
+def test_deps_respected(op_ids):
+    tr = synth_trace(op_ids)
+    r = simulate(tr, "conduit")
+    end_by_iid = {d.iid: d.t_end for d in r.decisions}
+    start_by_iid = {d.iid: d.t_start for d in r.decisions}
+    for ins in tr.instrs:
+        for dep in ins.deps:
+            assert start_by_iid[ins.iid] >= end_by_iid[dep] - 1e-6, \
+                "consumer started before producer finished"
+
+
+def test_single_owner_invariant():
+    """§4.4 coherence: one owner per logical page, one-byte versions."""
+    tr = synth_trace(list(range(40)))
+    simulate(tr, "conduit")
+    for ent in tr.pages.entries.values():
+        assert ent.owner in (Location.FLASH, Location.DRAM, Location.CTRL,
+                             Location.HOST)
+        assert 0 <= ent.version <= 255
+
+
+def test_replay_on_fault():
+    tr = synth_trace(list(range(5, 45)))
+    r = simulate(tr, "conduit", config=SimConfig(fail_rate=0.3, seed=2))
+    assert r.replays > 0
+    assert sum(r.resource_counts.values()) == 40
+    assert r.makespan_ns > 0
+
+
+def test_energy_nonnegative_and_decomposed():
+    tr = synth_trace(FIXED_EXAMPLES[3])
+    r = simulate(tr, "dm")
+    assert r.compute_energy_nj >= 0
+    assert r.movement_energy_nj >= 0
+    assert r.total_energy_nj == pytest.approx(
+        r.compute_energy_nj + r.movement_energy_nj)
+
+
+def test_ideal_ignores_movement():
+    tr = synth_trace(list(range(30)))
+    ideal = simulate(tr, "ideal")
+    assert ideal.movement_energy_nj == 0.0
+    assert ideal.avg_decision_overhead_ns == 0.0
+
+
+def test_pressure_increases_evictions():
+    tr = synth_trace(list(range(40)), n_arrays=8, pages_per_array=8)
+    roomy = simulate(tr, "conduit",
+                     config=SimConfig(dram_capacity_pages=10_000,
+                                      host_capacity_pages=10_000))
+    tight = simulate(tr, "conduit",
+                     config=SimConfig(dram_capacity_pages=33,
+                                      host_capacity_pages=33))
+    assert tight.evictions >= roomy.evictions
+
+
+# -- PageTable unit laws -------------------------------------------------------
+
+def test_coherence_owner_transitions():
+    pt = PageTable(SPEC)
+    pid = pt.alloc_array(PAGE)[0]
+    assert pt[pid].owner == Location.FLASH and not pt[pid].dirty
+    pt.record_write(pid, Location.DRAM)
+    assert pt[pid].owner == Location.DRAM and pt[pid].dirty
+    v1 = pt[pid].version
+    pt.record_write(pid, Location.DRAM)     # same owner: version bump only
+    assert pt[pid].version == v1 + 1
+    assert pt.commit(pid) is True
+    assert pt[pid].owner == Location.FLASH and not pt[pid].dirty
+    assert pt[pid].version == 0
+    assert pt.commit(pid) is False          # idempotent
+
+
+def test_colocate_idempotent():
+    pt = PageTable(SPEC)
+    a = pt.alloc_array(2 * PAGE)
+    b = pt.alloc_array(2 * PAGE)
+    pids = [a[0], b[0]]
+    assert not pt.same_block(pids)
+    moved = pt.co_locate(pids)
+    assert moved == 1
+    assert pt.same_block(pids)
+    assert pt.co_locate(pids) == 0

@@ -1,0 +1,194 @@
+"""Event-engine laws: determinism, single-tenant equivalence, conservation.
+
+The three acceptance properties of the discrete-event core:
+
+(a) determinism — identical ``SimResult``/``MixResult`` across repeated
+    runs and across I/O-stream seeds being held fixed;
+(b) equivalence — ``simulate_mix([trace])`` with no host I/O reproduces
+    ``simulate(trace)`` makespan/energy for every policy in
+    ``make_policy`` (the event engine's single-source degeneration);
+(c) conservation — per-tenant instruction counts are preserved, pool busy
+    time never exceeds units x schedule horizon, and the processed event
+    timeline is monotone in time.
+"""
+import pytest
+
+from repro.core.policies import ALL_POLICIES
+from repro.hw.ssd_spec import DEFAULT_SSD
+from repro.sim import (EventEngine, EventKind, HostIOStream, SimConfig,
+                       simulate, simulate_mix)
+from repro.workloads import get_trace
+
+from _synth import synth_trace
+
+RAMP = list(range(40))
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+
+
+# -- the engine itself ---------------------------------------------------------
+
+def test_engine_orders_events_and_breaks_ties_fifo():
+    eng = EventEngine(record=True)
+    seen = []
+    eng.schedule(5.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
+                 payload="late")
+    eng.schedule(1.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
+                 payload="early")
+    eng.schedule(5.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
+                 payload="late2")
+    eng.run()
+    assert seen == ["early", "late", "late2"]   # time order, FIFO on ties
+    assert eng.processed == 3
+    assert eng.now == 5.0
+
+
+def test_engine_rejects_time_travel():
+    eng = EventEngine()
+    eng.schedule(100.0, EventKind.TIMER, lambda ev: None)
+    eng.run()
+    with pytest.raises(ValueError):
+        eng.schedule(10.0, EventKind.TIMER, lambda ev: None)
+
+
+def test_engine_handlers_can_chain():
+    eng = EventEngine()
+    ticks = []
+
+    def tick(ev):
+        ticks.append(eng.now)
+        if len(ticks) < 5:
+            eng.schedule(eng.now + 10.0, EventKind.TIMER, tick)
+
+    eng.schedule(0.0, EventKind.TIMER, tick)
+    eng.run()
+    assert ticks == [0.0, 10.0, 20.0, 30.0, 40.0]
+
+
+# -- (a) determinism -----------------------------------------------------------
+
+def test_mix_deterministic_across_runs():
+    io = HostIOStream(rate_iops=80_000, n_requests=64, seed=7)
+    results = []
+    for _ in range(2):
+        a = synth_trace(RAMP, name="A")
+        b = synth_trace(MIXED, name="B")
+        results.append(simulate_mix([a, b], "conduit", io_stream=io))
+    r1, r2 = results
+    assert r1.makespan_ns == pytest.approx(r2.makespan_ns, rel=1e-12)
+    assert r1.total_energy_nj == pytest.approx(r2.total_energy_nj, rel=1e-12)
+    for t1, t2 in zip(r1.tenants, r2.tenants):
+        assert t1.makespan_ns == pytest.approx(t2.makespan_ns, rel=1e-12)
+        assert t1.resource_counts == t2.resource_counts
+    assert r1.host_io.latencies_ns == pytest.approx(r2.host_io.latencies_ns)
+
+
+def test_io_stream_seed_changes_arrivals_deterministically():
+    s1 = HostIOStream(n_requests=32, seed=1)
+    s2 = HostIOStream(n_requests=32, seed=2)
+    assert s1.arrival_times_ns() == s1.arrival_times_ns()
+    assert s1.arrival_times_ns() != s2.arrival_times_ns()
+    times = s1.arrival_times_ns()
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+# -- (b) equivalence -----------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_single_trace_mix_matches_simulate_synth(policy):
+    tr = synth_trace(MIXED)
+    solo = simulate(tr, policy)
+    mix = simulate_mix([tr], policy, compute_solo=False)
+    assert len(mix.tenants) == 1
+    got = mix.tenants[0]
+    assert got.makespan_ns == pytest.approx(solo.makespan_ns, rel=1e-9)
+    assert got.total_energy_nj == pytest.approx(solo.total_energy_nj, rel=1e-9)
+    assert got.resource_counts == solo.resource_counts
+
+
+@pytest.mark.parametrize("workload", ["jacobi1d", "aes"])
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_single_trace_mix_matches_simulate_workloads(workload, policy):
+    tr = get_trace(workload, "tiny")
+    solo = simulate(tr, policy)
+    mix = simulate_mix([tr], policy, compute_solo=False)
+    got = mix.tenants[0]
+    assert got.makespan_ns == pytest.approx(solo.makespan_ns, rel=1e-6)
+    assert got.total_energy_nj == pytest.approx(solo.total_energy_nj, rel=1e-6)
+
+
+# -- (c) conservation ----------------------------------------------------------
+
+def test_empty_trace_still_flushes_outputs():
+    """A trace with no instructions still runs the §4.4 epilogue (output
+    pages move to the host) — the seed simulator's behavior."""
+    tr = synth_trace([], name="empty")
+    r = simulate(tr, "conduit")
+    assert r.n_instrs == 0
+    assert r.makespan_ns > 0
+    assert r.movement_energy_nj > 0
+
+
+def test_mix_conserves_instruction_counts():
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    mix = simulate_mix([a, b], "conduit",
+                       io_stream=HostIOStream(n_requests=32),
+                       compute_solo=False)
+    by_tenant = {r.tenant: r for r in mix.tenants}
+    assert sum(by_tenant["t0:A"].resource_counts.values()) == len(RAMP)
+    assert sum(by_tenant["t1:B"].resource_counts.values()) == len(MIXED)
+    assert mix.host_io.n_requests == 32
+    assert len(mix.host_io.latencies_ns) == 32
+
+
+def test_busy_time_bounded_by_schedule_horizon():
+    """No pool can be busier than units x the end of its booked work."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    engine = EventEngine()
+    from repro.sim.servers import Fabric
+    from repro.sim.machine import Simulation
+    from repro.core.policies import make_policy
+    fabric = Fabric(DEFAULT_SSD)
+    sims = [Simulation(a, make_policy("conduit", DEFAULT_SSD),
+                       fabric=fabric, tenant="A"),
+            Simulation(b, make_policy("conduit", DEFAULT_SSD),
+                       fabric=fabric, tenant="B")]
+    for s in sims:
+        s.bind(engine)
+    engine.run()
+    horizon = fabric.horizon_ns
+    for pool in fabric.all_pools():
+        assert pool.busy_ns <= pool.units * horizon + 1e-6, pool.name
+    for s in sims:
+        assert s.result().makespan_ns <= horizon + 1e-6
+
+
+def test_event_timeline_monotone():
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    eng = EventEngine(record=True)
+    simulate_mix([a, b], "conduit",
+                 io_stream=HostIOStream(n_requests=48),
+                 compute_solo=False, engine=eng)
+    times = [t for t, _ in eng.log]
+    assert times, "engine recorded no events"
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    kinds = {k for _, k in eng.log}
+    assert EventKind.DISPATCH in kinds
+    assert EventKind.IO_ARRIVAL in kinds
+    assert EventKind.IO_COMPLETE in kinds
+    assert EventKind.EPILOGUE in kinds
+
+
+def test_decision_timestamps_monotone_per_tenant():
+    """In-order issue per tenant: decision times never regress even though
+    completions are out of order across resources/tenants."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    mix = simulate_mix([a, b], "conduit", compute_solo=False)
+    for r in mix.tenants:
+        decides = [d.t_decide for d in r.decisions]
+        assert decides == sorted(decides)
+        iids = [d.iid for d in r.decisions]
+        assert iids == sorted(iids)

@@ -17,7 +17,8 @@ def _rand(shape, dtype):
     return jnp.asarray(RNG.integers(-2**30, 2**30, size=shape, dtype=dtype))
 
 
-@pytest.mark.parametrize("n_ops", [2, 3, 7, 48])
+@pytest.mark.parametrize("n_ops", [2, 3, 7,
+                                   pytest.param(48, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("op", ["and", "or", "xor", "nand", "nor"])
 def test_mws_sweep(n_ops, op):
     stack = _rand((n_ops, 16, 256), np.int32)
@@ -53,8 +54,11 @@ def test_shift_add_sweep(bits, shape):
         np.asarray(ref.ref_shift_add_mul(a, b, bits)))
 
 
-@pytest.mark.parametrize("m,k,n", [(32, 64, 32), (128, 128, 128),
-                                   (64, 96, 160), (16, 32, 48)])
+@pytest.mark.parametrize("m,k,n", [
+    (32, 64, 32),
+    pytest.param(128, 128, 128, marks=pytest.mark.slow),
+    pytest.param(64, 96, 160, marks=pytest.mark.slow),
+    (16, 32, 48)])
 def test_int8_matmul_sweep(m, k, n):
     a = jnp.asarray(RNG.integers(-128, 128, size=(m, k), dtype=np.int8))
     b = jnp.asarray(RNG.integers(-128, 128, size=(k, n), dtype=np.int8))

@@ -16,9 +16,15 @@ def _mk(arch):
     return cfg, params
 
 
-@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen3-4b",
-                                  "deepseek-v2-236b", "zamba2-1.2b",
-                                  "xlstm-125m"])
+# one cheap arch stays in the fast tier; the rest of the cache-consistency
+# grid runs nightly
+@pytest.mark.parametrize("arch", [
+    "tinyllama-1.1b",
+    pytest.param("qwen3-4b", marks=pytest.mark.slow),
+    pytest.param("deepseek-v2-236b", marks=pytest.mark.slow),
+    pytest.param("zamba2-1.2b", marks=pytest.mark.slow),
+    pytest.param("xlstm-125m", marks=pytest.mark.slow),
+])
 def test_decode_matches_full_forward(arch):
     """Prefill(s-1 tokens) + decode(token s-1) must reproduce the logits of
     a full forward over s tokens — validates KV caches, MLA latent caches,
@@ -44,6 +50,7 @@ def test_decode_matches_full_forward(arch):
                                atol=0.15, rtol=0.05)
 
 
+@pytest.mark.slow
 def test_moe_capacity_and_routing():
     cfg = configs.get("dbrx-132b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -57,6 +64,7 @@ def test_moe_capacity_and_routing():
     assert np.isfinite(np.asarray(y, np.float32)).all()
 
 
+@pytest.mark.slow
 def test_moe_grads_flow():
     cfg = configs.get("deepseek-v2-236b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -82,6 +90,7 @@ def test_mla_cache_is_compressed():
     assert latent.shape[-1] == cfg.kv_lora_rank
 
 
+@pytest.mark.slow
 def test_zamba2_shared_attention_params_are_shared():
     cfg = configs.get("zamba2-1.2b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -101,6 +110,7 @@ def test_sub_quadratic_flags():
         assert not configs.get(a).sub_quadratic
 
 
+@pytest.mark.slow
 def test_qk_norm_changes_attention():
     cfg = configs.get("qwen3-4b").reduced()
     assert cfg.qk_norm
@@ -109,6 +119,7 @@ def test_qk_norm_changes_attention():
     assert "q_norm" in seg["attn"] and "k_norm" in seg["attn"]
 
 
+@pytest.mark.slow
 def test_encdec_uses_encoder():
     cfg = configs.get("seamless-m4t-medium").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -124,6 +135,7 @@ def test_encdec_uses_encoder():
     assert abs(float(l_with) - float(l_without)) > 1e-6
 
 
+@pytest.mark.slow
 def test_mrope_position_streams_matter():
     cfg = configs.get("qwen2-vl-2b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))

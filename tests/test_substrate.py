@@ -172,6 +172,7 @@ def test_conduit_scheduler_estimates_positive():
             assert e.total_s >= e.exposed_collective_s
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_full_batch():
     """Gradient accumulation over 4 microbatches == single-shot step."""
     import repro.models.model as M

@@ -36,9 +36,11 @@ def test_workloads_run_numerically():
             assert np.isfinite(np.asarray(leaf, np.float64)).all(), wl
 
 
+@pytest.mark.slow
 def test_conduit_never_worst_realizable(tiny_traces):
     """Conduit must not be the worst realizable in-SSD policy on any
-    workload (the paper's core robustness claim)."""
+    workload (the paper's core robustness claim) — 7 policies x 6
+    workloads, the module's heavy grid (nightly tier)."""
     for wl, tr in tiny_traces.items():
         cfg = sim_config_for(wl, tr)
         spans = {p: simulate(tr, p, config=cfg).makespan_ns

@@ -1,0 +1,119 @@
+"""Multi-tenant interference regressions.
+
+The shared-SSD laws simulate_mix must uphold: contention can only hurt a
+tenant relative to running solo, and background host I/O must show up as
+extra busy time on the channels/dies it occupies (plus measurable host
+tail latency).
+"""
+import pytest
+
+from repro.core.policies import ALL_POLICIES
+from repro.sim import HostIOStream, simulate_mix
+
+from _synth import synth_trace
+
+RAMP = list(range(40))
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+SHORT = [2, 4, 6] * 5
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_every_policy_runs_concurrent_traces_with_io(policy):
+    """Acceptance: >=2 concurrent traces + a host I/O stream under every
+    policy in make_policy, with work conserved per tenant."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(SHORT, name="B")
+    mix = simulate_mix([a, b], policy,
+                       io_stream=HostIOStream(rate_iops=80_000,
+                                              n_requests=24),
+                       compute_solo=False)
+    assert len(mix.tenants) == 2
+    by = {r.tenant: r for r in mix.tenants}
+    assert sum(by["t0:A"].resource_counts.values()) == len(RAMP)
+    assert sum(by["t1:B"].resource_counts.values()) == len(SHORT)
+    assert mix.host_io.n_requests == 24
+    assert mix.makespan_ns > 0
+
+
+def test_tenants_never_faster_than_solo():
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    c = synth_trace(SHORT, name="C")
+    mix = simulate_mix([a, b, c], "conduit")
+    assert len(mix.slowdowns) == 3
+    for tenant, slowdown in mix.slowdowns.items():
+        assert slowdown >= 1.0 - 1e-9, \
+            f"{tenant} ran faster under contention ({slowdown:.3f}x)"
+    assert 0.0 < mix.fairness <= 1.0 + 1e-12
+
+
+def test_host_io_strictly_increases_channel_and_die_busy():
+    mk = lambda: [synth_trace(RAMP, name="A"), synth_trace(MIXED, name="B")]
+    quiet = simulate_mix(mk(), "conduit", compute_solo=False)
+    loud = simulate_mix(mk(), "conduit", compute_solo=False,
+                        io_stream=HostIOStream(rate_iops=100_000,
+                                               n_requests=64))
+    assert loud.fabric_busy_ns["flash_chan"] > quiet.fabric_busy_ns["flash_chan"]
+    assert loud.fabric_busy_ns["ifp_die"] > quiet.fabric_busy_ns["ifp_die"]
+    assert loud.host_io is not None and quiet.host_io is None
+    assert loud.host_io.p(99) >= loud.host_io.p(50) > 0.0
+
+
+def test_more_tenants_more_interference():
+    """Adding a co-runner cannot speed up an existing tenant."""
+    solo_pair = simulate_mix([synth_trace(RAMP, name="A"),
+                              synth_trace(MIXED, name="B")], "conduit",
+                             compute_solo=False)
+    trio = simulate_mix([synth_trace(RAMP, name="A"),
+                         synth_trace(MIXED, name="B"),
+                         synth_trace(MIXED, name="C")], "conduit",
+                        compute_solo=False)
+    a2 = solo_pair.tenant("t0:A").makespan_ns
+    a3 = trio.tenant("t0:A").makespan_ns
+    assert a3 >= a2 - 1e-6
+
+
+def test_duplicate_trace_objects_are_isolated():
+    """Passing the same Trace object twice must not share page state."""
+    tr = synth_trace(RAMP, name="A")
+    mix = simulate_mix([tr, tr], "conduit", compute_solo=False)
+    r0, r1 = mix.tenants
+    assert sum(r0.resource_counts.values()) == len(RAMP)
+    assert sum(r1.resource_counts.values()) == len(RAMP)
+    # symmetric tenants on a symmetric fabric: same work issued
+    assert r0.n_instrs == r1.n_instrs
+
+
+def test_per_tenant_policies():
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    mix = simulate_mix([a, b], ["conduit", "isp"], compute_solo=False)
+    by = {r.tenant: r for r in mix.tenants}
+    assert by["t0:A"].policy == "conduit"
+    assert by["t1:B"].policy == "isp"
+
+
+def test_io_only_latency_is_baseline_for_interference():
+    """NDP traffic inflates host I/O latency vs. an idle SSD.
+
+    The baseline tenant is an empty trace with no output pages (no
+    instructions, nothing for the epilogue to flush), so the idle run's
+    resource bookings are exactly the I/O stream's — the busy run is a
+    superset and FIFO queues preserve request order, hence per-request
+    latency can only grow."""
+    io = HostIOStream(rate_iops=60_000, n_requests=96, seed=11)
+    idle = simulate_mix([synth_trace([], name="empty", outputs=False)],
+                        "conduit", io_stream=io, compute_solo=False)
+    busy = simulate_mix([synth_trace(RAMP, name="A"),
+                         synth_trace(MIXED, name="B")], "conduit",
+                        io_stream=io, compute_solo=False)
+    assert busy.host_io.mean_ns >= idle.host_io.mean_ns - 1e-6
+    for fast, slow in zip(idle.host_io.latencies_ns, busy.host_io.latencies_ns):
+        assert slow >= fast - 1e-6
+
+
+def test_mix_rejects_empty_and_mismatched_inputs():
+    with pytest.raises(ValueError):
+        simulate_mix([], "conduit")
+    with pytest.raises(ValueError):
+        simulate_mix([synth_trace(SHORT)], ["conduit", "isp"])

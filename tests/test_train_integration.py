@@ -8,12 +8,14 @@ from repro.launch.serve import serve
 from repro.launch.train import train
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     res = train("tinyllama-1.1b", steps=40, batch=8, seq=32,
                 ckpt_dir=None, reduced=True, base_lr=3e-3, log_every=100)
     assert res["final_loss"] < res["first_loss"] * 0.8
 
 
+@pytest.mark.slow
 def test_restart_is_deterministic(tmp_path):
     """train 30 straight vs train 30 with a crash at 25 + resume: the
     checkpointed stream replays identically."""
@@ -29,6 +31,7 @@ def test_restart_is_deterministic(tmp_path):
                                                   rel=1e-5)
 
 
+@pytest.mark.slow
 def test_serve_produces_tokens():
     res = serve("xlstm-125m", n_requests=4, batch=2, prompt_len=8,
                 max_new=4, reduced=True)

@@ -1,14 +1,17 @@
 """Capacity-pressure sweep: exercises the eviction + lazy-coherence
 machinery (the paper's "footprint exceeds capacity" regime, §5.4), the
-fault-replay path (§4.4 failure handling), and the multi-tenant
-interference regime (several traces + host I/O sharing one fabric)."""
+fault-replay path (§4.4 failure handling), the multi-tenant interference
+regime (several traces + host I/O sharing one fabric), and the FTL
+garbage-collection interference sweep (write amplification vs.
+over-provisioning under Zipf-skewed writes)."""
 from __future__ import annotations
 
+import dataclasses
 from typing import List
 
 from benchmarks.common import csv_row
-from repro.sim import (HostIOStream, SimConfig, jain_fairness, simulate,
-                       simulate_mix)
+from repro.sim import (FTLConfig, HostIOStream, SimConfig, jain_fairness,
+                       simulate, simulate_mix)
 from repro.workloads import get_trace, sim_config_for
 
 
@@ -51,19 +54,23 @@ def fault_replay(workload: str = "jacobi1d") -> List[str]:
 
 
 def tenant_interference(workloads=("jacobi1d", "aes"),
-                        policy: str = "conduit") -> List[str]:
+                        policy: str = "conduit",
+                        smoke: bool = False) -> List[str]:
     """Multi-tenant interference sweep: co-run the workloads on one shared
     fabric at increasing host-I/O intensity; report per-tenant slowdown
-    vs. solo, Jain fairness, and host I/O p99."""
+    vs. solo, Jain fairness, and host I/O p99.  ``smoke`` shrinks the
+    sweep to a CI-sized configuration (entry-point rot check)."""
     rows = []
+    n_req = 32 if smoke else 128
+    levels = (0, 100_000) if smoke else (0, 25_000, 100_000, 400_000)
     traces = [get_trace(wl, "tiny") for wl in workloads]
     print(f"\n== multi-tenant interference ({'+'.join(workloads)}, "
           f"{policy} policy)")
     # the solo baselines are identical across iops levels: compute once
     solo = {f"t{i}:{wl}": simulate(tr, policy).makespan_ns
             for i, (wl, tr) in enumerate(zip(workloads, traces))}
-    for iops in (0, 25_000, 100_000, 400_000):
-        io = (HostIOStream(rate_iops=iops, n_requests=128)
+    for iops in levels:
+        io = (HostIOStream(rate_iops=iops, n_requests=n_req)
               if iops else None)
         mix = simulate_mix(traces, policy, io_stream=io, compute_solo=False)
         slow = {k: mix.tenant(k).makespan_ns / v for k, v in solo.items()}
@@ -79,4 +86,52 @@ def tenant_interference(workloads=("jacobi1d", "aes"),
         rows.append(csv_row(f"mix/fairness/{iops}", f"{fairness:.4f}", ""))
         if mix.host_io:
             rows.append(csv_row(f"mix/io_p99/{iops}", f"{io_p99:.1f}", "us"))
+    return rows
+
+
+def gc_interference(workloads=("jacobi1d", "aes"),
+                    policy: str = "conduit",
+                    smoke: bool = False) -> List[str]:
+    """FTL garbage-collection interference sweep.
+
+    For each over-provisioning level, co-run the NDP workloads with a
+    write-heavy Zipf-skewed host I/O stream on a preconditioned (90 %
+    prefilled) drive, GC off vs. on: identical streams and placement, so
+    the write-amplification / host-p99 / tenant-slowdown deltas are
+    attributable purely to the collector's page copies and erases on the
+    shared die/channel pools."""
+    rows = []
+    n_req = 160 if smoke else 512
+    geometry = dict(blocks_per_die=4, pages_per_block=8, prefill=0.9)
+    traces = [get_trace(wl, "tiny") for wl in workloads]
+    print(f"\n== GC interference ({'+'.join(workloads)}, {policy} policy, "
+          f"zipf 0.95 write-heavy host I/O)")
+    for op in (0.45, 0.28, 0.12):
+        on_cfg = FTLConfig(op_ratio=op, **geometry)
+        off_cfg = dataclasses.replace(on_cfg, gc_enabled=False)
+        io = HostIOStream(rate_iops=250_000, read_fraction=0.3,
+                          n_requests=n_req, zipf_theta=0.95,
+                          n_logical_pages=on_cfg.logical_pages())
+        off = simulate_mix(traces, policy, io_stream=io, ftl=off_cfg,
+                           compute_solo=False)
+        on = simulate_mix(traces, policy, io_stream=io, ftl=on_cfg,
+                          compute_solo=False)
+        wa = on.ftl.write_amplification
+        p99_off = off.host_io.p(99) / 1e3
+        p99_on = on.host_io.p(99) / 1e3
+        slow = {r.tenant: on.tenant(r.tenant).makespan_ns / r.makespan_ns
+                for r in off.tenants}
+        sl_txt = " ".join(f"{k.split(':')[1]}={v:5.2f}x"
+                          for k, v in slow.items())
+        print(f"  op={op:4.2f} WA={wa:5.2f} gc={on.ftl.gc_invocations:4d} "
+              f"erases={on.ftl.blocks_erased:4d} "
+              f"io_p99={p99_off:8.1f}->{p99_on:8.1f}us "
+              f"(during_gc={on.ftl.p_during_gc(99)/1e3:8.1f}us) {sl_txt}")
+        rows.append(csv_row(f"gc/wa/{op}", f"{wa:.4f}", "x"))
+        rows.append(csv_row(f"gc/erases/{op}", f"{on.ftl.blocks_erased}", ""))
+        rows.append(csv_row(f"gc/io_p99/{op}", f"{p99_on:.1f}",
+                            f"us,baseline={p99_off:.1f}"))
+        for k, v in slow.items():
+            rows.append(csv_row(f"gc/slowdown/{k.split(':')[1]}/{op}",
+                                f"{v:.4f}", "x_vs_gc_off"))
     return rows

@@ -10,6 +10,7 @@ Prints human-readable tables followed by a machine-readable
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 import time
 
@@ -18,7 +19,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
-                         "overhead,roofline,pressure,fault,mix,kernels")
+                         "overhead,roofline,pressure,fault,mix,gc,kernels")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized configurations for smoke-aware suites "
+                         "(mix, gc): tiny sweeps that only check the "
+                         "entry points still run")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_figures, pressure_bench
@@ -37,27 +42,37 @@ def main() -> None:
         "pressure": pressure_bench.pressure_sweep,
         "fault": pressure_bench.fault_replay,
         "mix": pressure_bench.tenant_interference,
+        "gc": pressure_bench.gc_interference,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,
     }
+    smoke_aware = {"mix", "gc"}
     wanted = (args.only.split(",") if args.only else list(suites))
     csv_rows = ["name,value,derived"]
+    failed: list = []
     t0 = time.time()
     for name in wanted:
-        fn = suites.get(name.strip())
+        name = name.strip()
+        fn = suites.get(name)
         if fn is None:
             print(f"unknown suite {name}", file=sys.stderr)
+            failed.append(name)
             continue
+        if args.smoke and name in smoke_aware:
+            fn = functools.partial(fn, smoke=True)
         try:
             csv_rows.extend(fn())
         except Exception as e:  # pragma: no cover
             print(f"[benchmarks] suite {name} failed: {e}", file=sys.stderr)
             csv_rows.append(f"error/{name},{e},")
+            failed.append(name)
     print(f"\n[benchmarks] completed in {time.time()-t0:.0f}s")
     print("\n===== CSV =====")
     for row in csv_rows:
         print(row)
+    if failed:  # nonzero exit so the CI bench-smoke step actually gates
+        sys.exit(f"[benchmarks] failing suites: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ class FlashSpec:
     t_read_ns: float = 22.5 * US      # tR, SLC-mode sense of one page
     t_prog_ns: float = 400 * US       # SLC-mode program
     t_erase_ns: float = 3500 * US
+    e_erase_nj_per_block: float = 150_000.0  # block erase energy (GC wear)
     # In-flash compute primitives
     t_and_or_ns: float = 20.0         # MWS AND/OR (per multi-WL sense, on top of tR)
     t_xor_ns: float = 30.0            # XOR via latch ops
@@ -137,6 +138,21 @@ class ISPSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FTLSpec:
+    """Flash-translation-layer firmware parameters (page-mapping FTL).
+
+    Real drives reserve physical capacity beyond the advertised logical
+    space (over-provisioning) so the garbage collector always has somewhere
+    to consolidate valid pages; the watermarks bound when the GC background
+    process runs.  Fractions are of a die's physical page count — GC is a
+    per-die activity in :mod:`repro.sim.ftl`."""
+
+    op_ratio: float = 0.28            # physical/logical - 1 (28% OP)
+    gc_low_watermark: float = 0.10    # free-page fraction that wakes GC
+    gc_high_watermark: float = 0.20   # free-page fraction where GC sleeps
+
+
+@dataclasses.dataclass(frozen=True)
 class HostSpec:
     """Host CPU/GPU + interconnect (Table 2).
 
@@ -184,6 +200,7 @@ class SSDSpec:
     dram: SSDDRAMSpec = dataclasses.field(default_factory=SSDDRAMSpec)
     isp: ISPSpec = dataclasses.field(default_factory=ISPSpec)
     host: HostSpec = dataclasses.field(default_factory=HostSpec)
+    ftl: FTLSpec = dataclasses.field(default_factory=FTLSpec)
     # Conduit runtime overheads (§4.5)
     l2p_lookup_dram_ns: float = 100.0
     l2p_lookup_flash_ns: float = 30.0 * US

@@ -6,14 +6,16 @@ optional synthetic host I/O stream sharing one fabric).  Both run on the
 time-ordered event heap in :mod:`repro.sim.events`.
 """
 from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation, simulate
 from repro.sim.servers import Fabric, ServerPool
-from repro.sim.stats import (DecisionRecord, HostIOStats, MixResult,
-                             SimResult, jain_fairness, percentile)
+from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
+                             MixResult, SimResult, jain_fairness, percentile)
 from repro.sim.tenancy import HostIOStream, simulate_mix
 
 __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "Event", "EventEngine", "EventKind",
            "HostIOStream", "simulate_mix",
+           "FTLConfig", "FTLModel", "FTLStats",
            "DecisionRecord", "HostIOStats", "MixResult", "SimResult",
            "jain_fairness", "percentile"]

@@ -48,6 +48,7 @@ class EventKind(enum.Enum):
     EPILOGUE = "epilogue"        # end-of-trace result flush to host (§4.4 ii)
     IO_ARRIVAL = "io_arrival"    # host read/write request enters the SSD
     IO_COMPLETE = "io_complete"  # host request leaves (latency accounting)
+    GC = "gc"                    # FTL garbage-collection cycle (background tenant)
     TIMER = "timer"              # generic callback (tests, future policies)
 
 

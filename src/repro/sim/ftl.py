@@ -1,0 +1,354 @@
+"""Flash translation layer with event-driven garbage collection.
+
+The seed simulator models an idealized drive: host writes land on hashed
+dies with no logical-to-physical mapping, no over-provisioning and no
+garbage collection, so firmware background activity — the first-order
+obstacle to in-storage processing named by the on-disk-processing
+literature — is invisible.  This module adds a page-mapping FTL in the
+style of wiscsee/FTL-SIM, scaled down geometrically so event-driven
+simulation stays tractable (the real Table-2 geometry lives untouched in
+:class:`~repro.hw.ssd_spec.FlashSpec`).
+
+Event flow (mirrors the discipline of :mod:`repro.sim.tenancy`):
+
+* A host write arrives at :class:`~repro.sim.tenancy._HostIOModel`, which
+  hashes its LBA to a die and calls :meth:`FTLModel.host_write`.  The FTL
+  allocates the next page of that die's *active block* (die-local append
+  point), records the L2P mapping, and invalidates the page the LBA
+  previously occupied.  The physical program the host model books on the
+  die/channel pools is unchanged — with GC disabled the simulation is
+  bit-identical to running without an FTL at all (the equivalence law in
+  ``tests/test_ftl.py``).
+* After each write the host model calls :meth:`FTLModel.maybe_start_gc`.
+  If the die's free-page fraction has fallen below the low watermark and
+  no collector is active on that die, an :data:`EventKind.GC` event is
+  scheduled *now* — GC is one more tenant on the shared
+  :class:`~repro.sim.events.EventEngine`.
+* The GC handler picks the greedy victim (minimum valid pages among full
+  blocks), and for every valid page books a page read, a channel
+  round-trip (page buffer -> controller -> destination page buffer: the
+  controller re-encodes ECC, so no on-die copyback) and an SLC program on
+  the *same* die/channel :class:`~repro.sim.servers.ServerPool`\\ s that
+  NDP dispatch and host I/O acquire; then it books the block erase.  The
+  lazy-acquire FIFO discipline makes every host request or NDP operand
+  fetch behind the collector wait — write amplification directly inflates
+  per-tenant slowdown and host-I/O tail latency.
+* At the end of the booked cycle the handler re-schedules itself: the
+  collector keeps reclaiming blocks until the free fraction recovers to
+  the high watermark (or no victim with a free page remains), then sleeps
+  until the next watermark crossing.
+
+Mapping state (L2P/valid bitmaps) updates at event-handler time while the
+latencies occupy the pools — a simplification shared with FTL-SIM: the
+map is sequentially consistent in event order.
+
+With ``gc_enabled=False`` the block pool grows without bound (infinite
+over-provisioning): allocation never blocks, nothing is ever erased, and
+write amplification is exactly 1.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
+from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.servers import Fabric
+from repro.sim.stats import FTLStats
+
+#: physical page address: (die, block-within-die, page-within-block)
+PPN = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class FTLConfig:
+    """Simulation-scale FTL knobs.
+
+    ``blocks_per_die`` / ``pages_per_block`` set the *scaled* geometry the
+    mapping operates on; ``op_ratio`` and the watermarks default to the
+    firmware parameters in :class:`~repro.hw.ssd_spec.FTLSpec`.
+    ``prefill`` writes that fraction of the logical space through the
+    allocator at t=0 (state only, no time booked) — the standard
+    preconditioning step without which a fresh drive never garbage
+    collects."""
+
+    blocks_per_die: int = 16
+    pages_per_block: int = 32
+    op_ratio: Optional[float] = None          # default: spec.ftl.op_ratio
+    gc_low_watermark: Optional[float] = None
+    gc_high_watermark: Optional[float] = None
+    gc_enabled: bool = True
+    prefill: float = 0.0
+
+    def physical_pages(self, spec: SSDSpec = DEFAULT_SSD) -> int:
+        return (spec.flash.total_dies * self.blocks_per_die
+                * self.pages_per_block)
+
+    def logical_pages(self, spec: SSDSpec = DEFAULT_SSD) -> int:
+        """Advertised LBA space: physical capacity net of over-provisioning."""
+        op = self.op_ratio if self.op_ratio is not None else spec.ftl.op_ratio
+        return max(1, int(self.physical_pages(spec) / (1.0 + op)))
+
+
+class _DieFTL:
+    """One die's block pool: free list, append points, valid accounting."""
+
+    FREE, HOST, GC, USED = "free", "host", "gc", "used"
+
+    def __init__(self, blocks: int, pages_per_block: int):
+        self.ppb = pages_per_block
+        self.n_blocks = blocks
+        self.state: List[str] = [self.FREE] * blocks
+        self.free: List[int] = list(range(blocks))
+        self.valid_count: List[int] = [0] * blocks
+        self.valid: List[List[bool]] = [[False] * pages_per_block
+                                        for _ in range(blocks)]
+        self.page_lpn: List[List[int]] = [[-1] * pages_per_block
+                                          for _ in range(blocks)]
+        self.erase_count: List[int] = [0] * blocks
+        # (block, next-page) append points; None until first allocation
+        self.active: Dict[str, Optional[Tuple[int, int]]] = {
+            self.HOST: None, self.GC: None}
+        self.grown_blocks = 0          # overflow allocations (infinite OP)
+        self.gc_running = False
+
+    # -- capacity -------------------------------------------------------------
+
+    @property
+    def physical_pages(self) -> int:
+        return self.n_blocks * self.ppb
+
+    def free_pages(self) -> int:
+        n = len(self.free) * self.ppb
+        for ap in self.active.values():
+            if ap is not None:
+                n += self.ppb - ap[1]
+        return n
+
+    def free_fraction(self) -> float:
+        return self.free_pages() / self.physical_pages
+
+    # -- allocation -----------------------------------------------------------
+
+    def _grow(self) -> int:
+        """Append a fresh block (infinite-OP / saturation fallback)."""
+        b = len(self.state)
+        self.state.append(self.FREE)
+        self.valid_count.append(0)
+        self.valid.append([False] * self.ppb)
+        self.page_lpn.append([-1] * self.ppb)
+        self.erase_count.append(0)
+        self.free.append(b)
+        self.grown_blocks += 1
+        return b
+
+    def alloc(self, lpn: int, kind: str) -> Tuple[int, int]:
+        """Claim the next page of the ``kind`` append point for ``lpn``."""
+        ap = self.active[kind]
+        if ap is None:
+            if not self.free:
+                self._grow()
+            blk = self.free.pop(0)
+            self.state[blk] = kind
+            ap = (blk, 0)
+        blk, pg = ap
+        self.valid[blk][pg] = True
+        self.page_lpn[blk][pg] = lpn
+        self.valid_count[blk] += 1
+        if pg + 1 == self.ppb:
+            self.state[blk] = self.USED     # full: eligible GC victim
+            self.active[kind] = None
+        else:
+            self.active[kind] = (blk, pg + 1)
+        return blk, pg
+
+    def invalidate(self, blk: int, pg: int) -> None:
+        assert self.valid[blk][pg], "double invalidation"
+        self.valid[blk][pg] = False
+        self.valid_count[blk] -= 1
+
+    # -- garbage collection ---------------------------------------------------
+
+    def pick_victim(self) -> Optional[int]:
+        """Greedy policy: the full block with the fewest valid pages."""
+        best, best_valid = None, None
+        for b, st in enumerate(self.state):
+            if st != self.USED:
+                continue
+            if best_valid is None or self.valid_count[b] < best_valid:
+                best, best_valid = b, self.valid_count[b]
+        return best
+
+    def erase(self, blk: int) -> None:
+        assert self.valid_count[blk] == 0, "erasing block with valid pages"
+        self.valid[blk] = [False] * self.ppb
+        self.page_lpn[blk] = [-1] * self.ppb
+        self.erase_count[blk] += 1
+        self.state[blk] = self.FREE
+        self.free.append(blk)
+
+
+class FTLModel:
+    """Binds an :class:`FTLConfig` to one fabric + event engine.
+
+    ``die_of`` is the LBA->die hash the host I/O model uses for placement —
+    passing it in keeps the FTL and the stream bit-consistent (the same
+    LBA always lands on the same die, which is what makes the GC-disabled
+    run identical to the no-FTL run)."""
+
+    def __init__(self, cfg: FTLConfig, spec: SSDSpec, fabric: Fabric,
+                 engine: EventEngine, die_of: Callable[[int], int]):
+        self.cfg = cfg
+        self.spec = spec
+        self.fabric = fabric
+        self.engine = engine
+        self.die_of = die_of
+        f = spec.flash
+        self.n_dies = f.total_dies
+        self.n_logical = cfg.logical_pages(spec)
+        self.low_wm = (cfg.gc_low_watermark
+                       if cfg.gc_low_watermark is not None
+                       else spec.ftl.gc_low_watermark)
+        self.high_wm = (cfg.gc_high_watermark
+                        if cfg.gc_high_watermark is not None
+                        else spec.ftl.gc_high_watermark)
+        self.dies = [_DieFTL(cfg.blocks_per_die, cfg.pages_per_block)
+                     for _ in range(self.n_dies)]
+        self.l2p: Dict[int, PPN] = {}
+
+        # accounting
+        self.host_pages_written = 0
+        self.gc_pages_copied = 0
+        self.blocks_erased = 0
+        self.gc_invocations = 0
+        self.gc_active_dies = 0
+        self.gc_energy_nj = 0.0
+        self.host_during_gc_ns: List[float] = []
+
+        for lpn in range(int(cfg.prefill * self.n_logical)):
+            self._map_write(lpn, die_of(lpn), _DieFTL.HOST)
+
+    # -- mapping --------------------------------------------------------------
+
+    def _map_write(self, lpn: int, die: int, kind: str) -> PPN:
+        """Allocate a physical page for ``lpn`` on ``die`` and remap."""
+        old = self.l2p.get(lpn)
+        if old is not None:
+            self.dies[old[0]].invalidate(old[1], old[2])
+        blk, pg = self.dies[die].alloc(lpn, kind)
+        ppn = (die, blk, pg)
+        self.l2p[lpn] = ppn
+        return ppn
+
+    def host_write(self, lpn: int, die: int) -> PPN:
+        """One host page write through the mapping (caller books the time)."""
+        self.host_pages_written += 1
+        return self._map_write(lpn, die, _DieFTL.HOST)
+
+    def read_die(self, lpn: int, default: int) -> int:
+        """Die physically holding ``lpn`` (``default`` when never written)."""
+        ppn = self.l2p.get(lpn)
+        return ppn[0] if ppn is not None else default
+
+    # -- garbage collection as a background tenant ----------------------------
+
+    def maybe_start_gc(self, die: int) -> None:
+        """Wake the collector on ``die`` if the low watermark is crossed."""
+        d = self.dies[die]
+        if (not self.cfg.gc_enabled or d.gc_running
+                or d.free_fraction() >= self.low_wm):
+            return
+        d.gc_running = True
+        self.gc_active_dies += 1
+        self.gc_invocations += 1
+        self.engine.schedule(self.engine.now, EventKind.GC,
+                             self._on_gc, payload=die)
+
+    def _gc_sleep(self, die: int) -> None:
+        d = self.dies[die]
+        if d.gc_running:
+            d.gc_running = False
+            self.gc_active_dies -= 1
+
+    def _on_gc(self, ev: Event) -> None:
+        """Reclaim one victim block; re-arm until the high watermark."""
+        die = ev.payload
+        d = self.dies[die]
+        if d.free_fraction() >= self.high_wm:
+            self._gc_sleep(die)
+            return
+        victim = d.pick_victim()
+        if victim is None or d.valid_count[victim] >= d.ppb:
+            # nothing reclaimable (all-valid blocks): the die is saturated;
+            # future allocations overflow-grow rather than deadlock
+            self._gc_sleep(die)
+            return
+        f = self.spec.flash
+        nb = self.spec.page_size
+        chan = die % f.channels
+        xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
+        t = self.engine.now
+        for pg in range(d.ppb):
+            if not d.valid[victim][pg]:
+                continue
+            lpn = d.page_lpn[victim][pg]
+            t = self.fabric.dies.acquire(t, f.t_read_ns, unit=die).end
+            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
+            t = self.fabric.dies.acquire(t, f.t_prog_ns, unit=die).end
+            self._map_write(lpn, die, _DieFTL.GC)
+            self.gc_pages_copied += 1
+            self.gc_energy_nj += (f.e_read_nj_per_channel
+                                  + 2.0 * f.e_dma_nj_per_channel
+                                  + f.e_prog_nj_per_channel)
+        t = self.fabric.dies.acquire(t, f.t_erase_ns, unit=die).end
+        d.erase(victim)
+        self.blocks_erased += 1
+        self.gc_energy_nj += f.e_erase_nj_per_block
+        # re-check at cycle completion: keep collecting or go back to sleep
+        self.engine.schedule(t, EventKind.GC, self._on_gc, payload=die)
+
+    # -- observability --------------------------------------------------------
+
+    def note_host_latency_during_gc(self, latency_ns: float) -> None:
+        self.host_during_gc_ns.append(latency_ns)
+
+    @property
+    def gc_busy(self) -> bool:
+        return self.gc_active_dies > 0
+
+    def check_invariants(self) -> None:
+        """The FTL laws ``tests/test_ftl.py`` asserts mid-run.
+
+        Each live logical page maps to exactly one physical page; the
+        reverse map (page_lpn) agrees; per-block valid counts match the
+        bitmaps; and the total valid-page count equals the live mapping
+        size (conservation across GC cycles)."""
+        seen_ppns = set()
+        for lpn, (die, blk, pg) in self.l2p.items():
+            assert (die, blk, pg) not in seen_ppns, "two LPNs share a PPN"
+            seen_ppns.add((die, blk, pg))
+            d = self.dies[die]
+            assert d.valid[blk][pg], f"lpn {lpn} maps to an invalid page"
+            assert d.page_lpn[blk][pg] == lpn, "L2P/P2L disagree"
+        total_valid = 0
+        for d in self.dies:
+            for b in range(len(d.state)):
+                n = sum(d.valid[b])
+                assert n == d.valid_count[b], "valid count drifted"
+                total_valid += n
+        assert total_valid == len(self.l2p), "valid pages != live mappings"
+
+    def stats(self) -> FTLStats:
+        erase_counts = [c for d in self.dies for c in d.erase_count]
+        return FTLStats(
+            gc_enabled=self.cfg.gc_enabled,
+            n_logical_pages=self.n_logical,
+            n_physical_pages=sum(d.physical_pages for d in self.dies),
+            host_pages_written=self.host_pages_written,
+            gc_pages_copied=self.gc_pages_copied,
+            blocks_erased=self.blocks_erased,
+            gc_invocations=self.gc_invocations,
+            overflow_blocks=sum(d.grown_blocks for d in self.dies),
+            gc_energy_nj=self.gc_energy_nj,
+            erase_counts=erase_counts,
+            host_during_gc_ns=list(self.host_during_gc_ns))

@@ -73,12 +73,14 @@ class Simulation:
                  spec: SSDSpec = DEFAULT_SSD,
                  config: Optional[SimConfig] = None,
                  fabric: Optional[Fabric] = None,
-                 tenant: str = ""):
+                 tenant: str = "",
+                 start_ns: float = 0.0):
         self.trace = trace
         self.policy = policy
         self.spec = spec
         self.cfg = config or SimConfig()
         self.tenant = tenant or trace.name
+        self.start_ns = start_ns      # arrival offset (staggered tenants)
         self.fabric = fabric or Fabric(spec, pud_units=self.cfg.pud_units)
         self.pools: Dict[Resource, ServerPool] = self.fabric.pools
         self.offloader = self.fabric.offloader
@@ -118,8 +120,8 @@ class Simulation:
         # event-driven dispatch state
         self.engine: Optional[EventEngine] = None
         self._idx = 0                       # next instruction to dispatch
-        self._prev_decide_end = 0.0         # offloader pipeline cursor
-        self._makespan = 0.0
+        self._prev_decide_end = start_ns    # offloader pipeline cursor
+        self._makespan = start_ns
         self.done = False
 
         # accounting
@@ -373,21 +375,23 @@ class Simulation:
         interleave their dispatches in global time order."""
         self.engine = engine
         self._idx = 0
-        self._prev_decide_end = 0.0
-        self._makespan = 0.0
+        self._prev_decide_end = self.start_ns
+        self._makespan = self.start_ns
         self.done = False
         if self.trace.instrs:
-            engine.schedule(0.0, EventKind.DISPATCH, self._on_dispatch)
+            engine.schedule(self.start_ns, EventKind.DISPATCH,
+                            self._on_dispatch)
         elif (self.cfg.move_outputs_to_host
               and not self.policy.ignores_contention):
             # degenerate empty trace: the epilogue flush still runs
-            engine.schedule(0.0, EventKind.EPILOGUE, self._on_epilogue)
+            engine.schedule(self.start_ns, EventKind.EPILOGUE,
+                            self._on_epilogue)
         else:
             self.done = True
 
     def _deps_ready(self, instr: VectorInstr) -> float:
         return max((self.completion[d] for d in instr.deps
-                    if d in self.completion), default=0.0)
+                    if d in self.completion), default=self.start_ns)
 
     def _after_instr(self, instr_end: float) -> None:
         """Schedule the next dispatch (or the epilogue) after one
@@ -529,7 +533,7 @@ class Simulation:
             resource_busy_ns=self.fabric.busy_ns(),
             coherence_syncs=self.coherence_syncs, evictions=self.evictions,
             replays=self.replays, colocations=self.colocations,
-            tenant=self.tenant)
+            tenant=self.tenant, start_ns=self.start_ns)
 
     def run(self) -> SimResult:
         """Single-tenant convenience: drive a private event loop to empty."""

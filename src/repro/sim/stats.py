@@ -52,10 +52,17 @@ class SimResult:
     replays: int
     colocations: int
     tenant: str = ""                 # tenant id in a simulate_mix run
+    start_ns: float = 0.0            # arrival offset in a simulate_mix run
 
     @property
     def total_energy_nj(self) -> float:
         return self.compute_energy_nj + self.movement_energy_nj
+
+    @property
+    def elapsed_ns(self) -> float:
+        """Wall time from this tenant's arrival to its last completion —
+        what slowdown-vs-solo compares when tenants arrive staggered."""
+        return self.makespan_ns - self.start_ns
 
     @property
     def latencies_ns(self) -> List[float]:
@@ -122,6 +129,71 @@ class HostIOStats:
         }
 
 
+@dataclasses.dataclass
+class FTLStats:
+    """FTL + garbage-collection accounting for one simulate_mix run.
+
+    ``write_amplification`` is (host + GC copy writes) / host writes —
+    exactly 1.0 with GC disabled (infinite over-provisioning).
+    ``erase_counts`` is the per-block wear histogram (flattened across
+    dies); ``host_during_gc_ns`` the latencies of host requests issued
+    while any die's collector was active, isolating the tail-latency cost
+    attributable to GC traffic."""
+
+    gc_enabled: bool
+    n_logical_pages: int
+    n_physical_pages: int
+    host_pages_written: int
+    gc_pages_copied: int
+    blocks_erased: int
+    gc_invocations: int
+    overflow_blocks: int
+    gc_energy_nj: float
+    erase_counts: List[int]
+    host_during_gc_ns: List[float]
+
+    @property
+    def write_amplification(self) -> float:
+        if self.host_pages_written == 0:
+            return 1.0
+        return (self.host_pages_written + self.gc_pages_copied) \
+            / self.host_pages_written
+
+    @property
+    def max_erase_count(self) -> int:
+        return max(self.erase_counts, default=0)
+
+    @property
+    def mean_erase_count(self) -> float:
+        if not self.erase_counts:
+            return 0.0
+        return sum(self.erase_counts) / len(self.erase_counts)
+
+    def wear_histogram(self) -> Dict[int, int]:
+        """erase count -> number of blocks (the wear distribution)."""
+        out: Dict[int, int] = {}
+        for c in self.erase_counts:
+            out[c] = out.get(c, 0) + 1
+        return out
+
+    def p_during_gc(self, pct: float) -> float:
+        """Host-I/O latency percentile over requests issued during GC."""
+        return percentile(self.host_during_gc_ns, pct)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "ftl_gc": self.gc_enabled,
+            "write_amp": round(self.write_amplification, 3),
+            "host_pages_written": self.host_pages_written,
+            "gc_pages_copied": self.gc_pages_copied,
+            "gc_invocations": self.gc_invocations,
+            "blocks_erased": self.blocks_erased,
+            "max_erase": self.max_erase_count,
+            "io_during_gc": len(self.host_during_gc_ns),
+            "io_p99_during_gc_us": self.p_during_gc(99) / 1e3,
+        }
+
+
 def jain_fairness(values: List[float]) -> float:
     """Jain's fairness index over per-tenant slowdowns: 1.0 = perfectly
     fair, 1/n = one tenant monopolizes the fabric."""
@@ -147,6 +219,7 @@ class MixResult:
     host_io: Optional[HostIOStats]
     fabric_busy_ns: Dict[str, float]
     makespan_ns: float               # end of all tenants + host I/O
+    ftl: Optional["FTLStats"] = None  # present when an FTL was configured
 
     def tenant(self, name: str) -> SimResult:
         for r in self.tenants:
@@ -156,12 +229,14 @@ class MixResult:
 
     @property
     def slowdowns(self) -> Dict[str, float]:
-        """Per-tenant makespan inflation vs. running alone on the SSD."""
+        """Per-tenant elapsed-time inflation vs. running alone on the SSD
+        (elapsed = makespan minus the tenant's arrival offset, so staggered
+        arrivals compare like-for-like with their solo runs)."""
         out = {}
         for r in self.tenants:
             solo = self.solo_makespan_ns.get(r.tenant)
             if solo:
-                out[r.tenant] = r.makespan_ns / solo
+                out[r.tenant] = r.elapsed_ns / solo
         return out
 
     @property
@@ -182,4 +257,6 @@ class MixResult:
         }
         if self.host_io is not None:
             out.update(self.host_io.summary())
+        if self.ftl is not None:
+            out.update(self.ftl.summary())
         return out

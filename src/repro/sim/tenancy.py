@@ -6,39 +6,83 @@ host read/write I/O contending for the same channels, dies, DRAM bus and
 PCIe link.  :func:`simulate_mix` builds one shared
 :class:`~repro.sim.servers.Fabric`, binds every trace's
 :class:`~repro.sim.machine.Simulation` to one
-:class:`~repro.sim.events.EventEngine`, and optionally injects a synthetic
-:class:`HostIOStream`; dispatches interleave in global time order, so
-completion is out-of-order across tenants and the interference is visible
-in per-tenant slowdown, Jain fairness and host-I/O tail latency
-(:class:`~repro.sim.stats.MixResult`).
+:class:`~repro.sim.events.EventEngine` (optionally at a staggered
+``start_ns`` arrival offset per tenant), and optionally injects a
+synthetic :class:`HostIOStream`; dispatches interleave in global time
+order, so completion is out-of-order across tenants and the interference
+is visible in per-tenant slowdown, Jain fairness and host-I/O tail
+latency (:class:`~repro.sim.stats.MixResult`).
+
+Host I/O realism: requests target logical block addresses — uniformly or
+Zipf-skewed (``zipf_theta``) — and the LBA hashes to the die, so repeated
+writes to a hot LBA always land on (and invalidate pages of) the same
+die.  Arrivals are pseudo-Poisson, optionally gated into on/off bursts
+(``burst_duty`` / ``burst_len``), and an NVMe queue-depth cap
+(``queue_depth``) defers arrivals beyond the outstanding-command limit at
+the front end.
+
+Passing ``ftl=FTLConfig(...)`` routes every host write through the
+page-mapping flash translation layer of :mod:`repro.sim.ftl`: writes
+allocate physical pages in over-provisioned per-die block pools, and the
+garbage collector runs as an event-driven background tenant whose page
+copies and erases contend for the same die/channel pools (write
+amplification shows up in every tenant's slowdown and in
+``MixResult.ftl``).
 
 API::
 
     mix = simulate_mix([trace_a, trace_b], "conduit",
-                       io_stream=HostIOStream(rate_iops=50_000))
-    mix.slowdowns        # {tenant: makespan / solo_makespan}
-    mix.host_io.p(99)    # host I/O tail latency under NDP interference
+                       io_stream=HostIOStream(rate_iops=50_000),
+                       ftl=FTLConfig(op_ratio=0.12, prefill=0.9),
+                       start_ns=[0.0, 2e6])
+    mix.slowdowns        # {tenant: elapsed / solo_makespan}
+    mix.host_io.p(99)    # host I/O tail latency under NDP + GC interference
+    mix.ftl.write_amplification
 
 ``simulate_mix([trace])`` with no I/O stream reproduces
 :func:`~repro.sim.machine.simulate` exactly (the equivalence law in
-``tests/test_events.py``).
+``tests/test_events.py``), and an FTL with ``gc_enabled=False`` is
+bit-identical to no FTL at all (``tests/test_ftl.py``).
 """
 from __future__ import annotations
 
+import bisect
 import copy
 import dataclasses
+import functools
 import math
-from typing import Dict, List, Optional, Sequence, Union
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
 from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation, _hash01, simulate
 from repro.sim.servers import Fabric
 from repro.sim.stats import HostIOStats, MixResult
 
 PolicyLike = Union[str, Policy]
+
+#: seed the FTL's LBA->die hash uses when no I/O stream is configured
+DEFAULT_IO_SEED = 0xC0FFEE
+
+
+def _die_of_lpn(lpn: int, seed: int, total_dies: int) -> int:
+    """Stable LBA->die placement hash, shared by the host I/O stream and
+    the FTL so the two always agree on where a logical page lives."""
+    return int(_hash01(lpn, seed ^ 0xD1E) * total_dies) % total_dies
+
+
+@functools.lru_cache(maxsize=8)
+def _zipf_cdf(n: int, theta: float) -> Tuple[float, ...]:
+    """Cumulative Zipf(theta) weights over ranks 1..n (rank == LBA)."""
+    acc, out = 0.0, []
+    for r in range(1, n + 1):
+        acc += r ** -theta
+        out.append(acc)
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,71 +91,135 @@ class HostIOStream:
 
     Arrivals follow a deterministic pseudo-Poisson process (inverse-CDF
     exponential gaps from a hashed uniform stream), so identical seeds
-    replay identical workloads.  Each request occupies a hashed die and
-    its channel plus the PCIe link — the same contended units NDP operand
-    movement uses."""
+    replay identical workloads.  Each request targets an LBA — uniform
+    over ``n_logical_pages`` or Zipf-skewed when ``zipf_theta > 0`` — and
+    the LBA hashes to a die and its channel plus the PCIe link: the same
+    contended units NDP operand movement and FTL garbage collection use.
+
+    ``burst_duty < 1`` compresses arrivals into on/off bursts (``burst_len``
+    requests per ON window at rate/duty, then an OFF pause) at the same
+    mean rate; ``queue_depth`` models the NVMe front end's outstanding-
+    command limit (excess arrivals queue before touching the fabric)."""
 
     rate_iops: float = 50_000.0      # mean arrival rate (requests / second)
     read_fraction: float = 0.7       # remainder are (SLC-program) writes
     n_requests: int = 256
-    seed: int = 0xC0FFEE
+    seed: int = DEFAULT_IO_SEED
     start_ns: float = 0.0
+    n_logical_pages: int = 1 << 16   # LBA space the stream addresses
+    zipf_theta: float = 0.0          # 0 = uniform; ~0.99 = classic hot/cold
+    burst_duty: float = 1.0          # ON fraction of the arrival cycle
+    burst_len: int = 32              # requests per ON window
+    queue_depth: Optional[int] = None  # NVMe QD cap (None = unbounded)
+
+    def __post_init__(self) -> None:
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1 (or None)")
+        if self.burst_len < 1:
+            raise ValueError("burst_len must be >= 1")
+        if self.n_logical_pages < 1:
+            raise ValueError("n_logical_pages must be >= 1")
 
     def arrival_times_ns(self) -> List[float]:
         mean_gap = 1e9 / max(1e-9, self.rate_iops)
+        duty = min(1.0, max(1e-3, self.burst_duty))
+        on_gap = mean_gap * duty
+        off_pause = self.burst_len * mean_gap * (1.0 - duty)
         t = self.start_ns
         out = []
         for i in range(self.n_requests):
             u = min(0.999999, max(1e-9, _hash01(i, self.seed)))
-            t += -mean_gap * math.log(1.0 - u)
+            t += -on_gap * math.log(1.0 - u)
             out.append(t)
+            if duty < 1.0 and (i + 1) % self.burst_len == 0:
+                t += off_pause
         return out
 
 
 class _HostIOModel:
-    """Binds a :class:`HostIOStream` to the engine + fabric."""
+    """Binds a :class:`HostIOStream` to the engine + fabric (+ FTL)."""
 
     def __init__(self, stream: HostIOStream, fabric: Fabric,
-                 spec: SSDSpec, engine: EventEngine):
+                 spec: SSDSpec, engine: EventEngine,
+                 ftl: Optional[FTLModel] = None):
         self.stream = stream
         self.fabric = fabric
         self.spec = spec
         self.engine = engine
+        self.ftl = ftl
+        # when an FTL is present its logical space bounds the LBAs (the
+        # stream's space folds into it; size them equal for exact studies)
+        self.space = ftl.n_logical if ftl is not None \
+            else max(1, stream.n_logical_pages)
         self.latency_by_req: Dict[int, float] = {}
         self.n_reads = 0
         self.n_writes = 0
+        self.outstanding = 0
+        self.pending: Deque[Tuple[int, float]] = deque()
         self.last_complete_ns = 0.0
         for i, t in enumerate(stream.arrival_times_ns()):
             engine.schedule(t, EventKind.IO_ARRIVAL, self._on_arrival,
                             payload=i)
 
+    def _lpn(self, i: int) -> int:
+        s = self.stream
+        u = min(0.999999, max(0.0, _hash01(i, s.seed ^ 0x1BA5)))
+        if s.zipf_theta <= 0.0:
+            return min(self.space - 1, int(u * self.space))
+        cdf = _zipf_cdf(self.space, round(s.zipf_theta, 6))
+        return min(self.space - 1, bisect.bisect_left(cdf, u * cdf[-1]))
+
     def _on_arrival(self, ev: Event) -> None:
         i = ev.payload
+        qd = self.stream.queue_depth
+        if qd is not None and self.outstanding >= qd:
+            self.pending.append((i, self.engine.now))  # NVMe QD front-end cap
+            return
+        self._issue(i, self.engine.now)
+
+    def _issue(self, i: int, arrival_ns: float) -> None:
+        self.outstanding += 1
         s, f, h = self.stream, self.spec.flash, self.spec.host
         nb = self.spec.page_size
-        die = int(_hash01(i, s.seed ^ 0xD1E) * f.total_dies) % f.total_dies
-        chan = die % f.channels
-        is_read = _hash01(i, s.seed ^ 0x4EAD) < s.read_fraction
         now = self.engine.now
+        lpn = self._lpn(i)
+        die = _die_of_lpn(lpn, s.seed, f.total_dies)
+        is_read = _hash01(i, s.seed ^ 0x4EAD) < s.read_fraction
+        during_gc = self.ftl is not None and self.ftl.gc_busy
         xfer = f.t_dma_ns + nb * f.channel_ns_per_byte
         link = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
         if is_read:
             self.n_reads += 1
+            if self.ftl is not None:
+                die = self.ftl.read_die(lpn, die)   # L2P-resolved placement
+            chan = die % f.channels
             t = self.fabric.dies.acquire(now, f.t_read_ns, unit=die).end
             t = self.fabric.channels.acquire(t, xfer, unit=chan).end
             t = self.fabric.pcie.acquire(t, link).end
         else:
             self.n_writes += 1
+            if self.ftl is not None:
+                self.ftl.host_write(lpn, die)       # map + invalidate old PPN
+            chan = die % f.channels
             t = self.fabric.pcie.acquire(now, link).end
             t = self.fabric.channels.acquire(t, xfer, unit=chan).end
             t = self.fabric.dies.acquire(t, f.t_prog_ns, unit=die).end
+            if self.ftl is not None:
+                self.ftl.maybe_start_gc(die)        # watermark check
         self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
-                             payload=(i, now))
+                             payload=(i, arrival_ns, during_gc))
 
     def _on_complete(self, ev: Event) -> None:
-        i, arrival = ev.payload
-        self.latency_by_req[i] = self.engine.now - arrival
+        i, arrival, during_gc = ev.payload
+        lat = self.engine.now - arrival
+        self.latency_by_req[i] = lat
+        if during_gc:
+            self.ftl.note_host_latency_during_gc(lat)
         self.last_complete_ns = max(self.last_complete_ns, self.engine.now)
+        self.outstanding -= 1
+        if self.pending:
+            j, arr = self.pending.popleft()
+            self._issue(j, arr)                     # QD slot freed
 
     def stats(self) -> HostIOStats:
         # latencies indexed by request id (not completion order), so two
@@ -137,19 +245,30 @@ def simulate_mix(traces: Sequence[Trace],
                  spec: SSDSpec = DEFAULT_SSD,
                  config: Optional[SimConfig] = None,
                  compute_solo: bool = True,
-                 engine: Optional[EventEngine] = None) -> MixResult:
+                 engine: Optional[EventEngine] = None,
+                 ftl: Optional[FTLConfig] = None,
+                 start_ns: Optional[Sequence[float]] = None) -> MixResult:
     """Run several traces concurrently on one SSD, plus optional host I/O.
 
     ``policies`` is one policy (applied to every trace) or one per trace;
     strings go through :func:`make_policy`.  ``compute_solo`` additionally
     runs each (trace, policy) alone on a private fabric to provide the
     solo makespans behind :attr:`MixResult.slowdowns` — disable it for
-    large sweeps where only the contended numbers matter.  Pass a
-    ``record=True`` :class:`EventEngine` to capture the event timeline.
+    large sweeps where only the contended numbers matter.  ``start_ns``
+    staggers tenant arrivals (one offset per trace; slowdowns compare
+    elapsed time from each tenant's own arrival).  ``ftl`` enables the
+    flash translation layer of :mod:`repro.sim.ftl` with garbage
+    collection as a background tenant.  Pass a ``record=True``
+    :class:`EventEngine` to capture the event timeline.
     """
     traces = list(traces)
     if not traces:
         raise ValueError("simulate_mix needs at least one trace")
+    starts = list(start_ns) if start_ns is not None else [0.0] * len(traces)
+    if len(starts) != len(traces):
+        raise ValueError(f"{len(starts)} start offsets for {len(traces)} traces")
+    if any(s < 0 for s in starts):
+        raise ValueError("start_ns offsets must be >= 0")
     cfg = config or SimConfig()
     pols = _as_policies(policies, len(traces), spec)
 
@@ -173,11 +292,19 @@ def simulate_mix(traces: Sequence[Trace],
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
-    sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name)
-            for name, tr, pol in zip(names, tenant_traces, pols)]
+    ftl_model = None
+    if ftl is not None:
+        io_seed = io_stream.seed if io_stream is not None else DEFAULT_IO_SEED
+        ftl_model = FTLModel(
+            ftl, spec, fabric, engine,
+            die_of=lambda lpn: _die_of_lpn(lpn, io_seed,
+                                           spec.flash.total_dies))
+    sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name,
+                       start_ns=st)
+            for name, tr, pol, st in zip(names, tenant_traces, pols, starts)]
     for sim in sims:
         sim.bind(engine)
-    io = (_HostIOModel(io_stream, fabric, spec, engine)
+    io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
           if io_stream is not None else None)
     engine.run()
 
@@ -187,4 +314,5 @@ def simulate_mix(traces: Sequence[Trace],
     return MixResult(tenants=results, solo_makespan_ns=solo,
                      host_io=io.stats() if io else None,
                      fabric_busy_ns=fabric.busy_ns(),
-                     makespan_ns=makespan)
+                     makespan_ns=makespan,
+                     ftl=ftl_model.stats() if ftl_model is not None else None)

@@ -1,0 +1,242 @@
+"""Simulator performance benchmark: events/sec + sweep wall time.
+
+The event engine is the substrate every evaluation in this repo runs on
+(workload sweeps, tenant interference, GC interference), so its own
+throughput is a first-class, *tracked* deliverable.  This bench measures
+
+* ``mix``  — two synthetic NDP tenants + a host I/O stream on one shared
+  fabric (the shape of ``pressure_bench.tenant_interference``), and
+* ``gc``   — the same tenants + a write-heavy Zipf host I/O stream through
+  a preconditioned FTL with garbage collection (the shape of
+  ``pressure_bench.gc_interference``),
+
+reporting processed events per second of wall time for each suite, plus
+the end-to-end wall time of a small sweep loop.  Results are written to
+``BENCH_sim_perf.json`` — the repo's perf-trajectory artifact.  The
+committed JSON carries the *pre-optimization* baseline (measured on the
+engine as of PR 2 with this same harness); ``--check`` fails the run if
+the current engine falls more than ``REGRESSION_TOLERANCE`` below that
+committed baseline, which catches "someone un-optimized the hot path"
+while tolerating slower CI machines (the optimized engine clears the
+baseline by >3x on equal hardware).
+
+Measurement hygiene: traces are built outside the timed region, one
+warm-up run populates the per-instruction static-feature caches (as any
+sweep's first point would), the cyclic GC is disabled during timed runs
+(jax registers a gc callback that would add unrelated noise), and the
+best of ``--repeats`` runs is taken.
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.perf_bench            # full, writes JSON
+  PYTHONPATH=src python -m benchmarks.perf_bench --smoke --check
+  PYTHONPATH=src python -m benchmarks.perf_bench --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+from typing import Callable, Dict, List, Tuple
+
+#: fail --check when events/sec drops below (1 - tolerance) x committed
+#: pre-optimization baseline
+REGRESSION_TOLERANCE = 0.30
+
+#: The committed JSON's "baseline" block is the engine BEFORE the fast-path
+#: PR (lazy-heap pools, slab events, cached cost features), measured with
+#: this same harness on the same machine as the committed "current" block.
+DEFAULT_JSON = "BENCH_sim_perf.json"
+
+_OPS = ["and", "or", "xor", "add", "sub", "mul", "cmp", "max", "copy"]
+
+
+def _synth_trace(op_ids, name="perf", n_arrays=4, pages_per_array=2):
+    """Deterministic synthetic trace (mirrors tests/_synth.py, inlined so
+    the bench has no test-tree or jax-workload dependency)."""
+    from repro.core.isa import VectorInstr
+    from repro.core.mapping import PageTable
+    from repro.core.vectorize import Trace
+    from repro.hw.ssd_spec import DEFAULT_SSD
+
+    page = DEFAULT_SSD.page_size
+    pt = PageTable(DEFAULT_SSD)
+    arrays = [pt.alloc_array(pages_per_array * page, name=f"a{i}")
+              for i in range(n_arrays)]
+    flat = [p for a in arrays for p in a]
+    instrs = []
+    producer: Dict[int, int] = {}
+    for i, oi in enumerate(op_ids):
+        op = _OPS[oi % len(_OPS)]
+        s1 = flat[(oi * 7 + i) % len(flat)]
+        s2 = flat[(oi * 13 + 3 * i) % len(flat)]
+        dst = flat[(oi * 5 + 2 * i + 1) % len(flat)]
+        deps = tuple(sorted({producer[s] for s in (s1, s2, dst)
+                             if s in producer}))
+        instrs.append(VectorInstr(iid=i, op=op, vlen=page, elem_bytes=1,
+                                  srcs=(s1, s2), dst=dst, deps=deps))
+        producer[dst] = i
+    return Trace(instrs=instrs, pages=pt, input_pages={"in0": arrays[0]},
+                 output_pages=[arrays[-1]], name=name)
+
+
+def _suites(smoke: bool) -> Dict[str, Callable]:
+    """suite name -> zero-arg builder returning (engine, result)."""
+    from repro.sim import (EventEngine, FTLConfig, HostIOStream,
+                          simulate_mix)
+
+    n_io = 96 if smoke else 256
+    n_gc_io = 160 if smoke else 512
+    ramp = list(range(40))
+    mixed = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+    a = _synth_trace(ramp, name="A")
+    b = _synth_trace(mixed, name="B")
+
+    def mix():
+        eng = EventEngine()
+        io = HostIOStream(rate_iops=80_000, n_requests=n_io, seed=7)
+        simulate_mix([a, b], "conduit", io_stream=io,
+                     compute_solo=False, engine=eng)
+        return eng
+
+    def gc_suite():
+        eng = EventEngine()
+        ftl = FTLConfig(blocks_per_die=4, pages_per_block=8,
+                        prefill=0.9, op_ratio=0.28)
+        io = HostIOStream(rate_iops=250_000, read_fraction=0.3,
+                          n_requests=n_gc_io, zipf_theta=0.95,
+                          n_logical_pages=ftl.logical_pages())
+        simulate_mix([a, b], "conduit", io_stream=io, ftl=ftl,
+                     compute_solo=False, engine=eng)
+        return eng
+
+    return {"mix": mix, "gc": gc_suite}
+
+
+def _measure(build: Callable, repeats: int) -> Tuple[float, int, float]:
+    """(best events/sec, events per run, total wall time of all runs)."""
+    build()                       # warm-up: caches as in any sweep's 2nd point
+    best = 0.0
+    total = 0.0
+    processed = 0
+    gc_was_enabled = gc.isenabled()
+    for _ in range(repeats):
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            eng = build()
+            dt = time.perf_counter() - t0
+        finally:
+            if gc_was_enabled:
+                gc.enable()
+        total += dt
+        processed = eng.processed
+        best = max(best, eng.processed / dt)
+    return best, processed, total
+
+
+def run_perf(smoke: bool = False, repeats: int = 5,
+             json_path: str = DEFAULT_JSON, check: bool = False,
+             write_json: bool = True) -> List[str]:
+    """Run the suites; print a table, write the JSON artifact, return the
+    ``name,value,derived`` CSV rows (run.py suite protocol)."""
+    rows: List[str] = []
+    committed = _load_committed(json_path)
+    baseline = (committed or {}).get("baseline", {})
+    current: Dict[str, float] = {}
+    print(f"\n== simulator perf ({'smoke' if smoke else 'full'}, "
+          f"best of {repeats})")
+    sweep_t0 = time.perf_counter()
+    for name, build in _suites(smoke).items():
+        evs, n_events, wall = _measure(build, repeats)
+        key = f"{name}_events_per_sec"
+        current[key] = round(evs, 1)
+        base = baseline.get(key)
+        ratio = f" ({evs / base:4.2f}x baseline)" if base else ""
+        print(f"  {name:4s} {n_events:6d} events  {evs:10,.0f} ev/s{ratio}  "
+              f"({wall * 1e3 / repeats:6.1f} ms/run)")
+        rows.append(f"simperf/{name}/events_per_sec,{evs:.0f},"
+                    f"baseline={base or 'n/a'}")
+    current["sweep_wall_s"] = round(time.perf_counter() - sweep_t0, 3)
+    rows.append(f"simperf/sweep_wall_s,{current['sweep_wall_s']},")
+
+    if write_json:
+        payload = {
+            "schema": "sim-perf-trajectory/v1",
+            "harness": {"repeats": repeats, "smoke": smoke,
+                        "metric": "engine events per second of wall time, "
+                                  "best of N, gc disabled, warm caches"},
+            "baseline": baseline or current,
+            "current": current,
+        }
+        if baseline:
+            # events/sec only: sweep_wall_s depends on --repeats and is
+            # informational, not a comparable trajectory metric
+            payload["speedup"] = {
+                k: round(current[k] / baseline[k], 2)
+                for k in current
+                if k.endswith("_per_sec") and baseline.get(k)}
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"  wrote {json_path}")
+
+    if check and not baseline:
+        # a missing/corrupt committed artifact must not silently disable
+        # the regression gate
+        sys.exit(f"[perf_bench] --check requested but {json_path} has no "
+                 "committed baseline — the regression gate cannot run")
+    if check:
+        floor = {k: v * (1.0 - REGRESSION_TOLERANCE)
+                 for k, v in baseline.items() if k.endswith("_per_sec")}
+        bad = {k: (current.get(k), f) for k, f in floor.items()
+               if current.get(k, 0.0) < f}
+        if bad:
+            for k, (got, f) in bad.items():
+                print(f"[perf_bench] REGRESSION {k}: {got:,.0f} ev/s < "
+                      f"floor {f:,.0f} (committed baseline "
+                      f"{baseline[k]:,.0f})", file=sys.stderr)
+            sys.exit("[perf_bench] events/sec regressed below the "
+                     "committed pre-optimization baseline")
+        print(f"  check ok: all suites above {1 - REGRESSION_TOLERANCE:.0%} "
+              f"of the committed baseline")
+    return rows
+
+
+def _load_committed(json_path: str) -> Dict:
+    try:
+        with open(json_path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def perf_suite() -> List[str]:
+    """run.py suite entry point (no JSON write: read-only CSV probe)."""
+    return run_perf(smoke=True, repeats=3, write_json=False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized configuration (smaller I/O streams, "
+                         "still real measurements)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help=f"trajectory artifact path (default {DEFAULT_JSON})")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if events/sec falls >"
+                         f"{REGRESSION_TOLERANCE:.0%} below the committed "
+                         "baseline in the JSON artifact")
+    ap.add_argument("--no-write", action="store_true",
+                    help="measure and check only; leave the JSON untouched")
+    args = ap.parse_args()
+    run_perf(smoke=args.smoke, repeats=args.repeats, json_path=args.json,
+             check=args.check, write_json=not args.no_write)
+
+
+if __name__ == "__main__":
+    main()

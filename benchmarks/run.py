@@ -1,35 +1,48 @@
 """Benchmark entry point: one function per paper table/figure plus the
-roofline/dry-run, pressure, fault-replay and kernel benches.
+roofline/dry-run, pressure, fault-replay, kernel and simulator-perf benches.
 
 Prints human-readable tables followed by a machine-readable
 ``name,value,derived`` CSV block.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig7a,table3
+  PYTHONPATH=src python -m benchmarks.run --only mix,gc --jobs 4
+  PYTHONPATH=src python -m benchmarks.run --only gc --profile
+
+Parallelism: ``--jobs N`` farms the selected suites across N worker
+processes.  Every simulation suite is internally seeded (hashed
+pseudo-random streams, no global RNG), so the workers share nothing and
+the output — both the per-suite tables and the CSV block — is printed in
+the deterministic ``--only`` order regardless of completion order:
+``--jobs 1`` and ``--jobs N`` produce identical suite output for every
+deterministic suite.  (The wall-clock-measuring suites — ``simperf``,
+``perf`` — print timings, which naturally vary run to run and are skewed
+when siblings saturate the CPU; run those with ``--jobs 1`` when the
+numbers matter.)
+
+Profiling: ``--profile`` wraps the selected suites in cProfile and prints
+the top-20 cumulative entries afterwards, so perf work starts from data.
+It forces sequential execution (a profile of worker stubs is useless).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import functools
+import io
 import sys
 import time
+from typing import Dict, List, Optional, Tuple
+
+#: suites whose signature takes a ``smoke`` kwarg (CI-sized shrink)
+SMOKE_AWARE = {"mix", "gc"}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
-                         "overhead,roofline,pressure,fault,mix,gc,kernels")
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized configurations for smoke-aware suites "
-                         "(mix, gc): tiny sweeps that only check the "
-                         "entry points still run")
-    args = ap.parse_args()
+def _suite_table() -> Dict:
+    from benchmarks import (kernel_bench, paper_figures, perf_bench,
+                            pressure_bench, roofline_bench)
 
-    from benchmarks import kernel_bench, paper_figures, pressure_bench
-    from benchmarks import roofline_bench
-
-    suites = {
+    return {
         "table3": paper_figures.table3_characterize,
         "fig7a": paper_figures.fig5_fig7a_speedup,
         "fig7b": paper_figures.fig7b_energy,
@@ -46,27 +59,100 @@ def main() -> None:
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,
+        "simperf": perf_bench.perf_suite,
     }
-    smoke_aware = {"mix", "gc"}
-    wanted = (args.only.split(",") if args.only else list(suites))
+
+
+def _run_one(name: str, smoke: bool) -> Tuple[str, List[str], str, Optional[str]]:
+    """Run one suite with captured stdout.
+
+    Top-level so it pickles for worker processes; returns
+    ``(name, csv_rows, captured_output, error)``."""
+    fn = _suite_table().get(name)
+    if fn is None:
+        return name, [f"error/{name},unknown suite,"], "", f"unknown suite {name}"
+    if smoke and name in SMOKE_AWARE:
+        fn = functools.partial(fn, smoke=True)
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            rows = fn()
+        return name, rows, buf.getvalue(), None
+    except Exception as e:  # pragma: no cover - exercised via failed suites
+        return name, [f"error/{name},{e},"], buf.getvalue(), str(e)
+
+
+def run_suites(wanted: List[str], smoke: bool = False, jobs: int = 1,
+               profile: bool = False) -> Tuple[List[str], List[str]]:
+    """Run ``wanted`` suites; returns ``(csv_rows, failed_names)``.
+
+    Output (tables + CSV rows) is assembled in ``wanted`` order for any
+    ``jobs`` value, so N=1 and N>1 runs are byte-identical."""
+    wanted = [w.strip() for w in wanted]
     csv_rows = ["name,value,derived"]
-    failed: list = []
+    failed: List[str] = []
+
+    profiler = None
+    if profile:
+        import cProfile
+        jobs = 1
+        profiler = cProfile.Profile()
+        profiler.enable()
+
+    if jobs <= 1:
+        results = [_run_one(name, smoke) for name in wanted]
+    else:
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+        # spawn, not fork: jax (imported by the workload suites) runs
+        # background threads, and forking a threaded process can deadlock
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=jobs, mp_context=ctx) as pool:
+            futures = [pool.submit(_run_one, name, smoke) for name in wanted]
+            results = [f.result() for f in futures]   # wanted order
+
+    if profiler is not None:
+        profiler.disable()
+
+    for name, rows, output, error in results:
+        if output:
+            print(output, end="")
+        if error is not None:
+            print(f"[benchmarks] suite {name} failed: {error}",
+                  file=sys.stderr)
+            failed.append(name)
+        csv_rows.extend(rows)
+
+    if profiler is not None:
+        import pstats
+        print("\n===== cProfile (top 20 cumulative) =====")
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(20)
+    return csv_rows, failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
+                         "overhead,roofline,pressure,fault,mix,gc,kernels,"
+                         "simperf")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized configurations for smoke-aware suites "
+                         "(mix, gc): tiny sweeps that only check the "
+                         "entry points still run")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for independent suites (output "
+                         "is identical for any N on deterministic suites; "
+                         "timing suites like simperf belong on --jobs 1)")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the selected suites in cProfile and print "
+                         "the top-20 cumulative entries (forces --jobs 1)")
+    args = ap.parse_args()
+
+    wanted = (args.only.split(",") if args.only else list(_suite_table()))
     t0 = time.time()
-    for name in wanted:
-        name = name.strip()
-        fn = suites.get(name)
-        if fn is None:
-            print(f"unknown suite {name}", file=sys.stderr)
-            failed.append(name)
-            continue
-        if args.smoke and name in smoke_aware:
-            fn = functools.partial(fn, smoke=True)
-        try:
-            csv_rows.extend(fn())
-        except Exception as e:  # pragma: no cover
-            print(f"[benchmarks] suite {name} failed: {e}", file=sys.stderr)
-            csv_rows.append(f"error/{name},{e},")
-            failed.append(name)
+    csv_rows, failed = run_suites(wanted, smoke=args.smoke, jobs=args.jobs,
+                                  profile=args.profile)
     print(f"\n[benchmarks] completed in {time.time()-t0:.0f}s")
     print("\n===== CSV =====")
     for row in csv_rows:

@@ -11,7 +11,8 @@ from repro.core.isa import (NDP_RESOURCES, Location, OpClass, Resource,
                             VectorInstr, compute_energy_nj,
                             compute_latency_ns, supports)
 from repro.core.cost import (HOME, Features, SystemView, decision_overhead_ns,
-                             dm_energy_nj, dm_latency_ns, features_for)
+                             dm_energy_nj, dm_latency_ns, exec_energy_nj,
+                             exec_latency_ns, features_for, static_features)
 from repro.core.mapping import PageEntry, PageTable
 from repro.core.policies import (ALL_POLICIES, ConduitPolicy, DMOffloading,
                                  BWOffloading, IdealPolicy, Policy,
@@ -22,7 +23,8 @@ __all__ = [
     "NDP_RESOURCES", "Location", "OpClass", "Resource", "VectorInstr",
     "compute_energy_nj", "compute_latency_ns", "supports", "HOME",
     "Features", "SystemView", "decision_overhead_ns", "dm_energy_nj",
-    "dm_latency_ns", "features_for", "PageEntry", "PageTable",
+    "dm_latency_ns", "exec_energy_nj", "exec_latency_ns", "features_for",
+    "static_features", "PageEntry", "PageTable",
     "ALL_POLICIES", "ConduitPolicy", "DMOffloading", "BWOffloading",
     "IdealPolicy", "Policy", "make_policy", "Trace", "TraceStats",
     "vectorize",

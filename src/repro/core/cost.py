@@ -19,7 +19,7 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.isa import (Location, Resource, VectorInstr,
-                            compute_latency_ns, supports)
+                            compute_energy_nj, compute_latency_ns, supports)
 from repro.hw.ssd_spec import SSDSpec
 
 # Operand "home" for each compute resource: where operands must reside for
@@ -44,26 +44,32 @@ def dm_latency_ns(src: Location, dst: Location, nbytes: int,
     """
     if src == dst:
         return 0.0
+    # NB: the sums below replicate the original per-pair expressions
+    # term-for-term (float addition is not associative) — the fast path
+    # only avoids building the full 12-entry table per call.
     f, d, h = spec.flash, spec.dram, spec.host
+    if src is Location.FLASH:
+        head = f.t_read_ns + f.t_dma_ns + nbytes * f.channel_ns_per_byte
+        if dst is Location.CTRL:
+            return head
+        if dst is Location.DRAM:
+            return head + nbytes * d.bus_ns_per_byte
+        return head + (nbytes * h.pcie_ns_per_byte + h.pcie_latency_ns)
     chan = nbytes * f.channel_ns_per_byte
+    if dst is Location.FLASH:
+        if src is Location.CTRL:
+            return chan + f.t_dma_ns + f.t_prog_ns
+        if src is Location.DRAM:
+            return nbytes * d.bus_ns_per_byte + chan + f.t_dma_ns + f.t_prog_ns
+        return (nbytes * h.pcie_ns_per_byte + h.pcie_latency_ns
+                + chan + f.t_dma_ns + f.t_prog_ns)
     bus = nbytes * d.bus_ns_per_byte
     pcie = nbytes * h.pcie_ns_per_byte + h.pcie_latency_ns
-
-    table = {
-        (Location.FLASH, Location.DRAM): f.t_read_ns + f.t_dma_ns + chan + bus,
-        (Location.DRAM, Location.FLASH): bus + chan + f.t_dma_ns + f.t_prog_ns,
-        (Location.FLASH, Location.CTRL): f.t_read_ns + f.t_dma_ns + chan,
-        (Location.CTRL, Location.FLASH): chan + f.t_dma_ns + f.t_prog_ns,
-        (Location.DRAM, Location.CTRL): bus,
-        (Location.CTRL, Location.DRAM): bus,
-        (Location.FLASH, Location.HOST): f.t_read_ns + f.t_dma_ns + chan + pcie,
-        (Location.DRAM, Location.HOST): bus + pcie,
-        (Location.CTRL, Location.HOST): pcie,
-        (Location.HOST, Location.FLASH): pcie + chan + f.t_dma_ns + f.t_prog_ns,
-        (Location.HOST, Location.DRAM): pcie + bus,
-        (Location.HOST, Location.CTRL): pcie,
-    }
-    return table[(src, dst)]
+    if Location.HOST not in (src, dst):
+        return bus                               # DRAM <-> CTRL
+    if src is Location.CTRL or dst is Location.CTRL:
+        return pcie                              # CTRL <-> HOST
+    return bus + pcie if src is Location.DRAM else pcie + bus
 
 
 def dm_energy_nj(src: Location, dst: Location, nbytes: int,
@@ -89,7 +95,7 @@ def dm_energy_nj(src: Location, dst: Location, nbytes: int,
     return e
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Features:
     """Per-(instruction, resource) feature vector — logged for Fig. 9/10."""
 
@@ -125,23 +131,102 @@ class SystemView:
     tenant: str = ""
 
 
+def static_features(instr: VectorInstr, resource: Resource,
+                    spec: SSDSpec) -> Tuple[bool, float, Location,
+                                            Tuple[float, float, float, float]]:
+    """Compile-time metadata of the cost function, memoized per instruction.
+
+    Returns ``(supported, latency_comp, home, dm_by_location)`` where
+    ``dm_by_location[loc.value]`` is the contention-free movement latency
+    of one operand page from ``loc`` to the resource's home.  Everything
+    here depends only on the instruction and the hardware spec — op type,
+    operand sizes, supported-resource masks, link constants — so the
+    offloader computes it once per :class:`VectorInstr` instead of
+    re-deriving it for every candidate resource at every dispatch.
+
+    The memo lives on the instruction object and pins the spec it was
+    computed for (compared by identity, so a different spec for the same
+    trace recomputes rather than aliasing)."""
+    cache = instr.__dict__.get("_static_feats")
+    if cache is None or cache[0] is not spec:
+        cache = (spec, {}, {}, {})
+        instr._static_feats = cache
+    per = cache[1].get(resource)
+    if per is None:
+        ok = supports(resource, instr) and instr.op_class.name != "CONTROL" \
+            or resource in (Resource.ISP, Resource.HOST_CPU)
+        home = HOME[resource]
+        lat = compute_latency_ns(instr, resource, spec) if ok else float("inf")
+        nbytes = instr.nbytes
+        dm_by_loc = (dm_latency_ns(Location.FLASH, home, nbytes, spec),
+                     dm_latency_ns(Location.DRAM, home, nbytes, spec),
+                     dm_latency_ns(Location.CTRL, home, nbytes, spec),
+                     dm_latency_ns(Location.HOST, home, nbytes, spec))
+        per = (ok, lat, home, dm_by_loc)
+        cache[1][resource] = per
+    return per
+
+
+def exec_latency_ns(instr: VectorInstr, resource: Resource, spec: SSDSpec,
+                    operands_latched: bool = False) -> float:
+    """Memoized :func:`~repro.core.isa.compute_latency_ns` for the
+    simulator's execution booking (both operand-latch variants cached
+    per instruction alongside the static features)."""
+    ok, lat, _, _ = static_features(instr, resource, spec)  # pins the cache
+    if not operands_latched:
+        if ok:
+            return lat
+        return compute_latency_ns(instr, resource, spec)
+    cache = instr._static_feats[2]      # created by static_features above
+    lat = cache.get(resource)
+    if lat is None:
+        lat = compute_latency_ns(instr, resource, spec,
+                                 operands_latched=True)
+        cache[resource] = lat
+    return lat
+
+
+def exec_energy_nj(instr: VectorInstr, resource: Resource, spec: SSDSpec,
+                   latency_ns: float) -> float:
+    """Memoized :func:`~repro.core.isa.compute_energy_nj` for the
+    simulator's execution booking — a pure function of the instruction,
+    resource and (already-memoized) latency."""
+    static_features(instr, resource, spec)      # pins the cache to spec
+    cache = instr._static_feats[3]
+    key = (resource, latency_ns)
+    e = cache.get(key)
+    if e is None:
+        e = compute_energy_nj(instr, resource, spec, latency_ns)
+        cache[key] = e
+    return e
+
+
 def features_for(instr: VectorInstr, resource: Resource, view: SystemView,
-                 spec: SSDSpec) -> Features:
-    ok = supports(resource, instr) and instr.op_class.name != "CONTROL" \
-        or resource in (Resource.ISP, Resource.HOST_CPU)
-    home = HOME[resource]
+                 spec: SSDSpec, dep_delay_ns: Optional[float] = None
+                 ) -> Features:
+    """One (instruction, resource) feature vector.
+
+    ``dep_delay_ns`` lets the policy pass the (resource-independent)
+    data-dependence delay it already computed; by default it is derived
+    from the view exactly as before."""
+    ok, lat, home, dm_by_loc = static_features(instr, resource, spec)
     dm = 0.0
     mq = 0.0
+    location_of = view.location_of
+    move_queue_ns = view.move_queue_ns
     for s in instr.srcs:
-        loc = view.location_of(s)
-        dm += dm_latency_ns(loc, home, instr.nbytes, spec)
-        if loc != home:
-            mq = max(mq, view.move_queue_ns(loc, home))
-    lat = compute_latency_ns(instr, resource, spec) if ok else float("inf")
-    dd = max(0.0, view.dep_ready_ns(instr) - view.now_ns)
-    q = max(view.queue_delay_ns(resource), mq)
-    return Features(resource=resource, latency_comp=lat, latency_dm=dm,
-                    delay_dd=dd, delay_queue=q, supported=ok)
+        loc = location_of(s)
+        dm += dm_by_loc[loc.value]
+        if loc is not home:
+            m = move_queue_ns(loc, home)
+            if m > mq:
+                mq = m
+    if dep_delay_ns is None:
+        dep_delay_ns = max(0.0, view.dep_ready_ns(instr) - view.now_ns)
+    q = view.queue_delay_ns(resource)
+    if mq > q:
+        q = mq
+    return Features(resource, lat, dm, dep_delay_ns, q, ok)
 
 
 def decision_overhead_ns(instr: VectorInstr, spec: SSDSpec,

@@ -152,9 +152,14 @@ class VectorInstr:
 
     @property
     def op_class(self) -> OpClass:
-        if not self.vectorizable:
-            return OpClass.CONTROL
-        return OP_TO_CLASS[self.op]
+        # memoized: read on every supports()/cost lookup in the dispatch
+        # loop, and (op, vectorizable) never change after construction
+        oc = self.__dict__.get("_op_class")
+        if oc is None:
+            oc = (OpClass.CONTROL if not self.vectorizable
+                  else OP_TO_CLASS[self.op])
+            self._op_class = oc
+        return oc
 
     @property
     def nbytes(self) -> int:

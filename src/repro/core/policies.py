@@ -47,13 +47,22 @@ class Policy:
 
     def _feats(self, instr: VectorInstr, view: SystemView
                ) -> Dict[Resource, Features]:
-        return {r: features_for(instr, r, view, self.spec)
+        # the data-dependence delay is resource-independent: compute it
+        # once per dispatch, not once per candidate resource
+        dd = view.dep_ready_ns(instr) - view.now_ns
+        if dd < 0.0:
+            dd = 0.0
+        spec = self.spec
+        return {r: features_for(instr, r, view, spec, dep_delay_ns=dd)
                 for r in self.candidates}
 
     def _supported(self, instr: VectorInstr,
                    feats: Dict[Resource, Features]) -> List[Resource]:
-        ok = [r for r in self.candidates
-              if feats[r].supported and supports(r, instr)]
+        # feats[r].supported implies supports(r, instr): the only fallback
+        # path to supported=True is ISP/HOST_CPU, whose SUPPORTED mask is
+        # the full OpClass set — so the old `and supports(r, instr)`
+        # re-check was always redundant
+        ok = [r for r in self.candidates if feats[r].supported]
         if instr.op_class is OpClass.CONTROL or not ok:
             # control-intensive regions always fall back to the cores
             fallback = (Resource.ISP if Resource.ISP in self.candidates

@@ -28,16 +28,31 @@ Semantics:
   (pessimistic) for cross-tenant interference; operand-ready re-queueing
   is a ROADMAP follow-on.
 
+Performance notes:
+
+* Heap entries are plain ``(time, seq, event)`` tuples, so ordering is
+  decided by float/int comparison alone — the ``seq`` tie-break is unique,
+  and the :class:`Event` object itself is never compared.  Events are
+  ``__slots__`` records (no per-instance dict, no dataclass ``__eq__``
+  machinery), and processed events are recycled through a small free list
+  (slab allocation) so steady-state scheduling allocates nothing.
+  Consequence: an :class:`Event` returned by :meth:`EventEngine.schedule`
+  is only valid until its handler has run — do not hold on to it.
+* Handlers run inside the engine's innermost loop: keep them
+  allocation-light.  Booking time on pools costs O(log k) heap pushes
+  (see :mod:`repro.sim.servers`); anything that allocates per event (list
+  comprehensions over units, per-call closures, rebuilding latency
+  tables) shows up directly in events/sec — ``benchmarks/perf_bench.py``
+  tracks the trajectory in ``BENCH_sim_perf.json``.
+
 Single-trace runs degenerate to a single event source processed in program
 order, which is why :func:`repro.sim.tenancy.simulate_mix` with one trace
 reproduces :func:`repro.sim.machine.simulate` exactly.
 """
 from __future__ import annotations
 
-import dataclasses
 import enum
-import heapq
-import itertools
+from heapq import heappop, heappush
 from typing import Any, Callable, List, Optional, Tuple
 
 
@@ -52,16 +67,26 @@ class EventKind(enum.Enum):
     TIMER = "timer"              # generic callback (tests, future policies)
 
 
-@dataclasses.dataclass(frozen=True)
 class Event:
-    time: float
-    seq: int
-    kind: EventKind
-    handler: Callable[["Event"], None] = dataclasses.field(compare=False)
-    payload: Any = dataclasses.field(default=None, compare=False)
+    """One scheduled activity.  Recycled via the engine's free list after
+    its handler runs — hold no references across processing."""
 
-    def __lt__(self, other: "Event") -> bool:
-        return (self.time, self.seq) < (other.time, other.seq)
+    __slots__ = ("time", "seq", "kind", "handler", "payload")
+
+    def __init__(self, time: float, seq: int, kind: EventKind,
+                 handler: Callable[["Event"], None], payload: Any = None):
+        self.time = time
+        self.seq = seq
+        self.kind = kind
+        self.handler = handler
+        self.payload = payload
+
+    def __repr__(self) -> str:   # debugging aid only
+        return f"Event(t={self.time}, seq={self.seq}, kind={self.kind})"
+
+
+#: bound on the event free list — far above any steady-state working set
+_FREE_LIST_MAX = 512
 
 
 class EventEngine:
@@ -77,8 +102,9 @@ class EventEngine:
     def __init__(self, record: bool = False):
         self.now: float = 0.0
         self.processed: int = 0
-        self._heap: List[Event] = []
-        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq: int = 0
+        self._free: List[Event] = []
         self.record = record
         self.log: List[Tuple[float, EventKind]] = []
 
@@ -86,12 +112,24 @@ class EventEngine:
                  handler: Callable[[Event], None],
                  payload: Any = None) -> Event:
         """Schedule ``handler`` at ``time`` (>= now: time cannot run back)."""
-        if time < self.now - self.EPS:
-            raise ValueError(
-                f"event {kind} scheduled at {time} < now {self.now}")
-        ev = Event(time=max(time, self.now), seq=next(self._seq),
-                   kind=kind, handler=handler, payload=payload)
-        heapq.heappush(self._heap, ev)
+        now = self.now
+        if time < now:
+            if time < now - self.EPS:
+                raise ValueError(
+                    f"event {kind} scheduled at {time} < now {now}")
+            time = now
+        seq = self._seq
+        self._seq = seq + 1
+        if self._free:
+            ev = self._free.pop()
+            ev.time = time
+            ev.seq = seq
+            ev.kind = kind
+            ev.handler = handler
+            ev.payload = payload
+        else:
+            ev = Event(time, seq, kind, handler, payload)
+        heappush(self._heap, (time, seq, ev))
         return ev
 
     def empty(self) -> bool:
@@ -99,13 +137,24 @@ class EventEngine:
 
     def run(self, until: Optional[float] = None) -> float:
         """Process events in time order; returns the final clock value."""
-        while self._heap:
-            if until is not None and self._heap[0].time > until:
+        heap = self._heap
+        free = self._free
+        record = self.record
+        pop = heappop
+        while heap:
+            time, _, ev = heap[0]
+            if until is not None and time > until:
                 break
-            ev = heapq.heappop(self._heap)
-            self.now = max(self.now, ev.time)
+            pop(heap)
+            if time > self.now:
+                self.now = time
             self.processed += 1
-            if self.record:
+            if record:
                 self.log.append((self.now, ev.kind))
             ev.handler(ev)
+            # recycle through the free list (slab allocation): the handler
+            # has run, nothing may hold this event any more
+            if len(free) < _FREE_LIST_MAX:
+                ev.handler = ev.payload = None
+                free.append(ev)
         return self.now

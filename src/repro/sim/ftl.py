@@ -187,6 +187,29 @@ class _DieFTL:
         self.state[blk] = self.FREE
         self.free.append(blk)
 
+    def clone(self) -> "_DieFTL":
+        """Deep-enough copy for the prefill snapshot cache."""
+        c = _DieFTL.__new__(_DieFTL)
+        c.ppb = self.ppb
+        c.n_blocks = self.n_blocks
+        c.state = list(self.state)
+        c.free = list(self.free)
+        c.valid_count = list(self.valid_count)
+        c.valid = [list(v) for v in self.valid]
+        c.page_lpn = [list(p) for p in self.page_lpn]
+        c.erase_count = list(self.erase_count)
+        c.active = dict(self.active)
+        c.grown_blocks = self.grown_blocks
+        c.gc_running = self.gc_running
+        return c
+
+
+#: memoized post-prefill (dies, l2p) snapshots — preconditioning a drive is
+#: a pure function of the geometry + LBA->die hash, and sweeps precondition
+#: the same drive dozens of times (e.g. every GC-off/GC-on pair)
+_PREFILL_CACHE: Dict[tuple, Tuple[List["_DieFTL"], Dict[int, PPN]]] = {}
+_PREFILL_CACHE_MAX = 8
+
 
 class FTLModel:
     """Binds an :class:`FTLConfig` to one fabric + event engine.
@@ -194,10 +217,13 @@ class FTLModel:
     ``die_of`` is the LBA->die hash the host I/O model uses for placement —
     passing it in keeps the FTL and the stream bit-consistent (the same
     LBA always lands on the same die, which is what makes the GC-disabled
-    run identical to the no-FTL run)."""
+    run identical to the no-FTL run).  ``prefill_key`` optionally
+    identifies that hash (e.g. the I/O seed) so the preconditioning
+    snapshot can be memoized across runs; ``None`` disables caching."""
 
     def __init__(self, cfg: FTLConfig, spec: SSDSpec, fabric: Fabric,
-                 engine: EventEngine, die_of: Callable[[int], int]):
+                 engine: EventEngine, die_of: Callable[[int], int],
+                 prefill_key: Optional[tuple] = None):
         self.cfg = cfg
         self.spec = spec
         self.fabric = fabric
@@ -225,8 +251,25 @@ class FTLModel:
         self.gc_energy_nj = 0.0
         self.host_during_gc_ns: List[float] = []
 
-        for lpn in range(int(cfg.prefill * self.n_logical)):
-            self._map_write(lpn, die_of(lpn), _DieFTL.HOST)
+        n_prefill = int(cfg.prefill * self.n_logical)
+        if n_prefill:
+            key = None
+            if prefill_key is not None:
+                key = (prefill_key, cfg.blocks_per_die, cfg.pages_per_block,
+                       self.n_dies, n_prefill)
+            hit = _PREFILL_CACHE.get(key) if key is not None else None
+            if hit is not None:
+                dies_snap, l2p_snap = hit
+                self.dies = [d.clone() for d in dies_snap]
+                self.l2p = dict(l2p_snap)
+            else:
+                for lpn in range(n_prefill):
+                    self._map_write(lpn, die_of(lpn), _DieFTL.HOST)
+                if key is not None:
+                    if len(_PREFILL_CACHE) >= _PREFILL_CACHE_MAX:
+                        _PREFILL_CACHE.pop(next(iter(_PREFILL_CACHE)))
+                    _PREFILL_CACHE[key] = ([d.clone() for d in self.dies],
+                                           dict(self.l2p))
 
     # -- mapping --------------------------------------------------------------
 
@@ -288,19 +331,21 @@ class FTLModel:
         chan = die % f.channels
         xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
         t = self.engine.now
+        dies_pool = self.fabric.dies
+        chan_pool = self.fabric.channels
         for pg in range(d.ppb):
             if not d.valid[victim][pg]:
                 continue
             lpn = d.page_lpn[victim][pg]
-            t = self.fabric.dies.acquire(t, f.t_read_ns, unit=die).end
-            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
-            t = self.fabric.dies.acquire(t, f.t_prog_ns, unit=die).end
+            t = dies_pool.acquire_end(t, f.t_read_ns, unit=die)
+            t = chan_pool.acquire_end(t, xfer, unit=chan)
+            t = dies_pool.acquire_end(t, f.t_prog_ns, unit=die)
             self._map_write(lpn, die, _DieFTL.GC)
             self.gc_pages_copied += 1
             self.gc_energy_nj += (f.e_read_nj_per_channel
                                   + 2.0 * f.e_dma_nj_per_channel
                                   + f.e_prog_nj_per_channel)
-        t = self.fabric.dies.acquire(t, f.t_erase_ns, unit=die).end
+        t = self.fabric.dies.acquire_end(t, f.t_erase_ns, unit=die)
         d.erase(victim)
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block

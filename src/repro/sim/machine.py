@@ -27,9 +27,8 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
-                             dm_energy_nj)
-from repro.core.isa import (Location, Resource, VectorInstr,
-                            compute_energy_nj, compute_latency_ns)
+                             dm_energy_nj, exec_energy_nj, exec_latency_ns)
+from repro.core.isa import Location, Resource, VectorInstr
 from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
@@ -58,6 +57,11 @@ def _hash01(iid: int, seed: int) -> float:
     x = (x * 0x45D9F3B) & 0xFFFFFFFF
     x ^= x >> 16
     return x / 2**32
+
+
+def _zero_queue(r: Resource) -> float:
+    """Queue feature of the contention-free Ideal policy view."""
+    return 0.0
 
 
 class Simulation:
@@ -124,6 +128,35 @@ class Simulation:
         self._makespan = start_ns
         self.done = False
 
+        # -- hoisted per-dispatch structures (perf) ---------------------------
+        # Link-latency constants (page-sized transfers; float addition is
+        # commutative, so one constant serves both operand directions).
+        f, d, h = spec.flash, spec.dram, spec.host
+        nb = spec.page_size
+        self._chan_xfer_ns = f.t_dma_ns + nb * f.channel_ns_per_byte
+        self._bus_ns = nb * d.bus_ns_per_byte
+        self._pcie_ns = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
+        self._pcie_nolat_ns = nb * h.pcie_ns_per_byte
+        # Movement-path queue feature: pool lists per location pair live on
+        # the (possibly shared) fabric — computed once per SSD, not per
+        # tenant.
+        self._path_pools = self.fabric.path_pools
+        # Persistent SystemViews: the offloader's runtime snapshot reuses
+        # bound methods reading the cursor fields below instead of building
+        # a dataclass plus three closures per dispatch.
+        self._view_now = 0.0
+        self._cur_deps_ready = start_ns
+        self._view = SystemView(
+            now_ns=0.0,
+            queue_delay_ns=self._queue_feature,
+            dep_ready_ns=self._dep_feature,
+            location_of=self.pages.location,
+            move_queue_ns=self._move_queue_feature,
+            tenant=self.tenant)
+        self._ideal_view = SystemView(
+            0.0, _zero_queue, self._dep_feature, self.pages.location,
+            tenant=self.tenant)
+
         # accounting
         self.compute_energy = 0.0
         self.movement_energy = 0.0
@@ -145,44 +178,37 @@ class Simulation:
         if src == to:
             self._touch(pid, to, ready)
             return ready
-        f, d, h = self.spec.flash, self.spec.dram, self.spec.host
+        f = self.spec.flash
         nb = self.spec.page_size
         t = ready
         if ent.dirty and ent.owner not in (Location.FLASH, to):
             self.coherence_syncs += 1      # cross-resource request on dirty page
 
-        sense = 0.0 if pid in self.buffered else f.t_read_ns
         if src == Location.FLASH:
-            if sense:
-                t = self.dies.acquire(t, sense, unit=ent.die).end
-            t = self.channels.acquire(
-                t, f.t_dma_ns + nb * f.channel_ns_per_byte,
-                unit=ent.channel).end
+            if pid not in self.buffered:   # latched pages skip the sense
+                t = self.dies.acquire_end(t, f.t_read_ns, unit=ent.die)
+            t = self.channels.acquire_end(
+                t, self._chan_xfer_ns, unit=ent.channel)
             if to in (Location.DRAM, Location.CTRL):
-                t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+                t = self.dram_bus.acquire_end(t, self._bus_ns)
             elif to == Location.HOST:
-                t = self.pcie.acquire(
-                    t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+                t = self.pcie.acquire_end(t, self._pcie_ns)
         elif src in (Location.DRAM, Location.CTRL):
-            t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+            t = self.dram_bus.acquire_end(t, self._bus_ns)
             if to == Location.FLASH:
-                t = self.channels.acquire(
-                    t, nb * f.channel_ns_per_byte + f.t_dma_ns,
-                    unit=ent.channel).end
-                t = self.dies.acquire(t, f.t_prog_ns, unit=ent.die).end
+                t = self.channels.acquire_end(
+                    t, self._chan_xfer_ns, unit=ent.channel)
+                t = self.dies.acquire_end(t, f.t_prog_ns, unit=ent.die)
             elif to == Location.HOST:
-                t = self.pcie.acquire(
-                    t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+                t = self.pcie.acquire_end(t, self._pcie_ns)
         elif src == Location.HOST:
-            t = self.pcie.acquire(
-                t, nb * h.pcie_ns_per_byte + h.pcie_latency_ns).end
+            t = self.pcie.acquire_end(t, self._pcie_ns)
             if to == Location.FLASH:
-                t = self.channels.acquire(
-                    t, nb * f.channel_ns_per_byte + f.t_dma_ns,
-                    unit=ent.channel).end
-                t = self.dies.acquire(t, f.t_prog_ns, unit=ent.die).end
+                t = self.channels.acquire_end(
+                    t, self._chan_xfer_ns, unit=ent.channel)
+                t = self.dies.acquire_end(t, f.t_prog_ns, unit=ent.die)
             elif to in (Location.DRAM, Location.CTRL):
-                t = self.dram_bus.acquire(t, nb * d.bus_ns_per_byte).end
+                t = self.dram_bus.acquire_end(t, self._bus_ns)
         self.movement_energy += dm_energy_nj(src, to, nb, self.spec)
         if pid in self.buffered:
             u = self.buffered.pop(pid)
@@ -225,17 +251,15 @@ class Simulation:
             return
         if ent.owner in (Location.DRAM, Location.CTRL, Location.HOST):
             # latest version off-flash -> commit asynchronously
-            f, d = self.spec.flash, self.spec.dram
-            nb = self.spec.page_size
-            t = self.dram_bus.acquire(now, nb * d.bus_ns_per_byte).end \
+            f = self.spec.flash
+            t = self.dram_bus.acquire_end(now, self._bus_ns) \
                 if ent.location != Location.HOST else \
-                self.pcie.acquire(now, nb * self.spec.host.pcie_ns_per_byte).end
-            t = self.channels.acquire(
-                t, nb * f.channel_ns_per_byte + f.t_dma_ns,
-                unit=ent.channel).end
-            self.dies.acquire(t, f.t_prog_ns, unit=ent.die)
+                self.pcie.acquire_end(now, self._pcie_nolat_ns)
+            t = self.channels.acquire_end(
+                t, self._chan_xfer_ns, unit=ent.channel)
+            self.dies.acquire_end(t, f.t_prog_ns, unit=ent.die)
             self.movement_energy += dm_energy_nj(
-                ent.location, Location.FLASH, nb, self.spec)
+                ent.location, Location.FLASH, self.spec.page_size, self.spec)
             self.coherence_syncs += 1
         ent.owner = Location.FLASH
         ent.dirty = False
@@ -255,17 +279,25 @@ class Simulation:
 
     def _path_queue_ns(self, src: Location, dst: Location, now: float) -> float:
         """Queueing delay along the movement path src->dst (feature 4
-        generalized: the instruction waits on these queues too)."""
-        if src == dst:
-            return 0.0
-        pools = []
-        if src == Location.FLASH or dst == Location.FLASH:
-            pools += [self.dies, self.channels]
-        if Location.DRAM in (src, dst) or Location.CTRL in (src, dst):
-            pools.append(self.dram_bus)
-        if Location.HOST in (src, dst):
-            pools.append(self.pcie)
-        return max((p.queue_delay_ns(now) for p in pools), default=0.0)
+        generalized: the instruction waits on these queues too).  The pool
+        list per location pair is precomputed in ``__init__``."""
+        best = 0.0
+        for p in self._path_pools[(src, dst)]:
+            q = p.queue_delay_ns(now)
+            if q > best:
+                best = q
+        return best
+
+    # -- SystemView feature callbacks (bound once, read the dispatch cursor) --
+
+    def _queue_feature(self, r: Resource) -> float:
+        return self.pools[r].queue_delay_ns(self._view_now)
+
+    def _dep_feature(self, instr: VectorInstr) -> float:
+        return self._cur_deps_ready
+
+    def _move_queue_feature(self, src: Location, dst: Location) -> float:
+        return self._path_queue_ns(src, dst, self._view_now)
 
     # -- execution ------------------------------------------------------------
 
@@ -286,13 +318,13 @@ class Simulation:
                     self.colocations += moved
                     f = self.spec.flash
                     for s in flash_srcs[1:1 + moved]:
-                        t0 = self.dies.acquire(
-                            ready, f.t_read_ns, unit=self.pages[s].die).end
-                        t0 = self.channels.acquire(
+                        t0 = self.dies.acquire_end(
+                            ready, f.t_read_ns, unit=self.pages[s].die)
+                        t0 = self.channels.acquire_end(
                             t0, self.spec.page_size * f.channel_ns_per_byte,
-                            unit=self.pages[s].channel).end
-                        ready = self.dies.acquire(
-                            t0, f.t_prog_ns, unit=self.pages[s].die).end
+                            unit=self.pages[s].channel)
+                        ready = self.dies.acquire_end(
+                            t0, f.t_prog_ns, unit=self.pages[s].die)
                         self.movement_energy += (
                             f.e_read_nj_per_channel * 0.3 + f.e_prog_nj_per_channel)
             # latch affinity: prefer the unit already buffering an operand
@@ -310,10 +342,10 @@ class Simulation:
         if r is Resource.PUD:
             # ACT/PRE command issue serializes on the DRAM command/data bus
             # even though banks execute bbops concurrently (MIMDRAM model).
-            issue = 0.18 * compute_latency_ns(instr, r, self.spec)
-            ready = self.dram_bus.acquire(ready, issue).end
+            issue = 0.18 * exec_latency_ns(instr, r, self.spec)
+            ready = self.dram_bus.acquire_end(ready, issue)
 
-        lat = compute_latency_ns(instr, r, self.spec, operands_latched=latched)
+        lat = exec_latency_ns(instr, r, self.spec, operands_latched=latched)
         pool = self.pools[r]
         if allow_contention:
             acq = pool.acquire(ready, lat, unit=unit)
@@ -322,7 +354,7 @@ class Simulation:
             start, end = ready, ready + lat
             pool.busy_ns += lat
             pool.jobs += 1
-        self.compute_energy += compute_energy_nj(instr, r, self.spec, lat)
+        self.compute_energy += exec_energy_nj(instr, r, self.spec, lat)
 
         home = HOME[r]
         self.pages.record_write(instr.dst, home)
@@ -347,15 +379,13 @@ class Simulation:
                     # page buffer to SSD DRAM (a program back into the
                     # array would cost 400us; the controller drains hot
                     # data through the normal read path instead).
-                    f = self.spec.flash
-                    nb = self.spec.page_size
-                    t = self.channels.acquire(
-                        end, f.t_dma_ns + nb * f.channel_ns_per_byte,
-                        unit=self.pages[prev].channel).end
-                    t = self.dram_bus.acquire(
-                        t, nb * self.spec.dram.bus_ns_per_byte).end
+                    t = self.channels.acquire_end(
+                        end, self._chan_xfer_ns,
+                        unit=self.pages[prev].channel)
+                    t = self.dram_bus.acquire_end(t, self._bus_ns)
                     self.movement_energy += dm_energy_nj(
-                        Location.FLASH, Location.DRAM, nb, self.spec)
+                        Location.FLASH, Location.DRAM,
+                        self.spec.page_size, self.spec)
                     self.pages[prev].owner = Location.DRAM
                     self.pages[prev].dirty = True
                     self.pages.move(prev, Location.DRAM)
@@ -427,14 +457,13 @@ class Simulation:
             # overhead, fastest resource per instruction.  Execution
             # still occupies the (contention-free scheduled) compute
             # units — an upper bound on realizable offloading.
-            view = SystemView(0.0, lambda r: 0.0, lambda i: deps_ready,
-                              self.pages.location, tenant=self.tenant)
-            decision = self.policy.select(instr, view)
+            self._cur_deps_ready = deps_ready
+            decision = self.policy.select(instr, self._ideal_view)
             r = decision.resource
-            lat = compute_latency_ns(instr, r, spec)
+            lat = exec_latency_ns(instr, r, spec)
             acq = self.pools[r].acquire(deps_ready, lat)
             start, end = acq.start, acq.end
-            self.compute_energy += compute_energy_nj(instr, r, spec, lat)
+            self.compute_energy += exec_energy_nj(instr, r, spec, lat)
             self.pages.record_write(instr.dst, HOME[r])
             self.completion[instr.iid] = end
             self.resource_counts[r] += 1
@@ -444,9 +473,14 @@ class Simulation:
             return
 
         if self.policy.dynamic:
-            pending = any(d in self.completion
-                          and self.completion[d] > self._prev_decide_end
-                          for d in instr.deps)
+            pending = False
+            completion = self.completion
+            threshold = self._prev_decide_end
+            for d in instr.deps:
+                c = completion.get(d)
+                if c is not None and c > threshold:
+                    pending = True
+                    break
             overhead = decision_overhead_ns(
                 instr, spec, l2p_lookup=self.pages.lookup_latency_ns,
                 has_pending_deps=pending)
@@ -458,14 +492,10 @@ class Simulation:
         self._prev_decide_end = acq.start
         self.overhead_total += overhead
 
-        view = SystemView(
-            now_ns=now,
-            queue_delay_ns=lambda r: self.pools[r].queue_delay_ns(now),
-            dep_ready_ns=lambda i: deps_ready,
-            location_of=self.pages.location,
-            move_queue_ns=lambda src, dst: self._path_queue_ns(src, dst, now),
-            tenant=self.tenant,
-        )
+        self._view_now = now
+        self._cur_deps_ready = deps_ready
+        view = self._view
+        view.now_ns = now
         decision = self.policy.select(instr, view)
         r = decision.resource
 

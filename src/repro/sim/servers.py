@@ -7,6 +7,26 @@ units.  Work items acquire a unit FIFO; the pool tracks per-unit
 free-times, total busy time, and the queue-delay feature (Table 1,
 ``delay_queue``) the cost function reads.
 
+Performance: the channel x die fabrics make ``acquire``/``peek_start``/
+``queue_delay_ns`` the innermost loop of the simulator, so the pool keeps
+an incrementally maintained min-structure instead of scanning all k units
+per call:
+
+* ``_heap`` is a lazy min-heap of ``(free_time, unit)`` entries.  Every
+  update of a unit's free time pushes a fresh entry; entries whose value
+  no longer matches ``free[unit]`` are stale and skipped on pop.  Free
+  times are monotone per unit (FIFO booking never rewinds), so stale
+  entries always sort *before* the live entry of the same unit and are
+  discarded in O(log k) amortized.  Tie-breaking matches the old linear
+  scan exactly: the heap orders by ``(free_time, unit)``, i.e. the
+  lowest-indexed unit among equally-free units wins.
+* ``_pending_work`` is the running pending-work counter (the paper's §4.5
+  footnote 5 incremental queue counter): the sum of all units' booked
+  free times, maintained in O(1) per acquire.  ``pending_work_ns(now)``
+  subtracts each unit's already-elapsed share (``min(free_u, now)``) from
+  the counter, which equals the brute-force ``sum(max(0, free_u - now))``
+  for *any* probe time — asserted in ``tests/test_servers_fastpath.py``.
+
 :class:`Fabric` groups one full SSD's worth of pools so that several
 concurrent tenants (and a background host I/O stream) can contend for the
 *same* channels, dies, DRAM bus and PCIe link — the multi-tenant regime of
@@ -14,18 +34,20 @@ concurrent tenants (and a background host I/O stream) can contend for the
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
+from heapq import heappop, heappush
+from typing import Dict, List, NamedTuple, Optional
 
 
-@dataclasses.dataclass
-class Acquisition:
+class Acquisition(NamedTuple):
     unit: int
     start: float
     end: float
 
 
 class ServerPool:
+    __slots__ = ("name", "units", "free", "busy_ns", "jobs", "_heap",
+                 "_pending_work")
+
     def __init__(self, name: str, units: int):
         assert units >= 1
         self.name = name
@@ -33,44 +55,118 @@ class ServerPool:
         self.free: List[float] = [0.0] * units
         self.busy_ns: float = 0.0
         self.jobs: int = 0
-        # Running counter of enqueued-but-unfinished work (the paper's §4.5
-        # footnote 5 incremental queue counter).
+        # lazy min-heap over (free_time, unit); one live entry per unit
+        self._heap: List[tuple] = [(0.0, u) for u in range(units)]
+        # Running counter of booked work (the paper's §4.5 footnote 5
+        # incremental queue counter): the sum of all units' free times,
+        # maintained in O(1) on every acquire.  Pending work at time t is
+        # this counter minus each unit's elapsed share (pending_work_ns).
         self._pending_work: float = 0.0
+
+    # -- min-structure maintenance --------------------------------------------
+
+    def _min_unit(self) -> tuple:
+        """(free_time, unit) of the earliest-free unit, lowest index on
+        ties — identical to the old ``min(range(units))`` scan."""
+        heap = self._heap
+        free = self.free
+        while True:
+            f, u = heap[0]
+            if free[u] == f:
+                return f, u
+            heappop(heap)          # stale: the unit was re-booked since
+
+    # -- queue features --------------------------------------------------------
 
     def queue_delay_ns(self, now: float) -> float:
         """Expected wait before a new job could start (Table 1 feature)."""
-        waits = [max(0.0, f - now) for f in self.free]
-        return min(waits)
+        # inlined _min_unit: this is the cost function's innermost probe
+        heap = self._heap
+        free = self.free
+        while True:
+            f, u = heap[0]
+            if free[u] == f:
+                break
+            heappop(heap)
+        d = f - now
+        return d if d > 0.0 else 0.0
 
     def pending_work_ns(self, now: float) -> float:
-        return sum(max(0.0, f - now) for f in self.free)
+        """Total booked-but-unfinished work across units at ``now``:
+        the maintained counter minus each unit's already-elapsed share.
+
+        The counter accumulates incrementally, so the result can differ
+        from the direct ``sum(max(0, f - now))`` by float-rounding ulps;
+        it is clamped at zero so an idle pool always reads exactly 0.0."""
+        pending = self._pending_work
+        for f in self.free:
+            pending -= f if f < now else now
+        return pending if pending > 0.0 else 0.0
 
     def utilization(self, makespan: float) -> float:
-        if makespan <= 0:
+        if makespan <= 0 or self.jobs == 0:
             return 0.0
         return self.busy_ns / (makespan * self.units)
+
+    # -- booking ---------------------------------------------------------------
 
     def acquire(self, ready: float, dur: float,
                 unit: Optional[int] = None) -> Acquisition:
         """FIFO-acquire a unit at the earliest feasible start >= ready."""
+        free = self.free
         if unit is None:
-            unit = min(range(self.units), key=lambda u: self.free[u])
-        start = max(ready, self.free[unit])
+            heap = self._heap
+            while True:
+                f, u = heap[0]
+                if free[u] == f:
+                    break
+                heappop(heap)
+            unit = u
+        else:
+            f = free[unit]
+        start = ready if ready > f else f
         end = start + dur
-        self.free[unit] = end
+        free[unit] = end
+        heappush(self._heap, (end, unit))
+        self._pending_work += end - f
         self.busy_ns += dur
         self.jobs += 1
-        return Acquisition(unit=unit, start=start, end=end)
+        return Acquisition(unit, start, end)
+
+    def acquire_end(self, ready: float, dur: float,
+                    unit: Optional[int] = None) -> float:
+        """:meth:`acquire`, returning only the completion time.
+
+        The allocation-free fast path for the (majority of) booking sites
+        that chain on ``.end`` and never read the unit or start."""
+        free = self.free
+        if unit is None:
+            heap = self._heap
+            while True:
+                f, u = heap[0]
+                if free[u] == f:
+                    break
+                heappop(heap)
+            unit = u
+        else:
+            f = free[unit]
+        end = (ready if ready > f else f) + dur
+        free[unit] = end
+        heappush(self._heap, (end, unit))
+        self._pending_work += end - f
+        self.busy_ns += dur
+        self.jobs += 1
+        return end
 
     def peek_start(self, ready: float, unit: Optional[int] = None) -> float:
-        if unit is None:
-            unit = min(range(self.units), key=lambda u: self.free[u])
-        return max(ready, self.free[unit])
+        f = self._min_unit()[0] if unit is None else self.free[unit]
+        return ready if ready > f else f
 
     @property
     def horizon_ns(self) -> float:
-        """Latest booked completion across units (end of all queued work)."""
-        return max(self.free)
+        """Latest booked completion across units (end of all queued work);
+        0.0 for a pool that never saw a job."""
+        return max(self.free) if self.free else 0.0
 
 
 class Fabric:
@@ -106,6 +202,23 @@ class Fabric:
         self.dies = self.pools[Resource.IFP]   # alias: same physical units
         self.dram_bus = ServerPool("dram_bus", 1)
         self.pcie = ServerPool("pcie", 1)
+        # movement-path queue feature: which pools a src->dst page transfer
+        # waits on, precomputed for all 16 location pairs (shared by every
+        # tenant Simulation bound to this fabric)
+        from repro.core.isa import Location
+        self.path_pools: Dict = {}
+        for src in Location:
+            for dst in Location:
+                pools: List[ServerPool] = []
+                if src != dst:
+                    if src is Location.FLASH or dst is Location.FLASH:
+                        pools += [self.dies, self.channels]
+                    if (Location.DRAM in (src, dst)
+                            or Location.CTRL in (src, dst)):
+                        pools.append(self.dram_bus)
+                    if Location.HOST in (src, dst):
+                        pools.append(self.pcie)
+                self.path_pools[(src, dst)] = tuple(pools)
 
     def all_pools(self) -> List[ServerPool]:
         return list(self.pools.values()) + [

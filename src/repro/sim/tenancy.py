@@ -85,6 +85,36 @@ def _zipf_cdf(n: int, theta: float) -> Tuple[float, ...]:
     return tuple(out)
 
 
+@functools.lru_cache(maxsize=8)
+def _request_plan(stream: "HostIOStream", space: int, total_dies: int
+                  ) -> Tuple[Tuple[float, int, bool, int], ...]:
+    """Per-request ``(arrival_ns, lpn, is_read, hashed_die)`` for a stream.
+
+    Everything here is a pure function of the (frozen, hashable) stream
+    spec, the LBA space and the die count, so sweeps that replay one
+    stream against several FTL/fabric configurations (e.g. the GC-off
+    vs. GC-on pairs of ``gc_interference``) hash the arrival process once
+    instead of re-deriving it per run.  The FTL's dynamic L2P read
+    resolution still happens at issue time."""
+    seed = stream.seed
+    lpn_seed = seed ^ 0x1BA5
+    read_seed = seed ^ 0x4EAD
+    theta = stream.zipf_theta
+    cdf = _zipf_cdf(space, round(theta, 6)) if theta > 0.0 else None
+    read_fraction = stream.read_fraction
+    plan = []
+    for i, t in enumerate(stream.arrival_times_ns()):
+        u = min(0.999999, max(0.0, _hash01(i, lpn_seed)))
+        if cdf is None:
+            lpn = min(space - 1, int(u * space))
+        else:
+            lpn = min(space - 1, bisect.bisect_left(cdf, u * cdf[-1]))
+        is_read = _hash01(i, read_seed) < read_fraction
+        die = _die_of_lpn(lpn, seed, total_dies)
+        plan.append((t, lpn, is_read, die))
+    return tuple(plan)
+
+
 @dataclasses.dataclass(frozen=True)
 class HostIOStream:
     """Synthetic background host I/O: page-sized NVMe reads/writes.
@@ -157,21 +187,22 @@ class _HostIOModel:
         self.outstanding = 0
         self.pending: Deque[Tuple[int, float]] = deque()
         self.last_complete_ns = 0.0
-        for i, t in enumerate(stream.arrival_times_ns()):
+        # hoisted per-request constants (the issue path runs per event)
+        f, h = spec.flash, spec.host
+        nb = spec.page_size
+        self._xfer_ns = f.t_dma_ns + nb * f.channel_ns_per_byte
+        self._link_ns = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
+        self._qd = stream.queue_depth
+        # per-request (arrival, lpn, is_read, hashed_die), memoized across
+        # runs replaying the same stream spec
+        self.plan = _request_plan(stream, self.space, spec.flash.total_dies)
+        for i, (t, _, _, _) in enumerate(self.plan):
             engine.schedule(t, EventKind.IO_ARRIVAL, self._on_arrival,
                             payload=i)
 
-    def _lpn(self, i: int) -> int:
-        s = self.stream
-        u = min(0.999999, max(0.0, _hash01(i, s.seed ^ 0x1BA5)))
-        if s.zipf_theta <= 0.0:
-            return min(self.space - 1, int(u * self.space))
-        cdf = _zipf_cdf(self.space, round(s.zipf_theta, 6))
-        return min(self.space - 1, bisect.bisect_left(cdf, u * cdf[-1]))
-
     def _on_arrival(self, ev: Event) -> None:
         i = ev.payload
-        qd = self.stream.queue_depth
+        qd = self._qd
         if qd is not None and self.outstanding >= qd:
             self.pending.append((i, self.engine.now))  # NVMe QD front-end cap
             return
@@ -179,31 +210,28 @@ class _HostIOModel:
 
     def _issue(self, i: int, arrival_ns: float) -> None:
         self.outstanding += 1
-        s, f, h = self.stream, self.spec.flash, self.spec.host
-        nb = self.spec.page_size
+        f = self.spec.flash
         now = self.engine.now
-        lpn = self._lpn(i)
-        die = _die_of_lpn(lpn, s.seed, f.total_dies)
-        is_read = _hash01(i, s.seed ^ 0x4EAD) < s.read_fraction
+        _, lpn, is_read, die = self.plan[i]
         during_gc = self.ftl is not None and self.ftl.gc_busy
-        xfer = f.t_dma_ns + nb * f.channel_ns_per_byte
-        link = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
+        xfer = self._xfer_ns
+        link = self._link_ns
         if is_read:
             self.n_reads += 1
             if self.ftl is not None:
                 die = self.ftl.read_die(lpn, die)   # L2P-resolved placement
             chan = die % f.channels
-            t = self.fabric.dies.acquire(now, f.t_read_ns, unit=die).end
-            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
-            t = self.fabric.pcie.acquire(t, link).end
+            t = self.fabric.dies.acquire_end(now, f.t_read_ns, unit=die)
+            t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
+            t = self.fabric.pcie.acquire_end(t, link)
         else:
             self.n_writes += 1
             if self.ftl is not None:
                 self.ftl.host_write(lpn, die)       # map + invalidate old PPN
             chan = die % f.channels
-            t = self.fabric.pcie.acquire(now, link).end
-            t = self.fabric.channels.acquire(t, xfer, unit=chan).end
-            t = self.fabric.dies.acquire(t, f.t_prog_ns, unit=die).end
+            t = self.fabric.pcie.acquire_end(now, link)
+            t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
+            t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
             if self.ftl is not None:
                 self.ftl.maybe_start_gc(die)        # watermark check
         self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
@@ -273,12 +301,22 @@ def simulate_mix(traces: Sequence[Trace],
     pols = _as_policies(policies, len(traces), spec)
 
     # A Trace owns its PageTable (mutable residency state): tenants must
-    # not share one, so duplicate Trace objects get a deep copy.
+    # not share one, so duplicate Trace objects get a deep copy.  The
+    # per-instruction cost-function memos are detached first — they are
+    # spec-identity-pinned (a copy would be dead weight) and are rebuilt
+    # lazily by the clone's first dispatch.
     seen: set = set()
     tenant_traces: List[Trace] = []
     for tr in traces:
         if id(tr) in seen:
-            tr = copy.deepcopy(tr)
+            saved = [(ins, ins.__dict__.pop("_static_feats", None))
+                     for ins in tr.instrs]
+            try:
+                tr = copy.deepcopy(tr)
+            finally:
+                for ins, memo in saved:
+                    if memo is not None:
+                        ins._static_feats = memo
         seen.add(id(tr))
         tenant_traces.append(tr)
 
@@ -298,7 +336,8 @@ def simulate_mix(traces: Sequence[Trace],
         ftl_model = FTLModel(
             ftl, spec, fabric, engine,
             die_of=lambda lpn: _die_of_lpn(lpn, io_seed,
-                                           spec.flash.total_dies))
+                                           spec.flash.total_dies),
+            prefill_key=(io_seed, spec.flash.total_dies))
     sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name,
                        start_ns=st)
             for name, tr, pol, st in zip(names, tenant_traces, pols, starts)]

@@ -1,0 +1,123 @@
+"""Golden-equivalence scenarios + digests for the simulator fast path.
+
+The perf work on the event engine (lazy-heap server pools, slab events,
+cached cost features, hoisted dispatch structures) must keep results
+**bit-identical**.  This module defines a fixed set of scenarios spanning
+every hot path — single-trace simulate, multi-tenant mix with host I/O,
+GC-enabled FTL, capacity pressure + fault replay — and a canonical digest
+over the full result (every decision record, every host latency, every
+FTL counter), so ``tests/test_golden_equivalence.py`` can assert the
+optimized engine reproduces the pre-optimization outputs exactly.
+
+Run ``PYTHONPATH=src:tests python tests/_golden.py`` to (re)print the
+digest table — only ever regenerate it from a commit whose engine is
+known-good.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict
+
+from repro.sim import (FTLConfig, HostIOStream, SimConfig, simulate,
+                       simulate_mix)
+
+from _synth import synth_trace
+
+RAMP = list(range(40))
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+
+#: policies covering the dynamic (conduit/bw/dm), static (isp/ares_flash),
+#: contention-free (ideal) and host (cpu) select/dispatch paths
+GOLDEN_POLICIES = ("conduit", "bw", "dm", "ideal", "ares_flash", "cpu")
+
+
+def _f(x: float) -> str:
+    """Exact float text (repr round-trips IEEE doubles bit-for-bit)."""
+    return repr(float(x))
+
+
+def digest_sim(r) -> str:
+    parts = [r.policy, r.workload, r.tenant, _f(r.makespan_ns),
+             str(r.n_instrs), _f(r.compute_energy_nj),
+             _f(r.movement_energy_nj), _f(r.decision_overhead_ns_total),
+             str(r.coherence_syncs), str(r.evictions), str(r.replays),
+             str(r.colocations), _f(r.start_ns)]
+    parts += [f"{res.value}={n}" for res, n in sorted(
+        r.resource_counts.items(), key=lambda kv: kv[0].value)]
+    parts += [f"{k}={_f(v)}" for k, v in sorted(r.resource_busy_ns.items())]
+    for d in r.decisions:
+        parts.append("|".join([str(d.iid), d.op, d.resource.value,
+                               _f(d.t_decide), _f(d.t_start), _f(d.t_end),
+                               _f(d.dm_ns), str(d.replayed)]))
+    return hashlib.sha256(";".join(parts).encode()).hexdigest()[:16]
+
+
+def digest_mix(m) -> str:
+    parts = [_f(m.makespan_ns)]
+    parts += [digest_sim(t) for t in m.tenants]
+    parts += [f"{k}={_f(v)}" for k, v in sorted(m.fabric_busy_ns.items())]
+    if m.host_io is not None:
+        parts += [str(m.host_io.n_reads), str(m.host_io.n_writes)]
+        parts += [_f(x) for x in m.host_io.latencies_ns]
+    if m.ftl is not None:
+        ftl = m.ftl
+        parts += [str(ftl.gc_enabled), str(ftl.n_logical_pages),
+                  str(ftl.n_physical_pages), str(ftl.host_pages_written),
+                  str(ftl.gc_pages_copied), str(ftl.blocks_erased),
+                  str(ftl.gc_invocations), str(ftl.overflow_blocks),
+                  _f(ftl.gc_energy_nj)]
+        parts += [str(c) for c in ftl.erase_counts]
+        parts += [_f(x) for x in ftl.host_during_gc_ns]
+    return hashlib.sha256(";".join(parts).encode()).hexdigest()[:16]
+
+
+# -- scenarios -----------------------------------------------------------------
+
+def scenario_single(policy: str) -> str:
+    """simulate() on the synthetic mixed-op trace."""
+    return digest_sim(simulate(synth_trace(MIXED), policy))
+
+
+def scenario_pressure() -> str:
+    """Capacity pressure + transient faults: evictions, coherence syncs
+    and the replay path all fire."""
+    tr = synth_trace(MIXED, n_arrays=6, pages_per_array=4)
+    cfg = SimConfig(dram_capacity_pages=32, host_capacity_pages=48,
+                    fail_rate=0.05)
+    return digest_sim(simulate(tr, "conduit", config=cfg))
+
+
+def scenario_mix() -> str:
+    """Two tenants + host I/O on one shared fabric."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    io = HostIOStream(rate_iops=80_000, n_requests=64, seed=7,
+                      queue_depth=16)
+    return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
+                                   compute_solo=False))
+
+
+def scenario_gc() -> str:
+    """GC-enabled FTL run: write-heavy Zipf host I/O on a preconditioned
+    drive, collector contending on the shared die/channel pools."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, prefill=0.9,
+                    op_ratio=0.28)
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.3, n_requests=160,
+                      zipf_theta=0.95, n_logical_pages=ftl.logical_pages())
+    return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
+                                   ftl=ftl, compute_solo=False))
+
+
+def all_digests() -> Dict[str, str]:
+    out = {f"single/{p}": scenario_single(p) for p in GOLDEN_POLICIES}
+    out["pressure_fault"] = scenario_pressure()
+    out["mix_2tenant_io"] = scenario_mix()
+    out["gc_ftl"] = scenario_gc()
+    return out
+
+
+if __name__ == "__main__":
+    for name, dig in all_digests().items():
+        print(f'    "{name}": "{dig}",')

@@ -1,0 +1,52 @@
+"""Golden-equivalence: the fast-path engine is bit-identical to the
+pre-optimization engine.
+
+The digests below were captured from the simulator BEFORE the perf work
+(O(log k) server pools, slab events, cached cost features, hoisted
+dispatch structures) landed — commit 18ca3a2 — over scenarios covering
+every hot path: single-trace ``simulate`` under dynamic/static/ideal/host
+policies, capacity pressure + fault replay, a two-tenant ``simulate_mix``
+with host I/O, and a GC-enabled FTL run.  Each digest hashes the *full*
+result — every decision record timestamp, every host-I/O latency, every
+FTL counter — so any float-level divergence fails loudly.
+
+Only regenerate the table (``PYTHONPATH=src:tests python tests/_golden.py``)
+from a commit whose engine is known-good, and say so in the commit message.
+"""
+import pytest
+
+import _golden
+
+GOLDEN = {
+    "single/conduit": "6c8ea53f6dfaa662",
+    "single/bw": "f6b07e682d92748b",
+    "single/dm": "7652b53696544eb5",
+    "single/ideal": "8211e712142e24d4",
+    "single/ares_flash": "4563808e0a5c02d2",
+    "single/cpu": "526355789be10689",
+    "pressure_fault": "26c5e7184d8756f0",
+    "mix_2tenant_io": "ca2380aa9083c8b9",
+    "gc_ftl": "11dba99233a79831",
+}
+
+
+@pytest.mark.parametrize("policy", _golden.GOLDEN_POLICIES)
+def test_simulate_matches_pre_optimization_engine(policy):
+    assert _golden.scenario_single(policy) == GOLDEN[f"single/{policy}"]
+
+
+def test_pressure_and_fault_replay_match_pre_optimization_engine():
+    assert _golden.scenario_pressure() == GOLDEN["pressure_fault"]
+
+
+def test_mix_with_host_io_matches_pre_optimization_engine():
+    assert _golden.scenario_mix() == GOLDEN["mix_2tenant_io"]
+
+
+def test_gc_ftl_run_matches_pre_optimization_engine():
+    assert _golden.scenario_gc() == GOLDEN["gc_ftl"]
+
+
+def test_digests_stable_across_repeated_runs():
+    """The digest itself is deterministic (same-process repeat)."""
+    assert _golden.scenario_mix() == _golden.scenario_mix()

@@ -1,0 +1,125 @@
+"""ServerPool fast-path laws: the lazy min-heap and the incremental
+pending-work counter agree with the brute-force O(k) definitions, and
+pools that never saw a job are well-behaved."""
+import pytest
+
+from repro.sim.machine import _hash01
+from repro.sim.servers import Acquisition, ServerPool
+
+
+def brute_queue_delay(pool, now):
+    return min(max(0.0, f - now) for f in pool.free)
+
+
+def brute_pending(pool, now):
+    return sum(max(0.0, f - now) for f in pool.free)
+
+
+def drive(pool, n, seed=1, query_every=3):
+    """Deterministic pseudo-random acquire workload with monotone query
+    times; asserts the incremental features against brute force at every
+    step."""
+    now = 0.0
+    for i in range(n):
+        ready = now + 500.0 * _hash01(i, seed)
+        dur = 1000.0 * _hash01(i, seed ^ 0xABCD)
+        unit = None
+        if _hash01(i, seed ^ 0x77) < 0.5:
+            unit = int(_hash01(i, seed ^ 0x99) * pool.units) % pool.units
+        if i % 2 == 0:
+            pool.acquire(ready, dur, unit=unit)
+        else:
+            pool.acquire_end(ready, dur, unit=unit)
+        if i % query_every == 0:
+            now += 300.0 * _hash01(i, seed ^ 0x1234)
+            assert pool.queue_delay_ns(now) == brute_queue_delay(pool, now)
+            assert pool.pending_work_ns(now) == pytest.approx(
+                brute_pending(pool, now), rel=1e-12, abs=1e-6)
+            # the maintained counter is the sum of booked free times
+            assert pool._pending_work == pytest.approx(
+                sum(pool.free), rel=1e-12, abs=1e-6)
+
+
+@pytest.mark.parametrize("units", [1, 3, 8, 64])
+def test_pending_work_counter_matches_brute_force(units):
+    pool = ServerPool("p", units)
+    drive(pool, 300, seed=units)
+
+
+def test_acquire_matches_linear_scan_tie_breaking():
+    """The heap picks the earliest-free unit, lowest index on ties —
+    exactly the old ``min(range(units), key=free.__getitem__)``."""
+    pool = ServerPool("p", 4)
+    # all free at 0.0: ties broken by lowest unit index, FIFO
+    assert pool.acquire(0.0, 10.0).unit == 0
+    assert pool.acquire(0.0, 10.0).unit == 1
+    assert pool.acquire(0.0, 10.0).unit == 2
+    assert pool.acquire(0.0, 10.0).unit == 3
+    # unit 1 frees earliest after a targeted re-book of unit 0
+    pool.acquire(0.0, 50.0, unit=0)
+    a = pool.acquire(0.0, 1.0)
+    assert a.unit == 1
+    assert a.start == 10.0
+    assert a.end == 11.0
+
+
+def test_acquire_end_equals_acquire():
+    p1 = ServerPool("a", 3)
+    p2 = ServerPool("b", 3)
+    for i in range(50):
+        ready = 100.0 * _hash01(i, 5)
+        dur = 250.0 * _hash01(i, 6)
+        unit = i % 3 if i % 4 == 0 else None
+        assert p2.acquire_end(ready, dur, unit=unit) == \
+            p1.acquire(ready, dur, unit=unit).end
+    assert p1.free == p2.free
+    assert p1.busy_ns == p2.busy_ns
+    assert p1.jobs == p2.jobs
+
+
+def test_zero_job_pool_is_well_behaved():
+    """A pool that never saw a job: no max()-on-empty, no stale lazy
+    entries, all features zero."""
+    pool = ServerPool("idle", 3)
+    assert pool.horizon_ns == 0.0
+    assert pool.utilization(0.0) == 0.0
+    assert pool.utilization(1e9) == 0.0
+    assert pool.queue_delay_ns(0.0) == 0.0
+    assert pool.queue_delay_ns(5_000.0) == 0.0
+    assert pool.pending_work_ns(0.0) == 0.0
+    assert pool.pending_work_ns(7_500.0) == 0.0
+    assert pool.peek_start(123.0) == 123.0
+    assert pool.jobs == 0 and pool.busy_ns == 0.0
+
+
+def test_pending_work_probes_exact_in_any_time_order():
+    pool = ServerPool("p", 2)
+    pool.acquire(0.0, 100.0)
+    pool.acquire(0.0, 40.0)
+    assert pool.pending_work_ns(50.0) == brute_pending(pool, 50.0)
+    # probing backwards in time still gives the exact sum
+    assert pool.pending_work_ns(10.0) == brute_pending(pool, 10.0)
+    assert pool.pending_work_ns(60.0) == brute_pending(pool, 60.0)
+    assert pool._pending_work == pytest.approx(sum(pool.free))
+
+
+def test_fabric_pools_pending_counter_after_real_run():
+    """After a full simulation, every pool's maintained counter equals the
+    brute-force sum at the horizon and beyond."""
+    from repro.core.policies import make_policy
+    from repro.hw.ssd_spec import DEFAULT_SSD
+    from repro.sim.machine import Simulation
+    from _synth import synth_trace
+
+    sim = Simulation(synth_trace([3, 1, 4, 1, 5, 9, 2, 6] * 3),
+                     make_policy("conduit", DEFAULT_SSD))
+    sim.run()
+    for pool in sim.fabric.all_pools():
+        for now in (0.0, sim.fabric.horizon_ns / 2, sim.fabric.horizon_ns):
+            assert pool.pending_work_ns(now) == pytest.approx(
+                brute_pending(pool, now), rel=1e-12, abs=1e-6), pool.name
+
+
+def test_acquisition_namedtuple_shape():
+    a = Acquisition(unit=2, start=1.0, end=3.0)
+    assert (a.unit, a.start, a.end) == (2, 1.0, 3.0)

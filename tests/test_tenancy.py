@@ -178,11 +178,8 @@ def test_zipf_skew_concentrates_die_traffic():
         fabric = Fabric(DEFAULT_SSD)
         model = _HostIOModel(io, fabric, DEFAULT_SSD, engine)
         hits = {}
-        for i in range(io.n_requests):
-            lpn = model._lpn(i)
-            from repro.sim.tenancy import _die_of_lpn
-            d = _die_of_lpn(lpn, io.seed, DEFAULT_SSD.flash.total_dies)
-            hits[d] = hits.get(d, 0) + 1
+        for _, _, _, die in model.plan:   # (arrival, lpn, is_read, die)
+            hits[die] = hits.get(die, 0) + 1
         return max(hits.values()) / io.n_requests
 
     assert max_die_share(1.2) > max_die_share(0.0)

@@ -8,7 +8,10 @@ throughput is a first-class, *tracked* deliverable.  This bench measures
   fabric (the shape of ``pressure_bench.tenant_interference``), and
 * ``gc``   — the same tenants + a write-heavy Zipf host I/O stream through
   a preconditioned FTL with garbage collection (the shape of
-  ``pressure_bench.gc_interference``),
+  ``pressure_bench.gc_interference``), and
+* ``serving`` — an open-loop session stream (Poisson arrivals over a
+  weighted two-kind catalog, admission control, per-session Simulation
+  churn — the shape of ``serving_bench.serving_curve``),
 
 reporting processed events per second of wall time for each suite, plus
 the end-to-end wall time of a small sweep loop.  Results are written to
@@ -84,11 +87,13 @@ def _synth_trace(op_ids, name="perf", n_arrays=4, pages_per_array=2):
 
 def _suites(smoke: bool) -> Dict[str, Callable]:
     """suite name -> zero-arg builder returning (engine, result)."""
-    from repro.sim import (EventEngine, FTLConfig, HostIOStream,
-                          simulate_mix)
+    from repro.sim import (CatalogEntry, EventEngine, FTLConfig,
+                          HostIOStream, PoissonArrivals, ServingConfig,
+                          SessionCatalog, simulate_mix, simulate_serving)
 
     n_io = 96 if smoke else 256
     n_gc_io = 160 if smoke else 512
+    n_sessions = 24 if smoke else 64
     ramp = list(range(40))
     mixed = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
     a = _synth_trace(ramp, name="A")
@@ -112,7 +117,21 @@ def _suites(smoke: bool) -> Dict[str, Callable]:
                      compute_solo=False, engine=eng)
         return eng
 
-    return {"mix": mix, "gc": gc_suite}
+    def serving_suite():
+        # open-loop session churn at a deliberately saturating rate: the
+        # admission queue and per-session Simulation setup are on the
+        # measured path (that's the serving driver's own overhead)
+        eng = EventEngine()
+        catalog = SessionCatalog([CatalogEntry("A", a, 3.0),
+                                  CatalogEntry("B", b, 1.0)], seed=5)
+        arr = PoissonArrivals(rate_per_sec=8000, n_sessions=n_sessions,
+                              seed=9)
+        simulate_serving(catalog, arr, "conduit",
+                         serving=ServingConfig(keep_session_results=False),
+                         engine=eng)
+        return eng
+
+    return {"mix": mix, "gc": gc_suite, "serving": serving_suite}
 
 
 def _measure(build: Callable, repeats: int) -> Tuple[float, int, float]:

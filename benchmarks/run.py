@@ -35,12 +35,12 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 #: suites whose signature takes a ``smoke`` kwarg (CI-sized shrink)
-SMOKE_AWARE = {"mix", "gc"}
+SMOKE_AWARE = {"mix", "gc", "serving"}
 
 
 def _suite_table() -> Dict:
     from benchmarks import (kernel_bench, paper_figures, perf_bench,
-                            pressure_bench, roofline_bench)
+                            pressure_bench, roofline_bench, serving_bench)
 
     return {
         "table3": paper_figures.table3_characterize,
@@ -56,6 +56,7 @@ def _suite_table() -> Dict:
         "fault": pressure_bench.fault_replay,
         "mix": pressure_bench.tenant_interference,
         "gc": pressure_bench.gc_interference,
+        "serving": serving_bench.serving_curve,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,
@@ -134,12 +135,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
-                         "overhead,roofline,pressure,fault,mix,gc,kernels,"
-                         "simperf")
+                         "overhead,roofline,pressure,fault,mix,gc,serving,"
+                         "kernels,simperf")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized configurations for smoke-aware suites "
-                         "(mix, gc): tiny sweeps that only check the "
-                         "entry points still run")
+                         "(mix, gc, serving): tiny sweeps that only check "
+                         "the entry points still run")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for independent suites (output "
                          "is identical for any N on deterministic suites; "

@@ -11,6 +11,7 @@ co-location (read+program) cost when the constraint is violated.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import itertools
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
@@ -92,6 +93,26 @@ class PageTable:
             pid: (e.location, e.owner, e.dirty, e.version,
                   e.flash_block, e.l2p_cached, e.channel, e.die)
             for pid, e in self.entries.items()}
+
+    def clone(self) -> "PageTable":
+        """Independent copy of the mutable residency state.
+
+        Much cheaper than ``copy.deepcopy``: the spec is immutable and
+        shared, the ``_initial`` snapshot values are tuples and shared,
+        and only the :class:`PageEntry` records — the state a Simulation
+        mutates — are duplicated.  This is the open-loop serving driver's
+        per-session admission cost, so it sits on a measured path."""
+        new = PageTable.__new__(PageTable)
+        new.spec = self.spec
+        new.entries = {pid: copy.copy(e) for pid, e in self.entries.items()}
+        new._next_pid = copy.deepcopy(self._next_pid)
+        new._next_block = copy.deepcopy(self._next_block)
+        new._nchan = self._nchan
+        new._ndies = self._ndies
+        new._alloc_cursor = self._alloc_cursor
+        new.l2p_cache_fraction = self.l2p_cache_fraction
+        new._initial = dict(self._initial)
+        return new
 
     def __getitem__(self, pid: int) -> PageEntry:
         return self.entries[pid]

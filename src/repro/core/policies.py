@@ -17,6 +17,7 @@ target compute resource.  The event-driven simulator (repro.sim) invokes
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost import HOME, Features, SystemView, features_for
@@ -33,6 +34,16 @@ class Decision:
 
 
 class Policy:
+    """Base offloading policy.
+
+    Policies are *stateless across dispatches*: ``select`` reads only the
+    instruction, the :class:`SystemView` snapshot, and spec-derived
+    constants fixed at construction.  One instance can therefore be shared
+    by any number of concurrent tenants — including the open-loop serving
+    regime (:mod:`repro.sim.serving`) where sessions arrive and depart
+    mid-run and rebuilding a policy per admission would be pure churn; use
+    :func:`shared_policy` for that."""
+
     name = "base"
     candidates: Tuple[Resource, ...] = NDP_RESOURCES
     ignores_contention = False      # Ideal: simulator disables contention
@@ -220,6 +231,18 @@ def make_policy(name: str, spec: SSDSpec) -> Policy:
     if name == "gpu":
         return HostPolicy(spec, Resource.HOST_GPU)
     raise ValueError(f"unknown policy {name!r}")
+
+
+@functools.lru_cache(maxsize=64)
+def shared_policy(name: str, spec: SSDSpec) -> Policy:
+    """Process-wide cached policy instance for high-churn callers.
+
+    Safe because policies are stateless across ``select`` calls (see
+    :class:`Policy`); the open-loop serving driver admits thousands of
+    short sessions per run and must not rebuild the policy — or re-derive
+    its spec-pinned tables — per admission.  Callers that mutate a policy
+    (none in-tree) must use :func:`make_policy` instead."""
+    return make_policy(name, spec)
 
 
 ALL_POLICIES = ("cpu", "gpu", "isp", "pud", "flash_cosmos", "ares_flash",

@@ -2,20 +2,37 @@
 
 Single-tenant entry point: :func:`simulate` (one trace, one policy).
 Multi-tenant entry point: :func:`simulate_mix` (several traces plus an
-optional synthetic host I/O stream sharing one fabric).  Both run on the
-time-ordered event heap in :mod:`repro.sim.events`.
+optional synthetic host I/O stream sharing one fabric).
+Open-loop serving entry point: :func:`simulate_serving` (sessions drawn
+from a weighted catalog keep arriving mid-run; steady-state throughput /
+tail latency, plus :func:`find_saturation` for the max sustainable rate).
+All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
 from repro.sim.events import Event, EventEngine, EventKind
 from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation, simulate
 from repro.sim.servers import Fabric, ServerPool
+from repro.sim.serving import (SaturationProbe, SaturationResult,
+                               ServingConfig, find_saturation,
+                               simulate_serving)
 from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
-                             MixResult, SimResult, jain_fairness, percentile)
-from repro.sim.tenancy import HostIOStream, simulate_mix
+                             MixResult, ServingResult, SessionRecord,
+                             SimResult, jain_fairness, percentile)
+from repro.sim.tenancy import HostIOStream, clone_trace, simulate_mix
+from repro.sim.workgen import (ArrivalProcess, CatalogEntry,
+                               DeterministicArrivals, MMPPArrivals,
+                               PoissonArrivals, SessionCatalog,
+                               SuperposedArrivals, TraceReplayArrivals)
 
 __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "Event", "EventEngine", "EventKind",
-           "HostIOStream", "simulate_mix",
+           "HostIOStream", "simulate_mix", "clone_trace",
            "FTLConfig", "FTLModel", "FTLStats",
            "DecisionRecord", "HostIOStats", "MixResult", "SimResult",
-           "jain_fairness", "percentile"]
+           "jain_fairness", "percentile",
+           "ArrivalProcess", "PoissonArrivals", "MMPPArrivals",
+           "DeterministicArrivals", "TraceReplayArrivals",
+           "SuperposedArrivals", "CatalogEntry", "SessionCatalog",
+           "ServingConfig", "ServingResult", "SessionRecord",
+           "simulate_serving", "find_saturation",
+           "SaturationProbe", "SaturationResult"]

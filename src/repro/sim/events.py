@@ -64,7 +64,8 @@ class EventKind(enum.Enum):
     IO_ARRIVAL = "io_arrival"    # host read/write request enters the SSD
     IO_COMPLETE = "io_complete"  # host request leaves (latency accounting)
     GC = "gc"                    # FTL garbage-collection cycle (background tenant)
-    TIMER = "timer"              # generic callback (tests, future policies)
+    SESSION_ARRIVAL = "session_arrival"  # open-loop session enters admission
+    TIMER = "timer"              # generic callback (tests, snapshots, policies)
 
 
 class Event:

@@ -24,7 +24,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
                              dm_energy_nj, exec_energy_nj, exec_latency_ns)
@@ -45,6 +45,12 @@ class SimConfig:
     move_outputs_to_host: bool = True            # epilogue (§4.4 trigger ii)
     pud_units: int = 8                           # per-bank bbop engines
     seed: int = 0x5AFA11
+    # False = fast mode: skip allocating one DecisionRecord per dispatch
+    # (open-loop serving runs at high arrival rates would otherwise
+    # accumulate unbounded per-dispatch records).  Timing/energy results
+    # are bit-identical either way; per-op latencies stay available via
+    # SimResult.op_latencies_ns, which is a plain float list.
+    record_decisions: bool = True
 
 
 STATIC_DISPATCH_NS = 200.0   # queue-push cost for compile-time-mapped policies
@@ -127,6 +133,10 @@ class Simulation:
         self._prev_decide_end = start_ns    # offloader pipeline cursor
         self._makespan = start_ns
         self.done = False
+        # completion hook: the open-loop serving driver uses this to free
+        # an admission slot / record session latency the moment a trace
+        # drains (set before bind(); never affects simulation timing)
+        self.on_done: Optional[Callable[["Simulation"], None]] = None
 
         # -- hoisted per-dispatch structures (perf) ---------------------------
         # Link-latency constants (page-sized transfers; float addition is
@@ -166,6 +176,10 @@ class Simulation:
         self.replays = 0
         self.colocations = 0
         self.decisions: List[DecisionRecord] = []
+        # per-op dispatch-to-completion latencies, kept even when full
+        # DecisionRecord logging is off (floats only — the cheap part)
+        self.op_latencies: List[float] = []
+        self._record_decisions = self.cfg.record_decisions
         self.resource_counts: Dict[Resource, int] = {r: 0 for r in Resource}
 
     # -- data movement --------------------------------------------------------
@@ -417,7 +431,13 @@ class Simulation:
             engine.schedule(self.start_ns, EventKind.EPILOGUE,
                             self._on_epilogue)
         else:
-            self.done = True
+            self._finish()
+
+    def _finish(self) -> None:
+        """Mark the trace drained and fire the completion hook."""
+        self.done = True
+        if self.on_done is not None:
+            self.on_done(self)
 
     def _deps_ready(self, instr: VectorInstr) -> float:
         return max((self.completion[d] for d in instr.deps
@@ -442,7 +462,7 @@ class Simulation:
             engine.schedule(max(engine.now, self._makespan),
                             EventKind.EPILOGUE, self._on_epilogue)
         else:
-            self.done = True
+            self._finish()
 
     def _on_dispatch(self, ev: Event) -> None:
         """Offloader core picks up the next instruction in program order:
@@ -467,8 +487,10 @@ class Simulation:
             self.pages.record_write(instr.dst, HOME[r])
             self.completion[instr.iid] = end
             self.resource_counts[r] += 1
-            self.decisions.append(DecisionRecord(
-                instr.iid, instr.op, r, start, start, end, 0.0))
+            self.op_latencies.append(end - start)
+            if self._record_decisions:
+                self.decisions.append(DecisionRecord(
+                    instr.iid, instr.op, r, start, start, end, 0.0))
             self._after_instr(end)
             return
 
@@ -533,10 +555,12 @@ class Simulation:
 
         self.completion[instr.iid] = end
         self.resource_counts[r] += 1
-        self.decisions.append(DecisionRecord(
-            instr.iid, instr.op, r, now, start, end, dm_ns,
-            replayed=self.cfg.fail_rate > 0.0
-            and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
+        self.op_latencies.append(end - now)
+        if self._record_decisions:
+            self.decisions.append(DecisionRecord(
+                instr.iid, instr.op, r, now, start, end, dm_ns,
+                replayed=self.cfg.fail_rate > 0.0
+                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
         self._after_instr(end)
 
     def _on_epilogue(self, ev: Event) -> None:
@@ -548,7 +572,7 @@ class Simulation:
                     makespan = max(
                         makespan, self._move_page(pid, Location.HOST, makespan))
         self._makespan = makespan
-        self.done = True
+        self._finish()
 
     def result(self) -> SimResult:
         """Collect the per-trace result (call after the engine drained)."""
@@ -559,6 +583,7 @@ class Simulation:
             movement_energy_nj=self.movement_energy,
             decision_overhead_ns_total=self.overhead_total,
             decisions=self.decisions,
+            op_latencies_ns=self.op_latencies,
             resource_counts={r: c for r, c in self.resource_counts.items() if c},
             resource_busy_ns=self.fabric.busy_ns(),
             coherence_syncs=self.coherence_syncs, evictions=self.evictions,
@@ -575,12 +600,19 @@ class Simulation:
 
 def simulate(trace: Trace, policy: str | Policy,
              spec: SSDSpec = DEFAULT_SSD,
-             config: Optional[SimConfig] = None) -> SimResult:
+             config: Optional[SimConfig] = None,
+             record_decisions: Optional[bool] = None) -> SimResult:
     """Run one workload trace under one offloading policy.
 
     The single-tenant special case of the event engine; for concurrent
     traces sharing the SSD see :func:`repro.sim.tenancy.simulate_mix`.
+    ``record_decisions=False`` is the fast mode (no per-dispatch
+    DecisionRecord allocation, identical timing) — overrides the same
+    flag on ``config``.
     """
     if isinstance(policy, str):
         policy = make_policy(policy, spec)
+    if record_decisions is not None:
+        config = dataclasses.replace(config or SimConfig(),
+                                     record_decisions=record_decisions)
     return Simulation(trace, policy, spec, config).run()

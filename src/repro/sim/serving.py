@@ -1,0 +1,370 @@
+"""Open-loop serving: session churn on a live event engine (§5 scaled out).
+
+:func:`~repro.sim.tenancy.simulate_mix` measures batch makespan of a fixed
+tenant set; this module measures what a *serving* SSD is judged on —
+sustainable session throughput at bounded tail latency.  Sessions drawn
+from a :class:`~repro.sim.workgen.SessionCatalog` arrive according to an
+open-loop :class:`~repro.sim.workgen.ArrivalProcess` and are injected into
+a live :class:`~repro.sim.events.EventEngine` mid-run: each admitted
+session is a fresh :class:`~repro.sim.machine.Simulation` bound to the
+shared fabric at its arrival time, so late sessions contend with the
+tail of early ones exactly as staggered tenants do in ``simulate_mix``.
+
+Admission control bounds the open loop: at most
+``ServingConfig.max_active_sessions`` sessions execute concurrently,
+at most ``max_backlog`` wait in the admission queue, and arrivals beyond
+both are *rejected* (counted, never silently dropped) — so overload
+degrades into rejections and queueing delay instead of unbounded memory
+growth.  Completed work frees a slot via the Simulation ``on_done`` hook
+and the backlog drains FIFO.
+
+Steady-state measurement trims warm-up and cool-down: only sessions
+arriving inside ``[warmup_ns, last_arrival - cooldown_ns]`` count toward
+the offered/completed rates, latency percentiles, the time-averaged
+in-system occupancy (Little's L) and the interval utilization per
+resource pool (busy-time deltas between two snapshot events at the window
+edges; note the engine's lazy booking accrues busy time at decision time,
+so near saturation a window's utilization can exceed 1.0).
+
+:func:`find_saturation` bisects the arrival rate — deterministically, the
+same probe sequence for the same inputs — for the maximum sustainable
+sessions/sec under a p99 session-latency SLO with zero rejections: the
+knee of the latency-throughput hockey stick, per offloading policy.
+
+Equivalence law (tested): one session, no churn, no admission pressure
+reproduces ``simulate_mix([trace])`` bit-for-bit — serving is a strict
+generalization of the batch entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+from repro.core.policies import Policy, shared_policy
+from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
+from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.machine import SimConfig, Simulation
+from repro.sim.servers import Fabric
+from repro.sim.stats import ServingResult, SessionRecord
+from repro.sim.tenancy import HostIOStream, _HostIOModel, clone_trace
+from repro.sim.workgen import ArrivalProcess, PoissonArrivals, SessionCatalog
+
+PolicyLike = Union[str, Policy]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Admission control + steady-state measurement knobs.
+
+    ``max_active_sessions`` is the concurrency cap (admitted sessions
+    executing on the fabric); ``max_backlog`` bounds the admission queue —
+    arrivals beyond both are rejected.  ``warmup_ns``/``cooldown_ns`` trim
+    the measurement window at both ends of the arrival span.
+    ``record_decisions`` defaults to the fast mode (serving runs dispatch
+    far too many instructions to keep one DecisionRecord each);
+    ``keep_session_results`` retains one :class:`SimResult` per completed
+    session (disable for large saturation sweeps)."""
+
+    max_active_sessions: int = 8
+    max_backlog: int = 64
+    warmup_ns: float = 0.0
+    cooldown_ns: float = 0.0
+    record_decisions: bool = False
+    keep_session_results: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_active_sessions < 1:
+            raise ValueError("max_active_sessions must be >= 1")
+        if self.max_backlog < 0:
+            raise ValueError("max_backlog must be >= 0")
+        if self.warmup_ns < 0.0 or self.cooldown_ns < 0.0:
+            raise ValueError("warmup_ns/cooldown_ns must be >= 0")
+
+
+class _ServingDriver:
+    """Binds catalog + arrivals to one engine/fabric and tracks sessions."""
+
+    def __init__(self, catalog: SessionCatalog, arrival_times: List[float],
+                 policy: PolicyLike, spec: SSDSpec, cfg: SimConfig,
+                 scfg: ServingConfig, fabric: Fabric, engine: EventEngine):
+        self.catalog = catalog
+        self.spec = spec
+        self.cfg = cfg
+        self.scfg = scfg
+        self.fabric = fabric
+        self.engine = engine
+        self.default_policy = (shared_policy(policy, spec)
+                               if isinstance(policy, str) else policy)
+
+        self.active = 0
+        self.backlog: Deque[int] = deque()
+        self.n_rejected = 0
+        self.n_admitted = 0
+        self.n_completed = 0
+        self.results: List = []
+        self.op_latencies: List[float] = []
+
+        # steady-state window over the arrival span
+        lo = scfg.warmup_ns
+        hi = max(lo, (arrival_times[-1] - scfg.cooldown_ns)
+                 if arrival_times else lo)
+        self.window = (lo, hi)
+        # time-averaged in-system occupancy (arrival-accepted .. done):
+        # Little's L, integrated over the window only
+        self._in_system = 0
+        self._last_ns = 0.0
+        self._area = 0.0
+        # interval utilization: busy-time snapshots at the window edges
+        # (scheduled before the arrivals so same-time arrivals book after
+        # the opening snapshot)
+        self._busy_lo: Dict[str, float] = {}
+        self._busy_hi: Dict[str, float] = {}
+        engine.schedule(lo, EventKind.TIMER,
+                        lambda ev: self._busy_lo.update(fabric.busy_ns()))
+        engine.schedule(hi, EventKind.TIMER,
+                        lambda ev: self._busy_hi.update(fabric.busy_ns()))
+
+        self.records = [
+            SessionRecord(sid=i, kind=catalog.draw(i).name, arrival_ns=t,
+                          measured=lo <= t <= hi)
+            for i, t in enumerate(arrival_times)]
+        for i, t in enumerate(arrival_times):
+            engine.schedule(t, EventKind.SESSION_ARRIVAL, self._on_arrival,
+                            payload=i)
+
+    # -- Little's-law occupancy integral --------------------------------------
+
+    def _mark(self, now: float, delta: int) -> None:
+        lo, hi = self.window
+        seg_lo = self._last_ns if self._last_ns > lo else lo
+        seg_hi = now if now < hi else hi
+        if seg_hi > seg_lo:
+            self._area += self._in_system * (seg_hi - seg_lo)
+        if now > self._last_ns:
+            self._last_ns = now
+        self._in_system += delta
+
+    # -- session lifecycle ----------------------------------------------------
+
+    def _on_arrival(self, ev: Event) -> None:
+        sid = ev.payload
+        now = self.engine.now
+        if self.active < self.scfg.max_active_sessions:
+            self._mark(now, +1)
+            self._admit(sid)
+        elif len(self.backlog) < self.scfg.max_backlog:
+            self._mark(now, +1)             # queued sessions are in-system
+            self.backlog.append(sid)
+        else:
+            self.records[sid].rejected = True
+            self.n_rejected += 1
+
+    def _admit(self, sid: int) -> None:
+        rec = self.records[sid]
+        entry = self.catalog.draw(sid)
+        pol = (shared_policy(entry.policy, self.spec)
+               if entry.policy is not None else self.default_policy)
+        now = self.engine.now
+        rec.admit_ns = now
+        self.active += 1
+        self.n_admitted += 1
+        sim = Simulation(clone_trace(entry.trace), pol, self.spec, self.cfg,
+                         fabric=self.fabric, tenant=f"s{sid}:{entry.name}",
+                         start_ns=now)
+        sim.on_done = lambda s, sid=sid: self._on_done(s, sid)
+        sim.bind(self.engine)
+
+    def _on_done(self, sim: Simulation, sid: int) -> None:
+        rec = self.records[sid]
+        rec.done_ns = sim._makespan
+        self.n_completed += 1
+        self.active -= 1
+        self._mark(self.engine.now, -1)
+        if rec.measured:
+            self.op_latencies.extend(sim.op_latencies)
+        if self.scfg.keep_session_results:
+            self.results.append(sim.result())
+        if self.backlog:
+            self._admit(self.backlog.popleft())  # FIFO admission
+
+    # -- result assembly ------------------------------------------------------
+
+    def result(self, policy_name: str,
+               io: Optional[_HostIOModel]) -> ServingResult:
+        lo, hi = self.window
+        self._mark(hi, 0)                   # close the occupancy integral
+        span = hi - lo
+        mean_in_system = self._area / span if span > 0.0 else 0.0
+        util: Dict[str, float] = {}
+        if span > 0.0 and self._busy_hi:
+            units = {p.name: p.units for p in self.fabric.all_pools()}
+            for name, busy in self._busy_hi.items():
+                delta = busy - self._busy_lo.get(name, 0.0)
+                util[name] = delta / (span * units[name])
+        makespan = max([r.done_ns for r in self.records if r.completed]
+                       + ([io.last_complete_ns] if io else []) + [0.0])
+        return ServingResult(
+            policy=policy_name,
+            sessions=self.records,
+            n_offered=len(self.records),
+            n_admitted=self.n_admitted,
+            n_rejected=self.n_rejected,
+            n_completed=self.n_completed,
+            window_ns=self.window,
+            mean_in_system=mean_in_system,
+            op_latencies_ns=self.op_latencies,
+            utilization=util,
+            makespan_ns=makespan,
+            host_io=io.stats() if io else None,
+            session_results=(self.results
+                             if self.scfg.keep_session_results else None))
+
+
+def simulate_serving(catalog: SessionCatalog,
+                     arrivals: ArrivalProcess,
+                     policy: PolicyLike = "conduit",
+                     spec: SSDSpec = DEFAULT_SSD,
+                     config: Optional[SimConfig] = None,
+                     serving: Optional[ServingConfig] = None,
+                     io_stream: Optional[HostIOStream] = None,
+                     engine: Optional[EventEngine] = None) -> ServingResult:
+    """Serve an open-loop session stream on one SSD; see module docstring.
+
+    ``policy`` is the run-wide offloading policy (catalog entries may
+    override per kind); ``io_stream`` adds the same background host I/O
+    as ``simulate_mix``.  Pass a ``record=True`` engine to capture the
+    event timeline.  The run always drains: every admitted session
+    completes, so the conservation law ``offered == completed + rejected``
+    holds on the result.  ``ServingConfig.record_decisions`` governs the
+    per-session DecisionRecord logging even when a ``config`` is passed
+    (serving admits far too many sessions to default to full logging)."""
+    scfg = serving or ServingConfig()
+    cfg = dataclasses.replace(config or SimConfig(),
+                              record_decisions=scfg.record_decisions)
+    arrival_times = arrivals.arrival_times_ns()
+    if any(t < 0 for t in arrival_times):
+        raise ValueError("arrival times must be >= 0")
+    if any(b < a for a, b in zip(arrival_times, arrival_times[1:])):
+        raise ValueError("arrival times must be non-decreasing")
+
+    engine = engine or EventEngine()
+    fabric = Fabric(spec, pud_units=cfg.pud_units)
+    driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
+                            scfg, fabric, engine)
+    io = (_HostIOModel(io_stream, fabric, spec, engine)
+          if io_stream is not None else None)
+    engine.run()
+    name = policy if isinstance(policy, str) else policy.name
+    return driver.result(name, io)
+
+
+# -- saturation-point finder ---------------------------------------------------
+
+@dataclasses.dataclass
+class SaturationProbe:
+    """One bisection probe: the serving run at one offered rate."""
+
+    rate_per_sec: float
+    p99_ns: float
+    n_rejected: int
+    completed_rate_per_sec: float
+    sustainable: bool
+
+
+@dataclasses.dataclass
+class SaturationResult:
+    """Output of :func:`find_saturation` for one policy.
+
+    ``rate_per_sec`` is the highest probed rate that met the SLO with
+    zero rejections (0.0 if even ``rate_lo`` was unsustainable);
+    ``bracket`` is the final (sustainable, unsustainable) rate pair the
+    bisection narrowed to."""
+
+    policy: str
+    slo_p99_ns: float
+    rate_per_sec: float
+    bracket: Tuple[float, float]
+    probes: List[SaturationProbe]
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "policy": self.policy,
+            "slo_p99_us": self.slo_p99_ns / 1e3,
+            "saturation_per_sec": round(self.rate_per_sec, 1),
+            "bracket_per_sec": (round(self.bracket[0], 1),
+                                round(self.bracket[1], 1)),
+            "probes": len(self.probes),
+        }
+
+
+def find_saturation(catalog: SessionCatalog,
+                    policy: PolicyLike,
+                    slo_p99_ns: float,
+                    rate_lo: float,
+                    rate_hi: float,
+                    base_process: Optional[ArrivalProcess] = None,
+                    iters: int = 6,
+                    n_sessions: int = 64,
+                    seed: int = 0xA117,
+                    spec: SSDSpec = DEFAULT_SSD,
+                    config: Optional[SimConfig] = None,
+                    serving: Optional[ServingConfig] = None,
+                    io_stream: Optional[HostIOStream] = None
+                    ) -> SaturationResult:
+    """Bisect the offered rate for the max sustainable sessions/sec.
+
+    A rate is *sustainable* iff the serving run rejects nothing and its
+    measured p99 session latency meets ``slo_p99_ns``.  The bisection is
+    deterministic: probes are a pure function of the inputs (the arrival
+    process is rescaled via ``at_rate``, preserving seed and shape), so
+    repeated calls — and parallel benchmark workers — produce identical
+    results.  ``base_process`` defaults to Poisson arrivals with
+    ``n_sessions``/``seed``; pass an MMPP or replay process to find the
+    saturation point under bursty traffic instead."""
+    if rate_lo <= 0.0 or rate_hi <= rate_lo:
+        raise ValueError("need 0 < rate_lo < rate_hi")
+    if iters < 1:
+        raise ValueError("iters must be >= 1")
+    base = base_process or PoissonArrivals(rate_per_sec=rate_lo,
+                                           n_sessions=n_sessions, seed=seed)
+    scfg = serving or ServingConfig(keep_session_results=False)
+    probes: List[SaturationProbe] = []
+
+    def probe(rate: float) -> bool:
+        res = simulate_serving(catalog, base.at_rate(rate), policy,
+                               spec=spec, config=config, serving=scfg,
+                               io_stream=io_stream)
+        if res.n_rejected > 0:
+            # rejections alone prove the rate unsustainable — even when
+            # every in-window arrival bounced and no latency was measured
+            probes.append(SaturationProbe(
+                rate, res.p(99), res.n_rejected,
+                res.completed_rate_per_sec, False))
+            return False
+        if not res.session_latencies_ns:
+            raise ValueError(
+                f"no measured sessions at rate {rate:.1f}/s: warmup/cooldown "
+                f"trim ({scfg.warmup_ns:.0f}+{scfg.cooldown_ns:.0f} ns) "
+                "swallows the arrival span — an empty window would make "
+                "every rate look sustainable")
+        p99 = res.p(99)
+        ok = p99 <= slo_p99_ns
+        probes.append(SaturationProbe(rate, p99, 0,
+                                      res.completed_rate_per_sec, ok))
+        return ok
+
+    name = policy if isinstance(policy, str) else policy.name
+    if not probe(rate_lo):
+        return SaturationResult(name, slo_p99_ns, 0.0, (0.0, rate_lo), probes)
+    if probe(rate_hi):
+        return SaturationResult(name, slo_p99_ns, rate_hi,
+                                (rate_hi, rate_hi), probes)
+    lo, hi = rate_lo, rate_hi
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if probe(mid):
+            lo = mid
+        else:
+            hi = mid
+    return SaturationResult(name, slo_p99_ns, lo, (lo, hi), probes)

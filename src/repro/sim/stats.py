@@ -53,6 +53,9 @@ class SimResult:
     colocations: int
     tenant: str = ""                 # tenant id in a simulate_mix run
     start_ns: float = 0.0            # arrival offset in a simulate_mix run
+    # per-op dispatch-to-completion latencies, populated even when full
+    # DecisionRecord logging is disabled (SimConfig.record_decisions=False)
+    op_latencies_ns: Optional[List[float]] = None
 
     @property
     def total_energy_nj(self) -> float:
@@ -66,6 +69,8 @@ class SimResult:
 
     @property
     def latencies_ns(self) -> List[float]:
+        if self.op_latencies_ns is not None:
+            return self.op_latencies_ns
         return [d.t_end - d.t_decide for d in self.decisions]
 
     def p(self, pct: float) -> float:
@@ -192,6 +197,155 @@ class FTLStats:
             "io_during_gc": len(self.host_during_gc_ns),
             "io_p99_during_gc_us": self.p_during_gc(99) / 1e3,
         }
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """One open-loop session's lifecycle (:mod:`repro.sim.serving`).
+
+    ``latency_ns`` is arrival-to-completion — it includes time spent in
+    the admission backlog, which is exactly what an open-loop client
+    observes.  ``measured`` marks sessions whose *arrival* falls inside
+    the steady-state window (after warm-up, before cool-down)."""
+
+    sid: int
+    kind: str
+    arrival_ns: float
+    admit_ns: float = -1.0          # admission time (-1: never admitted)
+    done_ns: float = -1.0           # end of the session's last booking
+    rejected: bool = False          # bounced off the full admission backlog
+    measured: bool = False
+
+    @property
+    def completed(self) -> bool:
+        return self.done_ns >= 0.0
+
+    @property
+    def latency_ns(self) -> float:
+        """Arrival-to-completion, including admission-queue wait."""
+        return self.done_ns - self.arrival_ns
+
+    @property
+    def queue_wait_ns(self) -> float:
+        """Time spent queued for admission before a slot freed."""
+        return self.admit_ns - self.arrival_ns
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Result of an open-loop serving run (:func:`repro.sim.serving.simulate_serving`).
+
+    Steady-state metrics are computed over the measurement window
+    ``window_ns`` (arrivals after warm-up and before cool-down), so ramp-up
+    and drain transients don't pollute the sustained-load numbers.
+    ``mean_in_system`` is the time-averaged number of sessions between
+    arrival and completion over that window — the L of Little's law;
+    :meth:`little_law_ratio` checks L ≈ λ·W as a consistency law."""
+
+    policy: str
+    sessions: List[SessionRecord]
+    n_offered: int                   # sessions the arrival process generated
+    n_admitted: int
+    n_rejected: int
+    n_completed: int
+    window_ns: Tuple[float, float]   # steady-state measurement window
+    mean_in_system: float            # time-avg sessions in system (window)
+    op_latencies_ns: List[float]     # measured sessions' per-op latencies
+    utilization: Dict[str, float]    # pool -> busy fraction within window
+    makespan_ns: float
+    host_io: Optional[HostIOStats] = None
+    session_results: Optional[List[SimResult]] = None  # per-session detail
+
+    # -- conservation ---------------------------------------------------------
+
+    @property
+    def n_inflight(self) -> int:
+        """Sessions neither completed nor rejected (0 after a drained run);
+        offered == completed + rejected + inflight is the conservation law."""
+        return self.n_offered - self.n_completed - self.n_rejected
+
+    # -- steady-state window --------------------------------------------------
+
+    @property
+    def window_span_ns(self) -> float:
+        lo, hi = self.window_ns
+        return max(0.0, hi - lo)
+
+    @property
+    def measured_sessions(self) -> List[SessionRecord]:
+        return [s for s in self.sessions if s.measured and s.completed]
+
+    @property
+    def session_latencies_ns(self) -> List[float]:
+        return [s.latency_ns for s in self.measured_sessions]
+
+    def p(self, pct: float) -> float:
+        """Per-session latency percentile over the measured window."""
+        return percentile(self.session_latencies_ns, pct)
+
+    def op_p(self, pct: float) -> float:
+        """Per-op latency percentile over the measured window."""
+        return percentile(self.op_latencies_ns, pct)
+
+    @property
+    def offered_rate_per_sec(self) -> float:
+        """Arrival rate observed inside the measurement window."""
+        span = self.window_span_ns
+        if span <= 0.0:
+            return 0.0
+        lo, hi = self.window_ns
+        n = sum(1 for s in self.sessions if lo <= s.arrival_ns <= hi)
+        return n / (span / 1e9)
+
+    @property
+    def completed_rate_per_sec(self) -> float:
+        """Completion throughput inside the window — the number that
+        saturates below the offered rate once the drive is overloaded."""
+        span = self.window_span_ns
+        if span <= 0.0:
+            return 0.0
+        lo, hi = self.window_ns
+        n = sum(1 for s in self.sessions
+                if s.completed and lo <= s.done_ns <= hi)
+        return n / (span / 1e9)
+
+    # -- Little's law ---------------------------------------------------------
+
+    def little_law_ratio(self) -> float:
+        """L / (λ·W) over the measurement window — ≈1.0 on a stable run.
+
+        λ is the measured completion rate and W the mean session latency;
+        deviations come from edge sessions straddling the window and from
+        the engine's lazy booking (a session's final bookings can end
+        after the event that completes it)."""
+        lats = self.session_latencies_ns
+        if not lats or self.window_span_ns <= 0.0:
+            return 1.0
+        lam_per_ns = self.completed_rate_per_sec / 1e9
+        w = sum(lats) / len(lats)
+        lw = lam_per_ns * w
+        if lw <= 0.0:
+            return 1.0
+        return self.mean_in_system / lw
+
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "policy": self.policy,
+            "offered": self.n_offered,
+            "completed": self.n_completed,
+            "rejected": self.n_rejected,
+            "offered_per_sec": round(self.offered_rate_per_sec, 1),
+            "completed_per_sec": round(self.completed_rate_per_sec, 1),
+            "session_p50_us": self.p(50) / 1e3,
+            "session_p99_us": self.p(99) / 1e3,
+            "op_p99_us": self.op_p(99) / 1e3,
+            "mean_in_system": round(self.mean_in_system, 3),
+            "little_ratio": round(self.little_law_ratio(), 3),
+            "max_util": round(max(self.utilization.values(), default=0.0), 3),
+        }
+        if self.host_io is not None:
+            out.update(self.host_io.summary())
+        return out
 
 
 def jain_fairness(values: List[float]) -> float:

@@ -47,7 +47,6 @@ bit-identical to no FTL at all (``tests/test_ftl.py``).
 from __future__ import annotations
 
 import bisect
-import copy
 import dataclasses
 import functools
 import math
@@ -257,6 +256,20 @@ class _HostIOModel:
                            latencies_ns=lats)
 
 
+def clone_trace(tr: Trace) -> Trace:
+    """Clone a Trace template for an independent tenant/session.
+
+    A Trace owns its PageTable (mutable residency state): concurrent
+    executions must never share one.  Everything else — the instruction
+    list, the input/output page-id lists — is immutable during simulation
+    and *shared*, which also shares the per-instruction cost-function
+    memos: sessions of the same catalog kind in an open-loop serving run
+    derive the static features once, not once per admission."""
+    return Trace(instrs=tr.instrs, pages=tr.pages.clone(),
+                 input_pages=tr.input_pages, output_pages=tr.output_pages,
+                 name=tr.name)
+
+
 def _as_policies(policies: Union[PolicyLike, Sequence[PolicyLike]],
                  n: int, spec: SSDSpec) -> List[Policy]:
     if isinstance(policies, (str, Policy)):
@@ -275,7 +288,8 @@ def simulate_mix(traces: Sequence[Trace],
                  compute_solo: bool = True,
                  engine: Optional[EventEngine] = None,
                  ftl: Optional[FTLConfig] = None,
-                 start_ns: Optional[Sequence[float]] = None) -> MixResult:
+                 start_ns: Optional[Sequence[float]] = None,
+                 record_decisions: Optional[bool] = None) -> MixResult:
     """Run several traces concurrently on one SSD, plus optional host I/O.
 
     ``policies`` is one policy (applied to every trace) or one per trace;
@@ -288,6 +302,9 @@ def simulate_mix(traces: Sequence[Trace],
     flash translation layer of :mod:`repro.sim.ftl` with garbage
     collection as a background tenant.  Pass a ``record=True``
     :class:`EventEngine` to capture the event timeline.
+    ``record_decisions=False`` is the fast mode: skip per-dispatch
+    DecisionRecord allocation (timing identical; op latencies stay
+    available) — overrides the same flag on ``config``.
     """
     traces = list(traces)
     if not traces:
@@ -298,25 +315,18 @@ def simulate_mix(traces: Sequence[Trace],
     if any(s < 0 for s in starts):
         raise ValueError("start_ns offsets must be >= 0")
     cfg = config or SimConfig()
+    if record_decisions is not None:
+        cfg = dataclasses.replace(cfg, record_decisions=record_decisions)
     pols = _as_policies(policies, len(traces), spec)
 
     # A Trace owns its PageTable (mutable residency state): tenants must
-    # not share one, so duplicate Trace objects get a deep copy.  The
-    # per-instruction cost-function memos are detached first — they are
-    # spec-identity-pinned (a copy would be dead weight) and are rebuilt
-    # lazily by the clone's first dispatch.
+    # not share one, so duplicate Trace objects get an isolated clone
+    # (instruction metadata stays shared — see clone_trace).
     seen: set = set()
     tenant_traces: List[Trace] = []
     for tr in traces:
         if id(tr) in seen:
-            saved = [(ins, ins.__dict__.pop("_static_feats", None))
-                     for ins in tr.instrs]
-            try:
-                tr = copy.deepcopy(tr)
-            finally:
-                for ins, memo in saved:
-                    if memo is not None:
-                        ins._static_feats = memo
+            tr = clone_trace(tr)
         seen.add(id(tr))
         tenant_traces.append(tr)
 

@@ -12,17 +12,20 @@ sys.path.insert(0, str(REPO_ROOT))   # import the benchmarks package
 
 
 def test_parallel_runner_is_deterministic(capsys):
-    """Suite output (tables + CSV rows) is identical for 1 and 2 workers."""
+    """Suite output (tables + CSV rows) is identical for 1 and 2 workers —
+    including the open-loop serving curve + saturation suite."""
     from benchmarks.run import run_suites
 
-    rows1, failed1 = run_suites(["mix"], smoke=True, jobs=1)
+    rows1, failed1 = run_suites(["mix", "serving"], smoke=True, jobs=1)
     out1 = capsys.readouterr().out
-    rows2, failed2 = run_suites(["mix"], smoke=True, jobs=2)
+    rows2, failed2 = run_suites(["mix", "serving"], smoke=True, jobs=2)
     out2 = capsys.readouterr().out
     assert failed1 == failed2 == []
     assert rows1 == rows2
     assert out1 == out2
     assert any(r.startswith("mix/") for r in rows1)
+    assert any(r.startswith("serving/") and "/saturation," in r
+               for r in rows1)
 
 
 def test_runner_reports_unknown_suite():
@@ -43,7 +46,9 @@ def test_perf_bench_writes_trajectory_artifact(tmp_path):
     assert data["schema"] == "sim-perf-trajectory/v1"
     assert data["current"]["mix_events_per_sec"] > 0
     assert data["current"]["gc_events_per_sec"] > 0
+    assert data["current"]["serving_events_per_sec"] > 0
     assert any(r.startswith("simperf/mix/") for r in rows)
+    assert any(r.startswith("simperf/serving/") for r in rows)
 
 
 def test_committed_perf_artifact_records_speedup():
@@ -58,3 +63,6 @@ def test_committed_perf_artifact_records_speedup():
         assert data["baseline"][key] > 0
         assert data["current"][key] > 0
         assert data["speedup"][key] >= 3.0
+    # the serving suite (PR 4) is tracked from its introduction: current
+    # only — it has no pre-fast-path baseline to speed up against
+    assert data["current"]["serving_events_per_sec"] > 0

@@ -1,0 +1,365 @@
+"""Open-loop serving laws (:mod:`repro.sim.serving`).
+
+The subsystem's acceptance properties:
+
+(a) equivalence — one session, no churn, no admission pressure reproduces
+    ``simulate_mix([trace])`` bit-for-bit (serving strictly generalizes
+    the batch entry points);
+(b) determinism — identical inputs replay identical serving runs;
+(c) conservation — offered == completed + rejected + in-flight, with
+    in-flight == 0 after a drained run, under any admission pressure;
+(d) steady state — Little's law holds within tolerance on a stable run,
+    and warm-up/cool-down trimming excludes edge sessions;
+(e) saturation — the bisection is deterministic, brackets its answer,
+    and is monotone in the SLO.
+
+Plus the ``record_decisions=False`` fast mode: identical timing, no
+DecisionRecord allocation, per-op latencies still available.
+"""
+import pytest
+
+from repro.sim import (CatalogEntry, EventEngine, EventKind, HostIOStream,
+                       MMPPArrivals, PoissonArrivals, ServingConfig,
+                       SessionCatalog, SimConfig, TraceReplayArrivals,
+                       find_saturation, simulate, simulate_mix,
+                       simulate_serving)
+
+from _synth import synth_trace
+
+RAMP = list(range(40))
+SHORT = [2, 4, 6] * 3
+
+
+def one_trace_catalog(name="A", ops=RAMP):
+    return SessionCatalog([CatalogEntry(name, synth_trace(ops, name=name))])
+
+
+def two_kind_catalog():
+    return SessionCatalog(
+        [CatalogEntry("A", synth_trace(RAMP, name="A"), weight=3.0),
+         CatalogEntry("B", synth_trace(SHORT, name="B"), weight=1.0)],
+        seed=5)
+
+
+# -- (a) equivalence -----------------------------------------------------------
+
+def test_single_session_reproduces_simulate_mix_exactly():
+    """The acceptance law: a no-churn ServingConfig run == simulate_mix."""
+    tr = synth_trace(RAMP, name="A")
+    ser = simulate_serving(SessionCatalog([CatalogEntry("A", tr)]),
+                           TraceReplayArrivals(times_ns=(0.0,)), "conduit")
+    mix = simulate_mix([tr], "conduit", compute_solo=False)
+    got, want = ser.session_results[0], mix.tenants[0]
+    assert got.makespan_ns == want.makespan_ns            # bit-exact
+    assert got.total_energy_nj == want.total_energy_nj
+    assert got.resource_counts == want.resource_counts
+    assert got.coherence_syncs == want.coherence_syncs
+    assert ser.makespan_ns == mix.makespan_ns
+    assert ser.n_completed == 1 and ser.n_rejected == 0
+
+
+def test_session_arrival_events_on_the_timeline():
+    eng = EventEngine(record=True)
+    simulate_serving(one_trace_catalog(),
+                     PoissonArrivals(rate_per_sec=4000, n_sessions=8, seed=2),
+                     "conduit", engine=eng)
+    kinds = {k for _, k in eng.log}
+    assert EventKind.SESSION_ARRIVAL in kinds
+    assert EventKind.DISPATCH in kinds
+    times = [t for t, _ in eng.log]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+
+
+# -- (b) determinism -----------------------------------------------------------
+
+def test_same_inputs_replay_identically():
+    mk = lambda: simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=6000, n_sessions=24, seed=9),
+        "conduit", serving=ServingConfig(max_active_sessions=4))
+    r1, r2 = mk(), mk()
+    assert r1.makespan_ns == r2.makespan_ns
+    assert r1.session_latencies_ns == r2.session_latencies_ns
+    assert [s.done_ns for s in r1.sessions] == [s.done_ns for s in r2.sessions]
+    assert r1.utilization == r2.utilization
+
+
+def test_arrival_seed_changes_the_run():
+    mk = lambda seed: simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=6000, n_sessions=24, seed=seed),
+        "conduit")
+    assert mk(1).makespan_ns != mk(2).makespan_ns
+
+
+# -- (c) conservation ----------------------------------------------------------
+
+def test_session_conservation_under_admission_pressure():
+    """offered == completed + rejected (+ inflight == 0 after drain), with
+    a tiny admission cap and backlog forcing real rejections."""
+    res = simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=50_000, n_sessions=40, seed=9),
+        "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=2))
+    assert res.n_rejected > 0
+    assert res.n_inflight == 0
+    assert res.n_offered == res.n_completed + res.n_rejected == 40
+    assert res.n_admitted == res.n_completed
+    rejected = [s for s in res.sessions if s.rejected]
+    assert len(rejected) == res.n_rejected
+    assert all(not s.completed for s in rejected)
+    # admitted work all ran: one result per completed session
+    assert len(res.session_results) == res.n_completed
+
+
+def test_zero_backlog_rejects_everything_beyond_active_cap():
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0, 3.0)), "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=0))
+    # sessions 1-3 arrive while session 0 still runs and bounce
+    assert res.n_completed == 1
+    assert res.n_rejected == 3
+
+
+def test_backlog_defers_but_never_drops():
+    """With a roomy backlog the same burst completes in full, FIFO."""
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0, 3.0)), "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=8))
+    assert res.n_completed == 4 and res.n_rejected == 0
+    admits = [s.admit_ns for s in res.sessions]
+    assert admits == sorted(admits)                    # FIFO admission
+    assert all(s.queue_wait_ns >= 0.0 for s in res.sessions)
+    # serialized: each session admitted no earlier than its predecessor
+    # completed its last event (epilogue frees the slot)
+    for prev, nxt in zip(res.sessions, res.sessions[1:]):
+        assert nxt.admit_ns >= prev.admit_ns
+
+
+def test_queueing_under_cap_inflates_latency():
+    arr = PoissonArrivals(rate_per_sec=20_000, n_sessions=24, seed=9)
+    wide = simulate_serving(two_kind_catalog(), arr, "conduit",
+                            serving=ServingConfig(max_active_sessions=16,
+                                                  max_backlog=64))
+    narrow = simulate_serving(two_kind_catalog(), arr, "conduit",
+                              serving=ServingConfig(max_active_sessions=1,
+                                                    max_backlog=64))
+    assert narrow.p(50) > wide.p(50)
+    assert narrow.mean_in_system > wide.mean_in_system
+
+
+# -- (d) steady state ----------------------------------------------------------
+
+def test_littles_law_on_a_stable_run():
+    """L ≈ λ·W over the measured window at moderate, sustainable load."""
+    res = simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=2000, n_sessions=64, seed=9),
+        "conduit",
+        serving=ServingConfig(warmup_ns=3e6, cooldown_ns=3e6))
+    assert res.n_rejected == 0
+    ratio = res.little_law_ratio()
+    assert 0.7 < ratio < 1.3, f"Little's law violated: L/(lambda W)={ratio:.3f}"
+    assert res.mean_in_system > 0.0
+
+
+def test_warmup_cooldown_trim_excludes_edge_sessions():
+    arr = DeterministicArrivals = PoissonArrivals(rate_per_sec=4000,
+                                                  n_sessions=32, seed=9)
+    trimmed = simulate_serving(
+        two_kind_catalog(), arr, "conduit",
+        serving=ServingConfig(warmup_ns=2e6, cooldown_ns=2e6))
+    full = simulate_serving(two_kind_catalog(), arr, "conduit")
+    n_meas = len(trimmed.measured_sessions)
+    assert 0 < n_meas < trimmed.n_offered
+    assert len(full.measured_sessions) == full.n_completed
+    lo, hi = trimmed.window_ns
+    for s in trimmed.sessions:
+        assert s.measured == (lo <= s.arrival_ns <= hi)
+    # the timing itself is untouched by where the window sits
+    assert trimmed.makespan_ns == full.makespan_ns
+
+
+def test_utilization_grows_with_offered_load():
+    mk = lambda rate: simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=rate, n_sessions=32, seed=9),
+        "conduit", serving=ServingConfig(warmup_ns=1e5, cooldown_ns=1e5))
+    quiet, loud = mk(1000), mk(12_000)
+    assert set(quiet.utilization) == set(loud.utilization)
+    assert all(v >= 0.0 for v in quiet.utilization.values())
+    assert max(loud.utilization.values()) > max(quiet.utilization.values())
+
+
+def test_host_io_stream_contends_with_sessions():
+    arr = PoissonArrivals(rate_per_sec=4000, n_sessions=16, seed=9)
+    io = HostIOStream(rate_iops=100_000, n_requests=64)
+    with_io = simulate_serving(two_kind_catalog(), arr, "conduit",
+                               io_stream=io)
+    without = simulate_serving(two_kind_catalog(), arr, "conduit")
+    assert with_io.host_io is not None and without.host_io is None
+    assert with_io.host_io.n_requests == 64
+    # host traffic can only slow sessions down (FIFO pools, superset load)
+    for a, b in zip(without.session_latencies_ns,
+                    with_io.session_latencies_ns):
+        assert b >= a - 1e-6
+
+
+def test_mmpp_burst_traffic_serves():
+    res = simulate_serving(
+        two_kind_catalog(),
+        MMPPArrivals(rate_on_per_sec=16_000, mean_on_ns=2e6, mean_off_ns=2e6,
+                     n_sessions=24, seed=4),
+        "conduit")
+    assert res.n_offered == 24
+    assert res.n_inflight == 0
+
+
+# -- record_decisions fast mode ------------------------------------------------
+
+def test_record_decisions_off_is_bit_identical_and_lighter():
+    tr = synth_trace(RAMP, name="A")
+    full = simulate(tr, "conduit")
+    fast = simulate(synth_trace(RAMP, name="A"), "conduit",
+                    record_decisions=False)
+    assert fast.makespan_ns == full.makespan_ns
+    assert fast.total_energy_nj == full.total_energy_nj
+    assert fast.decisions == []
+    assert len(full.decisions) == len(RAMP)
+    # per-op latencies survive the fast mode, and match the records
+    assert fast.latencies_ns == full.latencies_ns
+    assert fast.p(99) == full.p(99)
+
+
+def test_record_decisions_off_in_mix():
+    mk = lambda: [synth_trace(RAMP, name="A"), synth_trace(SHORT, name="B")]
+    full = simulate_mix(mk(), "conduit", compute_solo=False)
+    fast = simulate_mix(mk(), "conduit", compute_solo=False,
+                        record_decisions=False)
+    assert fast.makespan_ns == full.makespan_ns
+    for f, g in zip(fast.tenants, full.tenants):
+        assert f.decisions == []
+        assert f.latencies_ns == g.latencies_ns
+
+
+def test_serving_defaults_to_fast_mode():
+    res = simulate_serving(one_trace_catalog(),
+                           TraceReplayArrivals(times_ns=(0.0,)), "conduit")
+    r = res.session_results[0]
+    assert r.decisions == []
+    assert len(r.latencies_ns) == len(RAMP)
+    assert res.op_latencies_ns       # aggregated for measured sessions
+
+
+def test_serving_fast_mode_survives_an_explicit_sim_config():
+    """ServingConfig.record_decisions governs even when a SimConfig is
+    passed (e.g. to tune capacities) — serving must not silently fall
+    back to unbounded per-dispatch DecisionRecord logging."""
+    res = simulate_serving(one_trace_catalog(),
+                           TraceReplayArrivals(times_ns=(0.0,)), "conduit",
+                           config=SimConfig(pud_units=8))
+    assert res.session_results[0].decisions == []
+    full = simulate_serving(one_trace_catalog(),
+                            TraceReplayArrivals(times_ns=(0.0,)), "conduit",
+                            serving=ServingConfig(record_decisions=True))
+    assert len(full.session_results[0].decisions) == len(RAMP)
+
+
+# -- (e) saturation finder -----------------------------------------------------
+
+SAT_KW = dict(slo_p99_ns=1.5e6, rate_lo=1000, rate_hi=24_000, iters=4,
+              n_sessions=32, seed=9,
+              serving=ServingConfig(keep_session_results=False,
+                                    warmup_ns=1e5, cooldown_ns=1e5))
+
+
+def test_saturation_brackets_and_is_deterministic():
+    cat = two_kind_catalog()
+    sat = find_saturation(cat, "conduit", **SAT_KW)
+    again = find_saturation(cat, "conduit", **SAT_KW)
+    assert sat.rate_per_sec == again.rate_per_sec
+    assert [p.rate_per_sec for p in sat.probes] == \
+        [p.rate_per_sec for p in again.probes]
+    lo, hi = sat.bracket
+    assert sat.rate_per_sec == lo <= hi
+    assert 1000 <= lo and hi <= 24_000
+    assert len(sat.probes) <= 2 + SAT_KW["iters"]
+    # the bracket is genuinely decided: lo sustained, hi (if distinct) not
+    by_rate = {p.rate_per_sec: p for p in sat.probes}
+    assert by_rate[lo].sustainable
+    if hi != lo:
+        assert not by_rate[hi].sustainable
+
+
+def test_saturation_monotone_in_slo():
+    """A tighter SLO can only lower the sustainable rate."""
+    cat = two_kind_catalog()
+    loose = find_saturation(cat, "conduit", **SAT_KW)
+    tight = find_saturation(cat, "conduit",
+                            **{**SAT_KW, "slo_p99_ns": 0.8e6})
+    assert tight.rate_per_sec <= loose.rate_per_sec
+
+
+def test_saturation_validation():
+    cat = two_kind_catalog()
+    with pytest.raises(ValueError):
+        find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=0,
+                        rate_hi=100)
+    with pytest.raises(ValueError):
+        find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=100,
+                        rate_hi=100)
+    with pytest.raises(ValueError):
+        find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=100,
+                        rate_hi=200, iters=0)
+    # warmup/cooldown that swallow the arrival span fail loudly instead of
+    # making every rate look sustainable
+    with pytest.raises(ValueError, match="no measured sessions"):
+        find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=1000,
+                        rate_hi=2000, n_sessions=8,
+                        serving=ServingConfig(warmup_ns=1e12,
+                                              cooldown_ns=1e12))
+
+
+def test_saturation_treats_all_rejected_probe_as_unsustainable():
+    """A probe where admission pressure rejects the in-window arrivals is
+    unsustainable by the rejections alone — it must not crash on the
+    empty latency list."""
+    cat = two_kind_catalog()
+    sat = find_saturation(
+        cat, "conduit", slo_p99_ns=1e9, rate_lo=100, rate_hi=1_000_000,
+        iters=2, n_sessions=16,
+        serving=ServingConfig(max_active_sessions=1, max_backlog=0,
+                              warmup_ns=3e4, cooldown_ns=0.0,
+                              keep_session_results=False))
+    assert any(p.n_rejected > 0 and not p.sustainable for p in sat.probes)
+    assert sat.rate_per_sec < 1_000_000
+
+
+# -- config validation ---------------------------------------------------------
+
+def test_serving_config_validation():
+    with pytest.raises(ValueError):
+        ServingConfig(max_active_sessions=0)
+    with pytest.raises(ValueError):
+        ServingConfig(max_backlog=-1)
+    with pytest.raises(ValueError):
+        ServingConfig(warmup_ns=-1.0)
+    with pytest.raises(ValueError):
+        simulate_serving(one_trace_catalog(),
+                         TraceReplayArrivals(times_ns=(0.0,), start_ns=-5.0),
+                         "conduit")
+
+
+@pytest.mark.slow
+def test_saturation_grid_across_policies():
+    """Nightly: the full policy comparison at benchmark scale — conduit
+    sustains at least as much load as the DM baseline under the same SLO."""
+    cat = two_kind_catalog()
+    kw = dict(SAT_KW, iters=6, n_sessions=96)
+    rates = {pol: find_saturation(cat, pol, **kw).rate_per_sec
+             for pol in ("conduit", "bw", "dm")}
+    assert rates["conduit"] >= rates["dm"]
+    assert rates["conduit"] > 0

@@ -1,0 +1,164 @@
+"""Arrival-process and session-catalog laws (:mod:`repro.sim.workgen`).
+
+Every generator must be (a) fully seeded — identical inputs replay
+identical arrival streams, (b) well-ordered — times non-decreasing (and
+strictly increasing where gaps are continuous draws), and (c) rescalable
+— ``at_rate`` preserves the process shape while hitting the new mean
+rate, which is what the saturation finder bisects over.
+"""
+import pytest
+
+from repro.sim import (CatalogEntry, DeterministicArrivals, MMPPArrivals,
+                       PoissonArrivals, SessionCatalog, SuperposedArrivals,
+                       TraceReplayArrivals)
+
+from _synth import synth_trace
+
+
+# -- determinism ---------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda seed: PoissonArrivals(rate_per_sec=2000, n_sessions=64, seed=seed),
+    lambda seed: MMPPArrivals(rate_on_per_sec=4000, mean_on_ns=5e6,
+                              mean_off_ns=5e6, n_sessions=64, seed=seed),
+])
+def test_same_seed_replays_identically(make):
+    assert make(7).arrival_times_ns() == make(7).arrival_times_ns()
+    assert make(7).arrival_times_ns() != make(8).arrival_times_ns()
+
+
+def test_arrival_times_are_ordered_and_nonnegative():
+    for proc in (PoissonArrivals(rate_per_sec=5000, n_sessions=48),
+                 DeterministicArrivals(rate_per_sec=5000, n_sessions=48),
+                 MMPPArrivals(rate_on_per_sec=8000, n_sessions=48),
+                 TraceReplayArrivals(times_ns=(0.0, 1.0, 1.0, 5.0))):
+        ts = proc.arrival_times_ns()
+        assert len(ts) >= 4
+        assert all(t >= 0.0 for t in ts)
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+# -- rate semantics ------------------------------------------------------------
+
+def test_deterministic_rate_is_exact():
+    proc = DeterministicArrivals(rate_per_sec=1000, n_sessions=10)
+    ts = proc.arrival_times_ns()
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    assert all(g == pytest.approx(1e6) for g in gaps)
+    assert proc.mean_rate_per_sec == 1000
+
+
+def test_poisson_empirical_rate_matches_nominal():
+    proc = PoissonArrivals(rate_per_sec=10_000, n_sessions=256, seed=3)
+    ts = proc.arrival_times_ns()
+    rate = (len(ts) - 1) / ((ts[-1] - ts[0]) / 1e9)
+    assert rate == pytest.approx(10_000, rel=0.25)
+
+
+def test_at_rate_rescales_every_process():
+    procs = [PoissonArrivals(rate_per_sec=1000, n_sessions=64),
+             DeterministicArrivals(rate_per_sec=1000, n_sessions=64),
+             MMPPArrivals(rate_on_per_sec=2000, rate_off_per_sec=500,
+                          n_sessions=64),
+             TraceReplayArrivals(times_ns=tuple(
+                 float(i * 100 + i * 7 % 50) for i in range(64)))]
+    for proc in procs:
+        scaled = proc.at_rate(2 * proc.mean_rate_per_sec)
+        assert scaled.mean_rate_per_sec == \
+            pytest.approx(2 * proc.mean_rate_per_sec)
+
+
+def test_trace_replay_at_rate_preserves_gap_structure():
+    proc = TraceReplayArrivals(times_ns=(0.0, 10.0, 30.0, 100.0))
+    fast = proc.at_rate(2 * proc.mean_rate_per_sec)
+    ts = fast.arrival_times_ns()
+    gaps = [b - a for a, b in zip(ts, ts[1:])]
+    # relative gap ratios survive the time compression
+    assert gaps[1] / gaps[0] == pytest.approx(2.0)
+    assert gaps[2] / gaps[0] == pytest.approx(7.0)
+
+
+def test_mmpp_off_state_is_burstier_than_poisson():
+    """ON/OFF modulated arrivals at the same mean rate are burstier: the
+    inter-arrival coefficient of variation clearly exceeds the Poisson
+    process's (which sits near 1)."""
+    def cv(ts):
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        mean = sum(gaps) / len(gaps)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        return var ** 0.5 / mean
+
+    mm = MMPPArrivals(rate_on_per_sec=50_000, rate_off_per_sec=0.0,
+                      mean_on_ns=0.2e6, mean_off_ns=10e6, n_sessions=64,
+                      seed=3)
+    po = PoissonArrivals(rate_per_sec=mm.mean_rate_per_sec, n_sessions=64,
+                         seed=3)
+    assert cv(mm.arrival_times_ns()) > 2.0 > cv(po.arrival_times_ns())
+    assert mm.mean_rate_per_sec == pytest.approx(50_000 * 0.2 / 10.2)
+
+
+def test_superpose_merges_and_sums_rates():
+    a = PoissonArrivals(rate_per_sec=1000, n_sessions=32, seed=1)
+    b = DeterministicArrivals(rate_per_sec=500, n_sessions=16)
+    sup = SuperposedArrivals((a, b))
+    ts = sup.arrival_times_ns()
+    assert len(ts) == 48
+    assert all(y >= x for x, y in zip(ts, ts[1:]))
+    assert sorted(a.arrival_times_ns() + b.arrival_times_ns()) == ts
+    assert sup.mean_rate_per_sec == pytest.approx(1500)
+    half = sup.at_rate(750)
+    assert half.mean_rate_per_sec == pytest.approx(750)
+
+
+# -- validation ----------------------------------------------------------------
+
+def test_process_validation_errors():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate_per_sec=0.0)
+    with pytest.raises(ValueError):
+        PoissonArrivals(n_sessions=0)
+    with pytest.raises(ValueError):
+        DeterministicArrivals(rate_per_sec=-1.0)
+    with pytest.raises(ValueError):
+        MMPPArrivals(rate_on_per_sec=0.0)
+    with pytest.raises(ValueError):
+        MMPPArrivals(mean_on_ns=0.0)
+    with pytest.raises(ValueError):
+        TraceReplayArrivals(times_ns=())
+    with pytest.raises(ValueError):
+        TraceReplayArrivals(times_ns=(5.0, 1.0))   # not sorted
+    with pytest.raises(ValueError):
+        TraceReplayArrivals(times_ns=(-1.0, 1.0))
+    with pytest.raises(ValueError):
+        # a zero-span log has no rate: rescaling would emit NaN times
+        TraceReplayArrivals(times_ns=(100.0,)).at_rate(1000)
+    with pytest.raises(ValueError):
+        SuperposedArrivals(())
+
+
+# -- session catalog -----------------------------------------------------------
+
+def test_catalog_draw_is_deterministic_and_weighted():
+    heavy = synth_trace([1, 2], name="heavy")
+    light = synth_trace([3], name="light")
+    cat = SessionCatalog([CatalogEntry("heavy", heavy, weight=9.0),
+                          CatalogEntry("light", light, weight=1.0)], seed=5)
+    counts = cat.kind_counts(200)
+    assert counts == SessionCatalog(cat.entries, seed=5).kind_counts(200)
+    assert counts["heavy"] + counts["light"] == 200
+    assert counts["heavy"] > counts["light"] * 3    # 9:1 weights dominate
+    # a different seed permutes the kind sequence
+    seq = [cat.draw(i).name for i in range(64)]
+    other = [SessionCatalog(cat.entries, seed=6).draw(i).name
+             for i in range(64)]
+    assert seq != other
+
+
+def test_catalog_validation_errors():
+    tr = synth_trace([1], name="t")
+    with pytest.raises(ValueError):
+        SessionCatalog([])
+    with pytest.raises(ValueError):
+        SessionCatalog([CatalogEntry("a", tr), CatalogEntry("a", tr)])
+    with pytest.raises(ValueError):
+        CatalogEntry("bad", tr, weight=0.0)

@@ -1,17 +1,22 @@
 """Capacity-pressure sweep: exercises the eviction + lazy-coherence
 machinery (the paper's "footprint exceeds capacity" regime, §5.4), the
 fault-replay path (§4.4 failure handling), the multi-tenant interference
-regime (several traces + host I/O sharing one fabric), and the FTL
+regime (several traces + host I/O sharing one fabric), the FTL
 garbage-collection interference sweep (write amplification vs.
-over-provisioning under Zipf-skewed writes)."""
+over-provisioning under Zipf-skewed writes), and the GC *policy* sweep
+(victim selection x hot/cold separation x suspend/throttle, plus the
+saturation cost of collecting under open-loop serving)."""
 from __future__ import annotations
 
 import dataclasses
 from typing import List
 
 from benchmarks.common import csv_row
-from repro.sim import (FTLConfig, HostIOStream, SimConfig, jain_fairness,
-                       simulate, simulate_mix)
+from repro.hw.ssd_spec import FlashSpec, SSDSpec
+from repro.sim import (CatalogEntry, FTLConfig, HostIOStream, ServingConfig,
+                       SessionCatalog, SimConfig, drive_zipf_overwrites,
+                       find_saturation, jain_fairness, simulate,
+                       simulate_mix)
 from repro.workloads import get_trace, sim_config_for
 
 
@@ -134,4 +139,118 @@ def gc_interference(workloads=("jacobi1d", "aes"),
         for k, v in slow.items():
             rows.append(csv_row(f"gc/slowdown/{k.split(':')[1]}/{op}",
                                 f"{v:.4f}", "x_vs_gc_off"))
+    return rows
+
+
+#: scaled-down fabric for the victim-policy study: 4 dies concentrate the
+#: per-die overwrite churn, so thousands of GC cycles (where victim choice
+#: actually matters) simulate in seconds
+_POLICY_SSD = SSDSpec(flash=FlashSpec(channels=2, dies_per_channel=2))
+
+
+def _drive_policy(cfg: FTLConfig, n_writes: int):
+    return drive_zipf_overwrites(cfg, _POLICY_SSD, n_writes)
+
+
+def gc_policies(workloads=("jacobi1d", "aes"),
+                policy: str = "conduit",
+                smoke: bool = False) -> List[str]:
+    """GC policy suite: victim selection x hot/cold x suspend, plus the
+    sustainable-throughput cost of collecting under open-loop serving.
+
+    Three studies, all hashed-seed deterministic (byte-identical across
+    ``run.py --jobs`` values):
+
+    1. **victim x hot/cold** — Zipf overwrite churn on a scaled 4-die
+       drive: cost-benefit's age gate and the hot/cold append-point split
+       each cut write amplification vs. the greedy baseline, and the
+       wear-aware picker flattens the erase-count histogram;
+    2. **suspend/throttle** — NDP tenants + write-heavy Zipf host I/O on
+       the full drive, monolithic vs. per-page-copy collection: suspend
+       cuts the host read p99 during collection;
+    3. **serving under GC** — ``find_saturation`` with and without a
+       preconditioned FTL: garbage collection measurably lowers the max
+       sustainable sessions/sec under the p99 SLO."""
+    rows: List[str] = []
+
+    # -- study 1: victim policy x hot/cold (WA + wear) ------------------------
+    # geometry calibrated so the multi-stream append points never exhaust
+    # the OP slack: zero overflow growth, WA deltas are policy-only
+    n_writes = 1500 if smoke else 6000
+    base = FTLConfig(blocks_per_die=32, pages_per_block=8, op_ratio=0.28,
+                     prefill=0.85, gc_reserve_blocks=1)
+    print(f"\n== GC victim policy x hot/cold (zipf 0.99 overwrite churn, "
+          f"{n_writes} writes, 4-die scaled drive)")
+    print(f"  {'victim':>13s} {'hot_cold':>8s} {'WA':>6s} {'erases':>7s} "
+          f"{'wear_flat':>10s} {'max_wear':>9s}")
+    for vp in ("greedy", "cost_benefit", "wear_aware"):
+        for hc in (False, True):
+            cfg = dataclasses.replace(base, victim_policy=vp, hot_cold=hc)
+            s = _drive_policy(cfg, n_writes)
+            print(f"  {vp:>13s} {str(hc):>8s} {s.write_amplification:6.2f} "
+                  f"{s.blocks_erased:7d} {s.wear_flatness:10.3f} "
+                  f"{s.max_erase_count:9d}")
+            tag = f"{vp}/{'hc' if hc else 'mixed'}"
+            rows.append(csv_row(f"gcpolicy/wa/{tag}",
+                                f"{s.write_amplification:.4f}", "x"))
+            rows.append(csv_row(f"gcpolicy/wear_flatness/{tag}",
+                                f"{s.wear_flatness:.4f}",
+                                f"max_wear={s.max_erase_count}"))
+
+    # -- study 2: GC suspend vs host tail latency -----------------------------
+    n_req = 160 if smoke else 512
+    # reserve held constant across the pair: the p99 delta is suspend-only
+    geometry = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.12,
+                         prefill=0.9, gc_reserve_blocks=1)
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.3, n_requests=n_req,
+                      zipf_theta=0.95,
+                      n_logical_pages=geometry.logical_pages())
+    traces = [get_trace(wl, "tiny") for wl in workloads]
+    print(f"\n== GC suspend/throttle ({'+'.join(workloads)}, {policy} "
+          f"policy, zipf 0.95 write-heavy host I/O)")
+    for suspend in (False, True):
+        cfg = dataclasses.replace(geometry, gc_suspend=suspend)
+        mix = simulate_mix(traces, policy, io_stream=io, ftl=cfg,
+                           compute_solo=False)
+        s = mix.ftl
+        mode = "suspend" if suspend else "monolithic"
+        print(f"  {mode:>10s} WA={s.write_amplification:5.2f} "
+              f"io_p99={mix.host_io.p(99)/1e3:9.1f}us "
+              f"during_gc_p99={s.p_during_gc(99)/1e3:9.1f}us "
+              f"suspensions={s.gc_suspensions:6d}")
+        rows.append(csv_row(f"gcpolicy/suspend_io_p99/{mode}",
+                            f"{mix.host_io.p(99)/1e3:.1f}",
+                            f"us,during_gc={s.p_during_gc(99)/1e3:.1f}"))
+
+    # -- study 3: saturation on a collecting drive ----------------------------
+    sat_iters = 2 if smoke else 4
+    n_sessions = 24 if smoke else 48
+    catalog = SessionCatalog(
+        [CatalogEntry("jacobi1d", get_trace("jacobi1d", "tiny"), weight=3.0),
+         CatalogEntry("xor_filter", get_trace("xor_filter", "tiny"),
+                      weight=1.0)],
+        seed=5)
+    serve_ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                          prefill=0.9, gc_suspend=True, gc_reserve_blocks=1)
+    serve_io = HostIOStream(rate_iops=12_000, read_fraction=0.5,
+                            n_requests=128, zipf_theta=0.95,
+                            n_logical_pages=serve_ftl.logical_pages())
+    kw = dict(slo_p99_ns=2.0e6, rate_lo=4000, rate_hi=16_000,
+              iters=sat_iters, n_sessions=n_sessions, seed=9,
+              io_stream=serve_io,
+              serving=ServingConfig(keep_session_results=False,
+                                    warmup_ns=1e5, cooldown_ns=1e5))
+    print(f"\n== saturation under GC ({policy} policy, p99 SLO 2.0ms, "
+          f"suspend collector, 28% OP, 90% prefill)")
+    ideal = find_saturation(catalog, policy, **kw)
+    collecting = find_saturation(catalog, policy, ftl=serve_ftl, **kw)
+    stolen = ideal.rate_per_sec - collecting.rate_per_sec
+    print(f"  idealized drive: {ideal.rate_per_sec:8.1f} sessions/s")
+    print(f"  collecting:      {collecting.rate_per_sec:8.1f} sessions/s "
+          f"(GC steals {stolen:.0f}/s)")
+    rows.append(csv_row("gcpolicy/saturation/ideal",
+                        f"{ideal.rate_per_sec:.1f}", "per_sec"))
+    rows.append(csv_row("gcpolicy/saturation/collecting",
+                        f"{collecting.rate_per_sec:.1f}",
+                        f"per_sec,stolen={stolen:.1f}"))
     return rows

@@ -35,7 +35,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 #: suites whose signature takes a ``smoke`` kwarg (CI-sized shrink)
-SMOKE_AWARE = {"mix", "gc", "serving"}
+SMOKE_AWARE = {"mix", "gc", "gc_policies", "serving"}
 
 
 def _suite_table() -> Dict:
@@ -56,6 +56,7 @@ def _suite_table() -> Dict:
         "fault": pressure_bench.fault_replay,
         "mix": pressure_bench.tenant_interference,
         "gc": pressure_bench.gc_interference,
+        "gc_policies": pressure_bench.gc_policies,
         "serving": serving_bench.serving_curve,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
@@ -135,12 +136,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
-                         "overhead,roofline,pressure,fault,mix,gc,serving,"
-                         "kernels,simperf")
+                         "overhead,roofline,pressure,fault,mix,gc,"
+                         "gc_policies,serving,kernels,simperf")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized configurations for smoke-aware suites "
-                         "(mix, gc, serving): tiny sweeps that only check "
-                         "the entry points still run")
+                         "(mix, gc, gc_policies, serving): tiny sweeps "
+                         "that only check the entry points still run")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for independent suites (output "
                          "is identical for any N on deterministic suites; "

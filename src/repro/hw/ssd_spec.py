@@ -145,11 +145,28 @@ class FTLSpec:
     space (over-provisioning) so the garbage collector always has somewhere
     to consolidate valid pages; the watermarks bound when the GC background
     process runs.  Fractions are of a die's physical page count — GC is a
-    per-die activity in :mod:`repro.sim.ftl`."""
+    per-die activity in :mod:`repro.sim.ftl`.
+
+    The policy knobs parameterize the GC policy suite of
+    :mod:`repro.sim.ftl` (victim selection, hot/cold data separation,
+    GC suspend/throttle); :class:`~repro.sim.ftl.FTLConfig` fields default
+    to these firmware values and override them per run."""
 
     op_ratio: float = 0.28            # physical/logical - 1 (28% OP)
     gc_low_watermark: float = 0.10    # free-page fraction that wakes GC
     gc_high_watermark: float = 0.20   # free-page fraction where GC sleeps
+    # hot/cold data separation: an LBA whose lifetime write count reaches
+    # the threshold is routed to the hot host append point (hot pages die
+    # together, so victims are either nearly-empty or nearly-full)
+    hot_threshold: int = 3
+    # wear-aware victim selection: valid-page-count penalty per erase the
+    # candidate block sits above the die's least-worn block
+    wear_alpha: float = 4.0
+    # GC suspend/throttle: pause the collector between page copies while
+    # the host has >= gc_suspend_qd requests outstanding, re-checking
+    # every gc_backoff_ns
+    gc_suspend_qd: int = 2
+    gc_backoff_ns: float = 30_000.0
 
 
 @dataclasses.dataclass(frozen=True)

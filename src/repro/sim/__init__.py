@@ -9,7 +9,10 @@ tail latency, plus :func:`find_saturation` for the max sustainable rate).
 All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
 from repro.sim.events import Event, EventEngine, EventKind
-from repro.sim.ftl import FTLConfig, FTLModel
+from repro.sim.ftl import (VICTIM_POLICIES, CostBenefitVictim, FTLConfig,
+                           FTLModel, GreedyVictim, VictimPolicy,
+                           WearAwareVictim, drive_zipf_overwrites,
+                           make_victim_policy)
 from repro.sim.machine import SimConfig, Simulation, simulate
 from repro.sim.servers import Fabric, ServerPool
 from repro.sim.serving import (SaturationProbe, SaturationResult,
@@ -28,6 +31,9 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "Event", "EventEngine", "EventKind",
            "HostIOStream", "simulate_mix", "clone_trace",
            "FTLConfig", "FTLModel", "FTLStats",
+           "VictimPolicy", "GreedyVictim", "CostBenefitVictim",
+           "WearAwareVictim", "VICTIM_POLICIES", "make_victim_policy",
+           "drive_zipf_overwrites",
            "DecisionRecord", "HostIOStats", "MixResult", "SimResult",
            "jain_fairness", "percentile",
            "ArrivalProcess", "PoissonArrivals", "MMPPArrivals",

@@ -24,19 +24,48 @@ Event flow (mirrors the discipline of :mod:`repro.sim.tenancy`):
   no collector is active on that die, an :data:`EventKind.GC` event is
   scheduled *now* — GC is one more tenant on the shared
   :class:`~repro.sim.events.EventEngine`.
-* The GC handler picks the greedy victim (minimum valid pages among full
-  blocks), and for every valid page books a page read, a channel
-  round-trip (page buffer -> controller -> destination page buffer: the
-  controller re-encodes ECC, so no on-die copyback) and an SLC program on
-  the *same* die/channel :class:`~repro.sim.servers.ServerPool`\\ s that
-  NDP dispatch and host I/O acquire; then it books the block erase.  The
-  lazy-acquire FIFO discipline makes every host request or NDP operand
-  fetch behind the collector wait — write amplification directly inflates
-  per-tenant slowdown and host-I/O tail latency.
+* The GC handler picks a victim block via the configured
+  :class:`VictimPolicy`, and for every valid page books a page read, a
+  channel round-trip (page buffer -> controller -> destination page
+  buffer: the controller re-encodes ECC, so no on-die copyback) and an
+  SLC program on the *same* die/channel
+  :class:`~repro.sim.servers.ServerPool`\\ s that NDP dispatch and host
+  I/O acquire; then it books the block erase.  The lazy-acquire FIFO
+  discipline makes every host request or NDP operand fetch behind the
+  collector wait — write amplification directly inflates per-tenant
+  slowdown and host-I/O tail latency.
 * At the end of the booked cycle the handler re-schedules itself: the
   collector keeps reclaiming blocks until the free fraction recovers to
   the high watermark (or no victim with a free page remains), then sleeps
   until the next watermark crossing.
+
+GC policy suite (each knob defaults to the legacy bit-identical behavior):
+
+* **Victim selection** is a strategy object (:data:`VICTIM_POLICIES`):
+  ``greedy`` (minimum valid pages, the default), ``cost_benefit`` (the
+  classic age-weighted ``(1-u)/2u`` score of Rosenblum's LFS cleaner,
+  paired with its age-sorting rewrite side: still-hot survivors rejoin
+  the hot append point instead of re-polluting cold compaction blocks —
+  scoring alone measures within noise of greedy), and ``wear_aware``
+  (valid-count choice penalized by the block's erase count above the die
+  minimum, flattening the
+  :attr:`~repro.sim.stats.FTLStats.erase_counts` wear histogram).
+* **Hot/cold separation** (``hot_cold=True``) splits the host append
+  point in two: LBAs whose lifetime write count reaches
+  ``hot_threshold`` land on the HOT append point, the rest on COLD, so
+  hot pages die together and Zipf-skewed streams produce nearly-empty
+  victims (lower write amplification).
+* **GC suspend/throttle** (``gc_suspend=True``) replaces the monolithic
+  per-victim booking with one event per page copy: the collector yields
+  the die/channel pools between copies (host requests arriving mid-cycle
+  book ahead of later copies instead of FIFO-queueing behind the whole
+  victim), and while the host has ``gc_suspend_qd`` or more requests
+  outstanding it backs off ``gc_backoff_ns`` instead of booking at all —
+  latency-critical host reads stop waiting behind a full victim cycle.
+* ``gc_reserve_blocks=1`` holds one free block per die back from host
+  append-point allocation so a mid-collection copy can never be starved
+  into silent overflow growth (``0`` keeps the legacy semantics where
+  the host may drain the pool and the collector overflow-grows).
 
 Mapping state (L2P/valid bitmaps) updates at event-handler time while the
 latencies occupy the pools — a simplification shared with FTL-SIM: the
@@ -48,8 +77,10 @@ write amplification is exactly 1.0.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
 from repro.sim.events import Event, EventEngine, EventKind
@@ -65,12 +96,18 @@ class FTLConfig:
     """Simulation-scale FTL knobs.
 
     ``blocks_per_die`` / ``pages_per_block`` set the *scaled* geometry the
-    mapping operates on; ``op_ratio`` and the watermarks default to the
-    firmware parameters in :class:`~repro.hw.ssd_spec.FTLSpec`.
-    ``prefill`` writes that fraction of the logical space through the
-    allocator at t=0 (state only, no time booked) — the standard
-    preconditioning step without which a fresh drive never garbage
-    collects."""
+    mapping operates on; ``op_ratio``, the watermarks and the policy
+    parameters default to the firmware values in
+    :class:`~repro.hw.ssd_spec.FTLSpec`.  ``prefill`` writes that fraction
+    of the logical space through the allocator at t=0 (state only, no time
+    booked) — the standard preconditioning step without which a fresh
+    drive never garbage collects.
+
+    The GC policy suite (``victim_policy`` / ``hot_cold`` /
+    ``gc_suspend`` / ``gc_reserve_blocks``) defaults to the legacy
+    collector: ``greedy`` victims, one host append point, monolithic
+    per-victim booking, no reserve — bit-identical to the pre-policy FTL
+    (the golden digests in ``tests/test_golden_equivalence.py``)."""
 
     blocks_per_die: int = 16
     pages_per_block: int = 32
@@ -79,6 +116,38 @@ class FTLConfig:
     gc_high_watermark: Optional[float] = None
     gc_enabled: bool = True
     prefill: float = 0.0
+    # -- GC policy suite ------------------------------------------------------
+    victim_policy: str = "greedy"             # greedy|cost_benefit|wear_aware
+    hot_cold: bool = False                    # two host append points by heat
+    hot_threshold: Optional[int] = None       # default: spec.ftl.hot_threshold
+    wear_alpha: Optional[float] = None        # default: spec.ftl.wear_alpha
+    gc_suspend: bool = False                  # per-page-copy yielding/backoff
+    gc_suspend_qd: Optional[int] = None       # default: spec.ftl.gc_suspend_qd
+    gc_backoff_ns: Optional[float] = None     # default: spec.ftl.gc_backoff_ns
+    gc_reserve_blocks: int = 0                # free blocks held back for GC
+
+    def __post_init__(self) -> None:
+        if self.victim_policy not in VICTIM_POLICIES:
+            raise ValueError(
+                f"unknown victim_policy {self.victim_policy!r}; "
+                f"choose from {sorted(VICTIM_POLICIES)}")
+        if self.gc_reserve_blocks < 0:
+            raise ValueError("gc_reserve_blocks must be >= 0")
+        if self.gc_reserve_blocks >= self.blocks_per_die:
+            raise ValueError("gc_reserve_blocks must leave host blocks")
+        if self.hot_threshold is not None and self.hot_threshold < 2:
+            # threshold 1 routes every write hot: no cold stream ever
+            # allocates, so the prefill-era HOST append point would be
+            # stranded partially filled forever (never a GC victim)
+            raise ValueError("hot_threshold must be >= 2 (1 means every "
+                             "write is hot: no hot/cold split at all)")
+        # qd 0 is always-suspended (0 >= 0 even with no host attached) and
+        # a zero backoff re-queues at a frozen timestamp: both livelock
+        # the suspend-mode collector, so the engine would never drain
+        if self.gc_suspend_qd is not None and self.gc_suspend_qd < 1:
+            raise ValueError("gc_suspend_qd must be >= 1")
+        if self.gc_backoff_ns is not None and self.gc_backoff_ns <= 0.0:
+            raise ValueError("gc_backoff_ns must be > 0")
 
     def physical_pages(self, spec: SSDSpec = DEFAULT_SSD) -> int:
         return (spec.flash.total_dies * self.blocks_per_die
@@ -94,23 +163,37 @@ class _DieFTL:
     """One die's block pool: free list, append points, valid accounting."""
 
     FREE, HOST, GC, USED = "free", "host", "gc", "used"
+    HOST_HOT, HOST_COLD = "host_hot", "host_cold"   # hot/cold append points
 
     def __init__(self, blocks: int, pages_per_block: int):
         self.ppb = pages_per_block
         self.n_blocks = blocks
         self.state: List[str] = [self.FREE] * blocks
-        self.free: List[int] = list(range(blocks))
+        # FIFO free list; deque so append-point opens are O(1), preserving
+        # the exact pop order of the original list.pop(0)
+        self.free: Deque[int] = deque(range(blocks))
         self.valid_count: List[int] = [0] * blocks
         self.valid: List[List[bool]] = [[False] * pages_per_block
                                         for _ in range(blocks)]
         self.page_lpn: List[List[int]] = [[-1] * pages_per_block
                                           for _ in range(blocks)]
         self.erase_count: List[int] = [0] * blocks
+        # logical write clock (per-die allocation sequence) + per-block
+        # last-write stamp: the "age" the cost-benefit score weighs by
+        self.write_seq = 0
+        self.last_write_seq: List[int] = [0] * blocks
         # (block, next-page) append points; None until first allocation
         self.active: Dict[str, Optional[Tuple[int, int]]] = {
-            self.HOST: None, self.GC: None}
+            self.HOST: None, self.GC: None,
+            self.HOST_HOT: None, self.HOST_COLD: None}
         self.grown_blocks = 0          # overflow allocations (infinite OP)
+        self.gc_grown_blocks = 0       # of which: GC append-point fallbacks
         self.gc_running = False
+        # free blocks held back from host append points (collector reserve)
+        self.reserve = 0
+        # suspend-mode collection cursor (victim being copied page by page)
+        self.gc_victim: Optional[int] = None
+        self.gc_cursor = 0
 
     # -- capacity -------------------------------------------------------------
 
@@ -126,7 +209,13 @@ class _DieFTL:
         return n
 
     def free_fraction(self) -> float:
-        return self.free_pages() / self.physical_pages
+        """Host-available free fraction: the collector's reserved blocks
+        are not writable capacity, so the GC watermarks must not count
+        them — otherwise a reserve the size of the low watermark would
+        keep the collector asleep forever while the host overflow-grows.
+        Identical to the raw free-page fraction when ``reserve == 0``."""
+        return ((self.free_pages() - self.reserve * self.ppb)
+                / self.physical_pages)
 
     # -- allocation -----------------------------------------------------------
 
@@ -138,23 +227,66 @@ class _DieFTL:
         self.valid.append([False] * self.ppb)
         self.page_lpn.append([-1] * self.ppb)
         self.erase_count.append(0)
+        self.last_write_seq.append(0)
         self.free.append(b)
         self.grown_blocks += 1
         return b
 
-    def alloc(self, lpn: int, kind: str) -> Tuple[int, int]:
-        """Claim the next page of the ``kind`` append point for ``lpn``."""
+    def _take_free_block(self, kind: str, gc: bool) -> int:
+        """Pop the next free block for a ``kind`` append point.
+
+        With ``reserve > 0`` the last ``reserve`` free blocks are the
+        collector's: a host append point overflow-grows instead of
+        draining them, so a mid-collection copy is never starved by host
+        pressure — the silent-growth-during-GC bug the reserve exists to
+        close.  ``gc`` marks allocations made *by the collector* (the
+        cold GC stream and a segregating cleaner's hot-survivor stream
+        alike), which may use the reserve; they can still find the pool
+        empty when preconditioning exhausted the die before any reserve
+        could be honored (e.g. a hot die prefilled to 100%), and that
+        fallback growth is counted separately in ``gc_grown_blocks`` so
+        tests can assert it stays zero on sanely-provisioned
+        reserve-enabled runs.  ``reserve == 0`` keeps the legacy
+        first-come semantics bit-identically."""
+        free = self.free
+        if gc:
+            if free:
+                return free.popleft()
+            self.gc_grown_blocks += 1
+            self._grow()
+            return free.pop()          # the block _grow just appended
+        if len(free) > self.reserve:
+            return free.popleft()
+        # host overflow growth: the infinite-OP / saturation escape valve —
+        # and, with a reserve, what happens *instead of* stealing the
+        # collector's block mid-collection
+        self._grow()
+        return free.pop()              # take the grown block, not the reserve
+
+    def alloc(self, lpn: int, kind: str, gc: bool = False) -> Tuple[int, int]:
+        """Claim the next page of the ``kind`` append point for ``lpn``.
+
+        ``gc`` marks a collector-side allocation (GC compaction or
+        hot-survivor routing), which may draw on the block reserve."""
         ap = self.active[kind]
         if ap is None:
-            if not self.free:
-                self._grow()
-            blk = self.free.pop(0)
-            self.state[blk] = kind
-            ap = (blk, 0)
+            if kind == self.HOST_COLD and self.active[self.HOST] is not None:
+                # adopt the prefill-era single append point as the cold
+                # stream (heat counters start at zero, so preconditioned
+                # data is cold by definition)
+                ap = self.active[self.HOST]
+                self.active[self.HOST] = None
+                self.state[ap[0]] = kind
+            else:
+                blk = self._take_free_block(kind, gc)
+                self.state[blk] = kind
+                ap = (blk, 0)
         blk, pg = ap
         self.valid[blk][pg] = True
         self.page_lpn[blk][pg] = lpn
         self.valid_count[blk] += 1
+        self.write_seq += 1
+        self.last_write_seq[blk] = self.write_seq
         if pg + 1 == self.ppb:
             self.state[blk] = self.USED     # full: eligible GC victim
             self.active[kind] = None
@@ -193,20 +325,163 @@ class _DieFTL:
         c.ppb = self.ppb
         c.n_blocks = self.n_blocks
         c.state = list(self.state)
-        c.free = list(self.free)
+        c.free = deque(self.free)
         c.valid_count = list(self.valid_count)
         c.valid = [list(v) for v in self.valid]
         c.page_lpn = [list(p) for p in self.page_lpn]
         c.erase_count = list(self.erase_count)
+        c.write_seq = self.write_seq
+        c.last_write_seq = list(self.last_write_seq)
         c.active = dict(self.active)
         c.grown_blocks = self.grown_blocks
+        c.gc_grown_blocks = self.gc_grown_blocks
         c.gc_running = self.gc_running
+        c.reserve = self.reserve
+        c.gc_victim = self.gc_victim
+        c.gc_cursor = self.gc_cursor
         return c
+
+
+# -- victim-selection strategies -----------------------------------------------
+
+class VictimPolicy:
+    """Strategy object: which full block a die's collector reclaims next.
+
+    ``select`` returns a block index among the die's ``USED`` (full)
+    blocks, or ``None``/a fully-valid block when nothing is reclaimable —
+    the caller treats both as "go to sleep".  A policy must therefore
+    never *prefer* a fully-valid block while a reclaimable one exists
+    (the collector would sleep spuriously and the die would silently
+    overflow-grow); score-based policies skip fully-valid candidates
+    outright, while greedy's minimum-valid choice satisfies the contract
+    by construction.
+
+    ``segregates_survivors`` is the cleaner's rewrite side: policies that
+    set it route still-hot survivor pages back to the hot append point
+    instead of burying them in the cold compaction blocks (the
+    age-sorting half of Rosenblum's cost-benefit cleaner — without it,
+    victim *scoring* alone cannot beat greedy, because every copied hot
+    page re-pollutes a cold block and must be copied again)."""
+
+    name = "base"
+    segregates_survivors = False
+
+    def select(self, die: _DieFTL) -> Optional[int]:
+        raise NotImplementedError
+
+
+class GreedyVictim(VictimPolicy):
+    """Minimum valid pages (lowest block index on ties) — the legacy
+    collector; cheapest copies *right now*, blind to data temperature."""
+
+    name = "greedy"
+
+    def select(self, die: _DieFTL) -> Optional[int]:
+        return die.pick_victim()
+
+
+class CostBenefitVictim(VictimPolicy):
+    """The classic LFS/cost-benefit cleaner: maximize ``(1-u)/(2u) * age``.
+
+    ``u`` is the block's valid fraction (copying cost: ``2u`` reads+writes
+    per ``1-u`` page reclaimed) and ``age`` the time since the block last
+    absorbed a write (measured on the die's allocation clock, so it is
+    simulation-deterministic).  Old, stable blocks win over hot blocks of
+    equal occupancy — the hot block's pages are about to die on their own,
+    so copying them is wasted amplification.  Ties break toward fewer
+    valid pages, then the lower block index (greedy's order).
+
+    The policy also enables the cleaner's *age-sorting* half
+    (``segregates_survivors``): survivor pages whose LBA is still hot
+    rejoin the hot append point instead of being compacted into the cold
+    GC blocks.  Rosenblum's measurements — reproduced by the
+    ``gc_policies`` sweep — show this is where the cost-benefit cleaner's
+    write-amplification win over greedy actually comes from: scoring
+    alone re-copies every hot survivor out of a polluted cold block again
+    and again, and empirically lands within noise of greedy."""
+
+    name = "cost_benefit"
+    segregates_survivors = True
+
+    def select(self, die: _DieFTL) -> Optional[int]:
+        best, best_key = None, None
+        now = die.write_seq
+        ppb = die.ppb
+        for b, st in enumerate(die.state):
+            if st != die.USED:
+                continue
+            v = die.valid_count[b]
+            if v >= ppb:
+                continue                # fully valid: not reclaimable
+            age = now - die.last_write_seq[b]
+            if v == 0:
+                score = float("inf")    # a free win: nothing to copy
+            else:
+                u = v / ppb
+                score = (1.0 - u) / (2.0 * u) * age
+            key = (-score, v, b)
+            if best_key is None or key < best_key:
+                best, best_key = b, key
+        return best
+
+
+class WearAwareVictim(VictimPolicy):
+    """Greedy choice penalized by wear: minimize ``valid + alpha * (erase -
+    die_min_erase)``.
+
+    Blocks already worn above the die's least-worn block look ``alpha``
+    valid pages more expensive per extra erase, so the collector rotates
+    reclamation across the pool and the
+    :attr:`~repro.sim.stats.FTLStats.erase_counts` histogram flattens
+    instead of cycling the same physically-hot blocks (static wear
+    leveling folded into victim choice)."""
+
+    name = "wear_aware"
+
+    def __init__(self, alpha: float):
+        self.alpha = alpha
+
+    def select(self, die: _DieFTL) -> Optional[int]:
+        erase = die.erase_count
+        min_erase = min(erase)
+        alpha = self.alpha
+        ppb = die.ppb
+        best, best_key = None, None
+        for b, st in enumerate(die.state):
+            if st != die.USED:
+                continue
+            v = die.valid_count[b]
+            if v >= ppb:
+                continue                # fully valid: not reclaimable
+            key = (v + alpha * (erase[b] - min_erase), b)
+            if best_key is None or key < best_key:
+                best, best_key = b, key
+        return best
+
+
+#: victim_policy name -> factory(cfg_resolved_wear_alpha) registry
+VICTIM_POLICIES: Dict[str, Callable[[float], VictimPolicy]] = {
+    "greedy": lambda alpha: GreedyVictim(),
+    "cost_benefit": lambda alpha: CostBenefitVictim(),
+    "wear_aware": lambda alpha: WearAwareVictim(alpha),
+}
+
+
+def make_victim_policy(name: str, wear_alpha: float) -> VictimPolicy:
+    """Instantiate a registered victim-selection strategy by name."""
+    try:
+        return VICTIM_POLICIES[name](wear_alpha)
+    except KeyError:
+        raise ValueError(f"unknown victim_policy {name!r}; "
+                         f"choose from {sorted(VICTIM_POLICIES)}") from None
 
 
 #: memoized post-prefill (dies, l2p) snapshots — preconditioning a drive is
 #: a pure function of the geometry + LBA->die hash, and sweeps precondition
-#: the same drive dozens of times (e.g. every GC-off/GC-on pair)
+#: the same drive dozens of times (e.g. every GC-off/GC-on pair).  Policy
+#: knobs are *not* part of the key: prefill always writes through the
+#: single legacy HOST append point (heat counters start at zero, so the
+#: preconditioned data is cold), making the snapshot policy-independent.
 _PREFILL_CACHE: Dict[tuple, Tuple[List["_DieFTL"], Dict[int, PPN]]] = {}
 _PREFILL_CACHE_MAX = 8
 
@@ -238,15 +513,48 @@ class FTLModel:
         self.high_wm = (cfg.gc_high_watermark
                         if cfg.gc_high_watermark is not None
                         else spec.ftl.gc_high_watermark)
+        self.hot_threshold = (cfg.hot_threshold
+                              if cfg.hot_threshold is not None
+                              else spec.ftl.hot_threshold)
+        if cfg.hot_cold and self.hot_threshold < 2:
+            raise ValueError("hot_threshold must be >= 2 (see FTLConfig)")
+        wear_alpha = (cfg.wear_alpha if cfg.wear_alpha is not None
+                      else spec.ftl.wear_alpha)
+        self.suspend_qd = (cfg.gc_suspend_qd
+                           if cfg.gc_suspend_qd is not None
+                           else spec.ftl.gc_suspend_qd)
+        self.backoff_ns = (cfg.gc_backoff_ns
+                           if cfg.gc_backoff_ns is not None
+                           else spec.ftl.gc_backoff_ns)
+        if cfg.gc_suspend and (self.suspend_qd < 1 or self.backoff_ns <= 0):
+            raise ValueError("gc_suspend needs gc_suspend_qd >= 1 and "
+                             "gc_backoff_ns > 0 (else the throttled "
+                             "collector livelocks; see FTLConfig)")
+        self.victim = make_victim_policy(cfg.victim_policy, wear_alpha)
+        # cleaner-side survivor segregation (the cost-benefit cleaner's
+        # age-sorting half): hot survivors rejoin the hot append point
+        self._route_survivors = self.victim.segregates_survivors
+        self._gc_handler = (self._on_gc_page if cfg.gc_suspend
+                            else self._on_gc)
         self.dies = [_DieFTL(cfg.blocks_per_die, cfg.pages_per_block)
                      for _ in range(self.n_dies)]
         self.l2p: Dict[int, PPN] = {}
+        # per-LBA lifetime write counts (runtime heat; prefill is cold) —
+        # tracked unconditionally: both the hot/cold host split and the
+        # cost-benefit cleaner's survivor routing read it
+        self.heat: Dict[int, int] = {}
+        # the host I/O model attaches itself so the suspend throttle can
+        # probe the outstanding-command depth (None: throttle never fires)
+        self._host_io = None
 
         # accounting
         self.host_pages_written = 0
+        self.hot_pages_written = 0
+        self.cold_pages_written = 0
         self.gc_pages_copied = 0
         self.blocks_erased = 0
         self.gc_invocations = 0
+        self.gc_suspensions = 0
         self.gc_active_dies = 0
         self.gc_energy_nj = 0.0
         self.host_during_gc_ns: List[float] = []
@@ -270,15 +578,34 @@ class FTLModel:
                         _PREFILL_CACHE.pop(next(iter(_PREFILL_CACHE)))
                     _PREFILL_CACHE[key] = ([d.clone() for d in self.dies],
                                            dict(self.l2p))
+        # the reserve is a per-run policy, not prefill state: apply after
+        # any snapshot restore (a cached snapshot may have been taken
+        # under a different reserve/GC setting)
+        reserve = cfg.gc_reserve_blocks if cfg.gc_enabled else 0
+        for d in self.dies:
+            d.reserve = reserve
+
+    # -- host I/O attachment ---------------------------------------------------
+
+    def attach_host(self, host_io) -> None:
+        """Register the host I/O model whose queue depth throttles GC."""
+        self._host_io = host_io
+
+    def _host_qd(self) -> int:
+        h = self._host_io
+        if h is None:
+            return 0
+        return h.outstanding + len(h.pending)   # in-flight + NVMe-QD-deferred
 
     # -- mapping --------------------------------------------------------------
 
-    def _map_write(self, lpn: int, die: int, kind: str) -> PPN:
+    def _map_write(self, lpn: int, die: int, kind: str,
+                   gc: bool = False) -> PPN:
         """Allocate a physical page for ``lpn`` on ``die`` and remap."""
         old = self.l2p.get(lpn)
         if old is not None:
             self.dies[old[0]].invalidate(old[1], old[2])
-        blk, pg = self.dies[die].alloc(lpn, kind)
+        blk, pg = self.dies[die].alloc(lpn, kind, gc)
         ppn = (die, blk, pg)
         self.l2p[lpn] = ppn
         return ppn
@@ -286,7 +613,27 @@ class FTLModel:
     def host_write(self, lpn: int, die: int) -> PPN:
         """One host page write through the mapping (caller books the time)."""
         self.host_pages_written += 1
-        return self._map_write(lpn, die, _DieFTL.HOST)
+        heat = self.heat
+        n = heat.get(lpn, 0) + 1
+        heat[lpn] = n
+        kind = _DieFTL.HOST
+        if self.cfg.hot_cold:
+            if n >= self.hot_threshold:
+                kind = _DieFTL.HOST_HOT
+                self.hot_pages_written += 1
+            else:
+                kind = _DieFTL.HOST_COLD
+                self.cold_pages_written += 1
+        return self._map_write(lpn, die, kind)
+
+    def _survivor_kind(self, lpn: int) -> str:
+        """Where a GC-copied survivor lands: cold compaction by default;
+        under a segregating cleaner, still-hot LBAs rejoin the hot
+        append point so they do not re-pollute cold blocks."""
+        if (self._route_survivors
+                and self.heat.get(lpn, 0) >= self.hot_threshold):
+            return _DieFTL.HOST_HOT
+        return _DieFTL.GC
 
     def read_die(self, lpn: int, default: int) -> int:
         """Die physically holding ``lpn`` (``default`` when never written)."""
@@ -296,16 +643,26 @@ class FTLModel:
     # -- garbage collection as a background tenant ----------------------------
 
     def maybe_start_gc(self, die: int) -> None:
-        """Wake the collector on ``die`` if the low watermark is crossed."""
+        """Wake the collector on ``die`` if the low watermark is crossed.
+
+        With a block reserve configured, a drained free *list* is a wake
+        trigger in its own right: pages left in open append points count
+        toward the free fraction but cannot seed a new append point, so a
+        die running several streams (hot/cold split, survivor routing)
+        can have every free block consumed while the fraction still reads
+        above the watermark — and would overflow-grow on the next
+        append-point open instead of collecting."""
         d = self.dies[die]
-        if (not self.cfg.gc_enabled or d.gc_running
-                or d.free_fraction() >= self.low_wm):
+        if not self.cfg.gc_enabled or d.gc_running:
+            return
+        if (d.free_fraction() >= self.low_wm
+                and (d.reserve == 0 or len(d.free) > d.reserve)):
             return
         d.gc_running = True
         self.gc_active_dies += 1
         self.gc_invocations += 1
         self.engine.schedule(self.engine.now, EventKind.GC,
-                             self._on_gc, payload=die)
+                             self._gc_handler, payload=die)
 
     def _gc_sleep(self, die: int) -> None:
         d = self.dies[die]
@@ -313,14 +670,33 @@ class FTLModel:
             d.gc_running = False
             self.gc_active_dies -= 1
 
+    def _collection_done(self, d: _DieFTL) -> bool:
+        """Stop condition for a collection burst — the mirror of the
+        wake condition in :meth:`maybe_start_gc`.  With a reserve, the
+        free list must hold a block beyond the collector's before the
+        high watermark counts as recovered: open append points hold
+        pages the free *fraction* counts but that cannot seed a new
+        append point, and sleeping on the fraction alone would make the
+        drained-list wake re-fire on the very next append-point open —
+        the collector would thrash wake/sleep without ever reclaiming
+        while the host overflow-grows."""
+        if d.reserve and len(d.free) <= d.reserve:
+            return False
+        return d.free_fraction() >= self.high_wm
+
+    def _copy_energy(self, f) -> float:
+        return (f.e_read_nj_per_channel + 2.0 * f.e_dma_nj_per_channel
+                + f.e_prog_nj_per_channel)
+
     def _on_gc(self, ev: Event) -> None:
-        """Reclaim one victim block; re-arm until the high watermark."""
+        """Reclaim one victim block in a single monolithic booking; re-arm
+        until the high watermark (the legacy, non-suspend collector)."""
         die = ev.payload
         d = self.dies[die]
-        if d.free_fraction() >= self.high_wm:
+        if self._collection_done(d):
             self._gc_sleep(die)
             return
-        victim = d.pick_victim()
+        victim = self.victim.select(d)
         if victim is None or d.valid_count[victim] >= d.ppb:
             # nothing reclaimable (all-valid blocks): the die is saturated;
             # future allocations overflow-grow rather than deadlock
@@ -340,17 +716,75 @@ class FTLModel:
             t = dies_pool.acquire_end(t, f.t_read_ns, unit=die)
             t = chan_pool.acquire_end(t, xfer, unit=chan)
             t = dies_pool.acquire_end(t, f.t_prog_ns, unit=die)
-            self._map_write(lpn, die, _DieFTL.GC)
+            self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
             self.gc_pages_copied += 1
-            self.gc_energy_nj += (f.e_read_nj_per_channel
-                                  + 2.0 * f.e_dma_nj_per_channel
-                                  + f.e_prog_nj_per_channel)
+            self.gc_energy_nj += self._copy_energy(f)
         t = self.fabric.dies.acquire_end(t, f.t_erase_ns, unit=die)
         d.erase(victim)
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block
         # re-check at cycle completion: keep collecting or go back to sleep
         self.engine.schedule(t, EventKind.GC, self._on_gc, payload=die)
+
+    def _on_gc_page(self, ev: Event) -> None:
+        """Suspend-mode collector: one event per page copy.
+
+        Each copy books the die/channel pools *at its own event time*, so
+        host requests arriving between copies book ahead of the remaining
+        cycle instead of FIFO-queueing behind a whole victim; and while
+        the host queue is ``suspend_qd`` deep or more, the collector backs
+        off ``backoff_ns`` without booking anything.  Pages of the victim
+        invalidated mid-cycle (the host overwrote the LPN while the
+        collector was suspended) are skipped — their copy would have been
+        pure amplification."""
+        die = ev.payload
+        d = self.dies[die]
+        engine = self.engine
+        if d.gc_victim is None:
+            # victim-selection step (between victims: watermark re-check)
+            if self._collection_done(d):
+                self._gc_sleep(die)
+                return
+            victim = self.victim.select(d)
+            if victim is None or d.valid_count[victim] >= d.ppb:
+                self._gc_sleep(die)
+                return
+            d.gc_victim, d.gc_cursor = victim, 0
+        # throttle: yield to a deep host queue before booking anything
+        if self._host_qd() >= self.suspend_qd:
+            self.gc_suspensions += 1
+            engine.schedule(engine.now + self.backoff_ns, EventKind.GC,
+                            self._on_gc_page, payload=die)
+            return
+        f = self.spec.flash
+        victim = d.gc_victim
+        pg = d.gc_cursor
+        valid = d.valid[victim]
+        while pg < d.ppb and not valid[pg]:
+            pg += 1
+        if pg < d.ppb:
+            # copy exactly one page, then yield the pools
+            nb = self.spec.page_size
+            chan = die % f.channels
+            xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
+            lpn = d.page_lpn[victim][pg]
+            t = self.fabric.dies.acquire_end(engine.now, f.t_read_ns,
+                                             unit=die)
+            t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
+            t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
+            self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
+            self.gc_pages_copied += 1
+            self.gc_energy_nj += self._copy_energy(f)
+            d.gc_cursor = pg + 1
+            engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
+            return
+        # no valid pages left: erase, then move to the next victim
+        t = self.fabric.dies.acquire_end(engine.now, f.t_erase_ns, unit=die)
+        d.erase(victim)
+        self.blocks_erased += 1
+        self.gc_energy_nj += f.e_erase_nj_per_block
+        d.gc_victim, d.gc_cursor = None, 0
+        engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
 
     # -- observability --------------------------------------------------------
 
@@ -396,4 +830,50 @@ class FTLModel:
             overflow_blocks=sum(d.grown_blocks for d in self.dies),
             gc_energy_nj=self.gc_energy_nj,
             erase_counts=erase_counts,
-            host_during_gc_ns=list(self.host_during_gc_ns))
+            host_during_gc_ns=list(self.host_during_gc_ns),
+            victim_policy=self.victim.name,
+            hot_cold=self.cfg.hot_cold,
+            gc_suspend=self.cfg.gc_suspend,
+            gc_suspensions=self.gc_suspensions,
+            hot_pages_written=self.hot_pages_written,
+            cold_pages_written=self.cold_pages_written,
+            gc_overflow_blocks=sum(d.gc_grown_blocks for d in self.dies))
+
+
+def drive_zipf_overwrites(cfg: FTLConfig, spec: SSDSpec,
+                          n_writes: int, theta: float = 0.99,
+                          seed: int = 7, check: bool = True) -> FTLStats:
+    """Precondition one FTL and churn it with a seeded Zipf overwrite
+    stream; return its stats.
+
+    The shared calibration driver behind the ``gc_policies`` bench, its
+    example walkthrough and the policy-law tests: LBAs follow the same
+    inverse-CDF hashed-uniform discipline as
+    :class:`~repro.sim.tenancy.HostIOStream` (identical seeds replay
+    identical streams), and the run is *state-only* — WA/wear policy
+    comparisons need mapping churn, not pool bookings.  Pass a scaled
+    ``spec`` (few dies) to concentrate per-die churn so thousands of GC
+    cycles, where victim choice actually matters, simulate in seconds.
+    ``check=True`` asserts the FTL invariants after the run."""
+    # late import: tenancy imports this module (no cycle at call time)
+    from repro.sim.machine import _hash01
+    from repro.sim.tenancy import _die_of_lpn, _zipf_cdf
+
+    engine = EventEngine()
+    fabric = Fabric(spec)
+    dies = spec.flash.total_dies
+    model = FTLModel(cfg, spec, fabric, engine,
+                     die_of=lambda lpn: _die_of_lpn(lpn, seed, dies))
+    space = model.n_logical
+    cdf = _zipf_cdf(space, theta)
+    lpn_seed = seed ^ 0x1BA5
+    for i in range(n_writes):
+        u = min(0.999999, max(0.0, _hash01(i, lpn_seed)))
+        lpn = min(space - 1, bisect.bisect_left(cdf, u * cdf[-1]))
+        die = model.die_of(lpn)
+        model.host_write(lpn, die)
+        model.maybe_start_gc(die)
+        engine.run()
+    if check:
+        model.check_invariants()
+    return model.stats()

@@ -31,9 +31,18 @@ same probe sequence for the same inputs — for the maximum sustainable
 sessions/sec under a p99 session-latency SLO with zero rejections: the
 knee of the latency-throughput hockey stick, per offloading policy.
 
-Equivalence law (tested): one session, no churn, no admission pressure
-reproduces ``simulate_mix([trace])`` bit-for-bit — serving is a strict
-generalization of the batch entry points.
+The drive under the sessions can be a *real* drive: passing
+``ftl=FTLConfig(...)`` (with an ``io_stream`` whose writes feed it) runs
+the page-mapping FTL of :mod:`repro.sim.ftl` underneath the session
+churn, so garbage collection contends with dispatches on the shared
+die/channel pools exactly as in ``simulate_mix`` — and
+:func:`find_saturation` then reports the sustainable rate of a drive
+that is actively collecting.
+
+Equivalence laws (tested): one session, no churn, no admission pressure
+reproduces ``simulate_mix([trace])`` bit-for-bit, and serving without an
+``ftl`` is bit-identical to the pre-FTL serving subsystem — serving is a
+strict generalization of the batch entry points.
 """
 from __future__ import annotations
 
@@ -44,10 +53,12 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 from repro.core.policies import Policy, shared_policy
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
 from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation
 from repro.sim.servers import Fabric
 from repro.sim.stats import ServingResult, SessionRecord
-from repro.sim.tenancy import HostIOStream, _HostIOModel, clone_trace
+from repro.sim.tenancy import (HostIOStream, _HostIOModel, build_ftl_model,
+                               clone_trace)
 from repro.sim.workgen import ArrivalProcess, PoissonArrivals, SessionCatalog
 
 PolicyLike = Union[str, Policy]
@@ -125,10 +136,14 @@ class _ServingDriver:
         engine.schedule(hi, EventKind.TIMER,
                         lambda ev: self._busy_hi.update(fabric.busy_ns()))
 
+        # one catalog draw per session, shared by the record and the
+        # admission path (drawing again at admit time would double the
+        # draw count and let the two diverge if a catalog were stateful)
+        self.entries = [catalog.draw(i) for i in range(len(arrival_times))]
         self.records = [
-            SessionRecord(sid=i, kind=catalog.draw(i).name, arrival_ns=t,
+            SessionRecord(sid=i, kind=e.name, arrival_ns=t,
                           measured=lo <= t <= hi)
-            for i, t in enumerate(arrival_times)]
+            for i, (t, e) in enumerate(zip(arrival_times, self.entries))]
         for i, t in enumerate(arrival_times):
             engine.schedule(t, EventKind.SESSION_ARRIVAL, self._on_arrival,
                             payload=i)
@@ -162,7 +177,7 @@ class _ServingDriver:
 
     def _admit(self, sid: int) -> None:
         rec = self.records[sid]
-        entry = self.catalog.draw(sid)
+        entry = self.entries[sid]
         pol = (shared_policy(entry.policy, self.spec)
                if entry.policy is not None else self.default_policy)
         now = self.engine.now
@@ -190,8 +205,8 @@ class _ServingDriver:
 
     # -- result assembly ------------------------------------------------------
 
-    def result(self, policy_name: str,
-               io: Optional[_HostIOModel]) -> ServingResult:
+    def result(self, policy_name: str, io: Optional[_HostIOModel],
+               ftl_model: Optional[FTLModel] = None) -> ServingResult:
         lo, hi = self.window
         self._mark(hi, 0)                   # close the occupancy integral
         span = hi - lo
@@ -218,7 +233,8 @@ class _ServingDriver:
             makespan_ns=makespan,
             host_io=io.stats() if io else None,
             session_results=(self.results
-                             if self.scfg.keep_session_results else None))
+                             if self.scfg.keep_session_results else None),
+            ftl=ftl_model.stats() if ftl_model is not None else None)
 
 
 def simulate_serving(catalog: SessionCatalog,
@@ -228,17 +244,22 @@ def simulate_serving(catalog: SessionCatalog,
                      config: Optional[SimConfig] = None,
                      serving: Optional[ServingConfig] = None,
                      io_stream: Optional[HostIOStream] = None,
+                     ftl: Optional[FTLConfig] = None,
                      engine: Optional[EventEngine] = None) -> ServingResult:
     """Serve an open-loop session stream on one SSD; see module docstring.
 
     ``policy`` is the run-wide offloading policy (catalog entries may
     override per kind); ``io_stream`` adds the same background host I/O
-    as ``simulate_mix``.  Pass a ``record=True`` engine to capture the
-    event timeline.  The run always drains: every admitted session
-    completes, so the conservation law ``offered == completed + rejected``
-    holds on the result.  ``ServingConfig.record_decisions`` governs the
-    per-session DecisionRecord logging even when a ``config`` is passed
-    (serving admits far too many sessions to default to full logging)."""
+    as ``simulate_mix``, and ``ftl`` routes that stream's writes through
+    the flash translation layer of :mod:`repro.sim.ftl` (preconditioned
+    via the prefill snapshot cache) so sessions churn while the drive
+    collects garbage — the full production picture.  Pass a
+    ``record=True`` engine to capture the event timeline.  The run always
+    drains: every admitted session completes, so the conservation law
+    ``offered == completed + rejected`` holds on the result.
+    ``ServingConfig.record_decisions`` governs the per-session
+    DecisionRecord logging even when a ``config`` is passed (serving
+    admits far too many sessions to default to full logging)."""
     scfg = serving or ServingConfig()
     cfg = dataclasses.replace(config or SimConfig(),
                               record_decisions=scfg.record_decisions)
@@ -252,11 +273,13 @@ def simulate_serving(catalog: SessionCatalog,
     fabric = Fabric(spec, pud_units=cfg.pud_units)
     driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
                             scfg, fabric, engine)
-    io = (_HostIOModel(io_stream, fabric, spec, engine)
+    ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
+                 if ftl is not None else None)
+    io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
           if io_stream is not None else None)
     engine.run()
     name = policy if isinstance(policy, str) else policy.name
-    return driver.result(name, io)
+    return driver.result(name, io, ftl_model)
 
 
 # -- saturation-point finder ---------------------------------------------------
@@ -310,7 +333,8 @@ def find_saturation(catalog: SessionCatalog,
                     spec: SSDSpec = DEFAULT_SSD,
                     config: Optional[SimConfig] = None,
                     serving: Optional[ServingConfig] = None,
-                    io_stream: Optional[HostIOStream] = None
+                    io_stream: Optional[HostIOStream] = None,
+                    ftl: Optional[FTLConfig] = None
                     ) -> SaturationResult:
     """Bisect the offered rate for the max sustainable sessions/sec.
 
@@ -321,7 +345,10 @@ def find_saturation(catalog: SessionCatalog,
     repeated calls — and parallel benchmark workers — produce identical
     results.  ``base_process`` defaults to Poisson arrivals with
     ``n_sessions``/``seed``; pass an MMPP or replay process to find the
-    saturation point under bursty traffic instead."""
+    saturation point under bursty traffic instead.  ``ftl`` (with an
+    ``io_stream`` whose writes drive the collector) finds the saturation
+    point of a drive that is actively collecting garbage — GC steals
+    sustainable session throughput, measurably."""
     if rate_lo <= 0.0 or rate_hi <= rate_lo:
         raise ValueError("need 0 < rate_lo < rate_hi")
     if iters < 1:
@@ -334,12 +361,16 @@ def find_saturation(catalog: SessionCatalog,
     def probe(rate: float) -> bool:
         res = simulate_serving(catalog, base.at_rate(rate), policy,
                                spec=spec, config=config, serving=scfg,
-                               io_stream=io_stream)
+                               io_stream=io_stream, ftl=ftl)
         if res.n_rejected > 0:
             # rejections alone prove the rate unsustainable — even when
             # every in-window arrival bounced and no latency was measured
+            # (then there is no p99 to report: record NaN, not the
+            # empty-percentile 0.0 that would masquerade as a great tail)
+            p99 = (res.p(99) if res.session_latencies_ns
+                   else float("nan"))
             probes.append(SaturationProbe(
-                rate, res.p(99), res.n_rejected,
+                rate, p99, res.n_rejected,
                 res.completed_rate_per_sec, False))
             return False
         if not res.session_latencies_ns:

@@ -143,7 +143,13 @@ class FTLStats:
     ``erase_counts`` is the per-block wear histogram (flattened across
     dies); ``host_during_gc_ns`` the latencies of host requests issued
     while any die's collector was active, isolating the tail-latency cost
-    attributable to GC traffic."""
+    attributable to GC traffic.
+
+    The policy fields record which GC policy suite produced the run:
+    ``victim_policy`` (greedy / cost_benefit / wear_aware), ``hot_cold``
+    (plus the hot/cold write split), and ``gc_suspend`` with
+    ``gc_suspensions`` — how often the throttled collector backed off to
+    a deep host queue instead of booking a copy."""
 
     gc_enabled: bool
     n_logical_pages: int
@@ -156,6 +162,16 @@ class FTLStats:
     gc_energy_nj: float
     erase_counts: List[int]
     host_during_gc_ns: List[float]
+    victim_policy: str = "greedy"
+    hot_cold: bool = False
+    gc_suspend: bool = False
+    gc_suspensions: int = 0
+    hot_pages_written: int = 0
+    cold_pages_written: int = 0
+    # overflow grows taken on the GC append point itself (pool exhausted
+    # before the block reserve could be honored) — 0 on healthy
+    # reserve-enabled runs, a subset of ``overflow_blocks``
+    gc_overflow_blocks: int = 0
 
     @property
     def write_amplification(self) -> float:
@@ -174,6 +190,16 @@ class FTLStats:
             return 0.0
         return sum(self.erase_counts) / len(self.erase_counts)
 
+    @property
+    def wear_flatness(self) -> float:
+        """Mean/max erase count: 1.0 = perfectly level wear, -> 0 as a few
+        blocks absorb all erases (the metric wear-aware victim selection
+        drives toward 1.0).  1.0 on a drive that never erased."""
+        m = self.max_erase_count
+        if m == 0:
+            return 1.0
+        return self.mean_erase_count / m
+
     def wear_histogram(self) -> Dict[int, int]:
         """erase count -> number of blocks (the wear distribution)."""
         out: Dict[int, int] = {}
@@ -188,12 +214,17 @@ class FTLStats:
     def summary(self) -> Dict[str, object]:
         return {
             "ftl_gc": self.gc_enabled,
+            "victim_policy": self.victim_policy,
+            "hot_cold": self.hot_cold,
+            "gc_suspend": self.gc_suspend,
             "write_amp": round(self.write_amplification, 3),
             "host_pages_written": self.host_pages_written,
             "gc_pages_copied": self.gc_pages_copied,
             "gc_invocations": self.gc_invocations,
+            "gc_suspensions": self.gc_suspensions,
             "blocks_erased": self.blocks_erased,
             "max_erase": self.max_erase_count,
+            "wear_flatness": round(self.wear_flatness, 3),
             "io_during_gc": len(self.host_during_gc_ns),
             "io_p99_during_gc_us": self.p_during_gc(99) / 1e3,
         }
@@ -205,8 +236,12 @@ class SessionRecord:
 
     ``latency_ns`` is arrival-to-completion — it includes time spent in
     the admission backlog, which is exactly what an open-loop client
-    observes.  ``measured`` marks sessions whose *arrival* falls inside
-    the steady-state window (after warm-up, before cool-down)."""
+    observes.  It is only defined for completed sessions: reading it on a
+    rejected / never-completed record raises instead of returning the
+    nonsense negative ``-1.0 - arrival_ns`` (consumers must filter on
+    :attr:`completed` first, as :attr:`ServingResult.measured_sessions`
+    does).  ``measured`` marks sessions whose *arrival* falls inside the
+    steady-state window (after warm-up, before cool-down)."""
 
     sid: int
     kind: str
@@ -223,11 +258,21 @@ class SessionRecord:
     @property
     def latency_ns(self) -> float:
         """Arrival-to-completion, including admission-queue wait."""
+        if self.done_ns < 0.0:
+            raise ValueError(
+                f"session {self.sid} never completed "
+                f"(rejected={self.rejected}): latency_ns is undefined — "
+                "filter on .completed before reading latencies")
         return self.done_ns - self.arrival_ns
 
     @property
     def queue_wait_ns(self) -> float:
-        """Time spent queued for admission before a slot freed."""
+        """Time spent queued for admission before a slot freed; raises
+        on never-admitted (e.g. rejected) records, like latency_ns."""
+        if self.admit_ns < 0.0:
+            raise ValueError(
+                f"session {self.sid} was never admitted "
+                f"(rejected={self.rejected}): queue_wait_ns is undefined")
         return self.admit_ns - self.arrival_ns
 
 
@@ -255,6 +300,7 @@ class ServingResult:
     makespan_ns: float
     host_io: Optional[HostIOStats] = None
     session_results: Optional[List[SimResult]] = None  # per-session detail
+    ftl: Optional[FTLStats] = None   # present when an FTL was configured
 
     # -- conservation ---------------------------------------------------------
 
@@ -345,6 +391,8 @@ class ServingResult:
         }
         if self.host_io is not None:
             out.update(self.host_io.summary())
+        if self.ftl is not None:
+            out.update(self.ftl.summary())
         return out
 
 

@@ -74,6 +74,22 @@ def _die_of_lpn(lpn: int, seed: int, total_dies: int) -> int:
     return int(_hash01(lpn, seed ^ 0xD1E) * total_dies) % total_dies
 
 
+def build_ftl_model(ftl: FTLConfig, spec: SSDSpec, fabric: "Fabric",
+                    engine: EventEngine,
+                    io_stream: Optional["HostIOStream"]) -> FTLModel:
+    """The one way an FTL is wired to a run (``simulate_mix`` and
+    ``simulate_serving`` both call this): the stream's seed keys the
+    shared LBA->die hash, so every entry point preconditions — and
+    memoizes via the prefill snapshot cache — the same drive state for
+    the same stream."""
+    io_seed = io_stream.seed if io_stream is not None else DEFAULT_IO_SEED
+    total_dies = spec.flash.total_dies
+    return FTLModel(
+        ftl, spec, fabric, engine,
+        die_of=lambda lpn: _die_of_lpn(lpn, io_seed, total_dies),
+        prefill_key=(io_seed, total_dies))
+
+
 @functools.lru_cache(maxsize=8)
 def _zipf_cdf(n: int, theta: float) -> Tuple[float, ...]:
     """Cumulative Zipf(theta) weights over ranks 1..n (rank == LBA)."""
@@ -176,6 +192,8 @@ class _HostIOModel:
         self.spec = spec
         self.engine = engine
         self.ftl = ftl
+        if ftl is not None:
+            ftl.attach_host(self)      # GC suspend throttle probes our QD
         # when an FTL is present its logical space bounds the LBAs (the
         # stream's space folds into it; size them equal for exact studies)
         self.space = ftl.n_logical if ftl is not None \
@@ -340,14 +358,8 @@ def simulate_mix(traces: Sequence[Trace],
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
-    ftl_model = None
-    if ftl is not None:
-        io_seed = io_stream.seed if io_stream is not None else DEFAULT_IO_SEED
-        ftl_model = FTLModel(
-            ftl, spec, fabric, engine,
-            die_of=lambda lpn: _die_of_lpn(lpn, io_seed,
-                                           spec.flash.total_dies),
-            prefill_key=(io_seed, spec.flash.total_dies))
+    ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
+                 if ftl is not None else None)
     sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name,
                        start_ns=st)
             for name, tr, pol, st in zip(names, tenant_traces, pols, starts)]

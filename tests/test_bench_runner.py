@@ -16,9 +16,11 @@ def test_parallel_runner_is_deterministic(capsys):
     including the open-loop serving curve + saturation suite."""
     from benchmarks.run import run_suites
 
-    rows1, failed1 = run_suites(["mix", "serving"], smoke=True, jobs=1)
+    rows1, failed1 = run_suites(["mix", "serving", "gc_policies"],
+                                smoke=True, jobs=1)
     out1 = capsys.readouterr().out
-    rows2, failed2 = run_suites(["mix", "serving"], smoke=True, jobs=2)
+    rows2, failed2 = run_suites(["mix", "serving", "gc_policies"],
+                                smoke=True, jobs=2)
     out2 = capsys.readouterr().out
     assert failed1 == failed2 == []
     assert rows1 == rows2
@@ -26,6 +28,8 @@ def test_parallel_runner_is_deterministic(capsys):
     assert any(r.startswith("mix/") for r in rows1)
     assert any(r.startswith("serving/") and "/saturation," in r
                for r in rows1)
+    assert any(r.startswith("gcpolicy/wa/") for r in rows1)
+    assert any(r.startswith("gcpolicy/saturation/") for r in rows1)
 
 
 def test_runner_reports_unknown_suite():

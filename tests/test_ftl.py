@@ -9,19 +9,28 @@ The invariants the flash translation layer must uphold:
 * amplification — write amplification is >= 1 always, and exactly 1 with
   GC disabled (infinite over-provisioning);
 * equivalence — an FTL with GC disabled is bit-identical to no FTL at
-  all (the idealized-drive behavior the seed simulator had);
-* determinism — same-seed runs replay bit-identically;
+  all (the idealized-drive behavior the seed simulator had), and the
+  default GC policy suite (greedy victims, no hot/cold, no suspend, no
+  reserve) is bit-identical to the pre-policy collector;
+* determinism — same-seed runs replay bit-identically, for every policy;
 * interference — with Zipf write skew and low OP, GC produces WA > 1 and
-  a measurable host-I/O p99 increase attributable to GC traffic.
+  a measurable host-I/O p99 increase attributable to GC traffic;
+* policy suite — cost-benefit beats greedy on write amplification under
+  Zipf skew, hot/cold separation lowers WA, wear-aware victim selection
+  flattens the erase-count histogram, GC suspend cuts the host p99
+  during collection, and the block reserve keeps the collector's append
+  point out of silent overflow growth.
 """
 import dataclasses
 import itertools
 
 import pytest
 
-from repro.hw.ssd_spec import DEFAULT_SSD
+from repro.hw.ssd_spec import DEFAULT_SSD, FlashSpec, SSDSpec
 from repro.sim import (EventEngine, EventKind, Fabric, FTLConfig, FTLModel,
-                       HostIOStream, simulate_mix)
+                       HostIOStream, drive_zipf_overwrites,
+                       make_victim_policy, simulate_mix)
+from repro.sim.ftl import _DieFTL
 from repro.sim.tenancy import DEFAULT_IO_SEED, _die_of_lpn
 
 from _synth import synth_trace
@@ -33,13 +42,25 @@ SMALL = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.12,
                   prefill=0.9)
 TOTAL_DIES = DEFAULT_SSD.flash.total_dies
 
+#: scaled-down fabric for the GC-policy comparisons: 4 dies concentrate
+#: per-die write pressure so thousands of GC cycles stay fast to simulate
+TINY_SSD = SSDSpec(flash=FlashSpec(channels=2, dies_per_channel=2))
 
-def make_model(cfg=SMALL, engine=None):
+#: regime where the GC policies measurably differ (empirically calibrated:
+#: deep per-die churn for thousands of GC cycles, and enough blocks per
+#: die that the multi-stream append points — host, hot, cold, GC — don't
+#: by themselves exhaust the over-provisioning slack; seed-robust, zero
+#: overflow growth, so WA deltas are attributable to policy alone)
+POLICY_CFG = FTLConfig(blocks_per_die=32, pages_per_block=8, op_ratio=0.28,
+                       prefill=0.85, gc_reserve_blocks=1)
+
+
+def make_model(cfg=SMALL, engine=None, spec=DEFAULT_SSD):
     engine = engine or EventEngine()
-    fabric = Fabric(DEFAULT_SSD)
-    model = FTLModel(cfg, DEFAULT_SSD, fabric, engine,
+    fabric = Fabric(spec)
+    model = FTLModel(cfg, spec, fabric, engine,
                      die_of=lambda lpn: _die_of_lpn(lpn, DEFAULT_IO_SEED,
-                                                    TOTAL_DIES))
+                                                    spec.flash.total_dies))
     return model, engine, fabric
 
 
@@ -48,6 +69,22 @@ def write(model, engine, lpn):
     model.host_write(lpn, die)
     model.maybe_start_gc(die)
     engine.run()
+
+
+_DRIVE_CACHE = {}
+
+
+def drive_zipf(cfg, n_writes=6000, theta=0.99, seed=7):
+    """Memoized :func:`repro.sim.ftl.drive_zipf_overwrites` on TINY_SSD —
+    runs are pure functions of the arguments, so the policy comparisons
+    reuse one greedy baseline instead of re-simulating it (invariants
+    are checked inside the shared driver)."""
+    key = (cfg, n_writes, theta, seed)
+    hit = _DRIVE_CACHE.get(key)
+    if hit is None:
+        hit = drive_zipf_overwrites(cfg, TINY_SSD, n_writes, theta, seed)
+        _DRIVE_CACHE[key] = hit
+    return hit
 
 
 def gc_io(cfg, n_requests=256):
@@ -219,5 +256,263 @@ def test_ftl_summary_is_json_friendly():
     s = mix.summary()
     assert "write_amp" in s and s["write_amp"] >= 1.0
     assert "gc_invocations" in s
+    assert s["victim_policy"] == "greedy"
     import json
     json.dumps(s)
+
+
+# -- GC policy suite: victim selection -----------------------------------------
+
+def test_victim_policy_registry_and_validation():
+    for name in ("greedy", "cost_benefit", "wear_aware"):
+        assert make_victim_policy(name, wear_alpha=4.0).name == name
+    with pytest.raises(ValueError):
+        make_victim_policy("lru", wear_alpha=4.0)
+    with pytest.raises(ValueError):
+        FTLConfig(victim_policy="nope")
+    with pytest.raises(ValueError):
+        FTLConfig(gc_reserve_blocks=-1)
+    with pytest.raises(ValueError):
+        FTLConfig(blocks_per_die=4, gc_reserve_blocks=4)
+
+
+def test_default_policy_suite_is_bit_identical_to_legacy_collector():
+    """greedy + no hot/cold + no suspend + no reserve must reproduce the
+    pre-policy collector exactly (the golden digests assert the same law
+    against the committed pre-PR engine)."""
+    io = gc_io(SMALL)
+    mk = lambda: [synth_trace(RAMP, name="A")]
+    legacy = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                          ftl=SMALL)
+    explicit = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                            ftl=dataclasses.replace(
+                                SMALL, victim_policy="greedy", hot_cold=False,
+                                gc_suspend=False, gc_reserve_blocks=0))
+    assert legacy.makespan_ns == explicit.makespan_ns
+    assert legacy.host_io.latencies_ns == explicit.host_io.latencies_ns
+    assert legacy.ftl.erase_counts == explicit.ftl.erase_counts
+    assert legacy.ftl.gc_pages_copied == explicit.ftl.gc_pages_copied
+
+
+@pytest.mark.parametrize("vp", ["greedy", "cost_benefit", "wear_aware"])
+@pytest.mark.parametrize("hc", [False, True])
+def test_policy_invariants_hold_under_churn(vp, hc):
+    """Mapping injectivity + conservation survive every victim policy and
+    the hot/cold append-point split (drive_zipf checks invariants)."""
+    cfg = dataclasses.replace(POLICY_CFG, victim_policy=vp, hot_cold=hc)
+    s = drive_zipf(cfg, n_writes=2500)
+    assert s.blocks_erased > 0, "GC never ran: test is vacuous"
+    assert s.write_amplification >= 1.0
+    assert s.victim_policy == vp and s.hot_cold == hc
+    if hc:
+        assert s.hot_pages_written > 0 and s.cold_pages_written > 0
+        assert (s.hot_pages_written + s.cold_pages_written
+                == s.host_pages_written)
+
+
+def test_cost_benefit_beats_greedy_on_wa_under_zipf():
+    """The acceptance law: the cost-benefit *cleaner* — age-weighted
+    victim scoring plus its age-sorting rewrite side (hot survivors
+    rejoin the hot stream instead of re-polluting cold compaction
+    blocks) — cuts write amplification vs. greedy under Zipf skew.
+    The margin is moderate but seed-robust and artifact-free: the run
+    must not overflow-grow, or extra silently-granted over-provisioning
+    (not the policy) would explain the delta."""
+    greedy = drive_zipf(POLICY_CFG)
+    cb = drive_zipf(dataclasses.replace(POLICY_CFG,
+                                        victim_policy="cost_benefit"))
+    assert greedy.blocks_erased > 50          # real GC pressure
+    assert greedy.overflow_blocks == cb.overflow_blocks == 0
+    assert cb.write_amplification < greedy.write_amplification
+
+
+def test_hot_cold_separation_lowers_wa_under_zipf():
+    """Two host append points keyed on LBA heat make hot pages die
+    together: victims are near-empty, so WA drops."""
+    mixed = drive_zipf(POLICY_CFG)
+    split = drive_zipf(dataclasses.replace(POLICY_CFG, hot_cold=True))
+    assert split.write_amplification < mixed.write_amplification
+
+
+def test_wear_aware_flattens_erase_counts():
+    """Erase-count-penalized victim choice rotates reclamation, driving
+    the wear histogram toward flatness (higher mean/max) and a lower
+    peak erase count than greedy's hot-block cycling."""
+    greedy = drive_zipf(POLICY_CFG)
+    wear = drive_zipf(dataclasses.replace(POLICY_CFG,
+                                          victim_policy="wear_aware"))
+    assert wear.wear_flatness > greedy.wear_flatness
+    assert wear.max_erase_count <= greedy.max_erase_count
+    assert wear.blocks_erased > 0
+
+
+def test_policy_runs_are_deterministic():
+    cfg = dataclasses.replace(POLICY_CFG, victim_policy="cost_benefit",
+                              hot_cold=True)
+    a = drive_zipf(cfg, n_writes=1500)
+    b = drive_zipf(cfg, n_writes=1500)
+    assert a.write_amplification == b.write_amplification
+    assert a.erase_counts == b.erase_counts
+    assert a.blocks_erased == b.blocks_erased
+
+
+# -- GC policy suite: suspend/throttle -----------------------------------------
+
+def test_gc_suspend_cuts_host_tail_latency_during_gc():
+    """Per-page-copy events yield the die/channel pools between copies
+    and back off while the host queue is deep, so host requests stop
+    FIFO-blocking behind whole victim cycles."""
+    io = gc_io(SMALL)
+    mk = lambda: [synth_trace(RAMP, name="A")]
+    # reserve held constant: the observed delta is suspend-only
+    reserved = dataclasses.replace(SMALL, gc_reserve_blocks=1)
+    mono = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                        ftl=reserved)
+    susp = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                        ftl=dataclasses.replace(reserved, gc_suspend=True))
+    assert susp.ftl.gc_suspend and not mono.ftl.gc_suspend
+    assert susp.ftl.gc_suspensions > 0        # the throttle actually fired
+    assert susp.host_io.p(99) < mono.host_io.p(99)
+    assert susp.ftl.p_during_gc(99) < mono.ftl.p_during_gc(99)
+    # the collector still reclaims: conservation + forward progress
+    assert susp.ftl.blocks_erased > 0
+    assert susp.ftl.write_amplification >= 1.0
+
+
+def test_gc_suspend_invariants_and_determinism():
+    cfg = dataclasses.replace(POLICY_CFG, gc_suspend=True)
+    a = drive_zipf(cfg, n_writes=1500)       # drive_zipf checks invariants
+    b = drive_zipf(cfg, n_writes=1500)
+    assert a.blocks_erased == b.blocks_erased > 0
+    assert a.erase_counts == b.erase_counts
+
+
+def test_suspended_collector_skips_pages_invalidated_mid_cycle():
+    """A victim page overwritten by the host while the collector was
+    between copies must not be copied (its copy would be pure WA) — the
+    suspend path re-checks validity at each copy event, so its copy count
+    never exceeds the monolithic collector's for the same stream."""
+    io = gc_io(SMALL)
+    mk = lambda: [synth_trace(RAMP, name="A")]
+    mono = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                        ftl=SMALL)
+    susp = simulate_mix(mk(), "conduit", io_stream=io, compute_solo=False,
+                        ftl=dataclasses.replace(SMALL, gc_suspend=True))
+    assert susp.ftl.gc_pages_copied <= mono.ftl.gc_pages_copied
+
+
+# -- GC policy suite: block reserve --------------------------------------------
+
+def test_reserve_protects_gc_append_point_from_host_pressure():
+    """With a reserve, a host append-point open never drains the last
+    free block mid-collection — it overflow-grows instead, and the GC
+    append point gets the reserved block without growing."""
+    d = _DieFTL(blocks=4, pages_per_block=4)
+    d.reserve = 1
+    d.gc_running = True
+    # host fills blocks until only the reserved one is left
+    lpn = 0
+    while len(d.free) > 1:
+        d.alloc(lpn, _DieFTL.HOST)
+        lpn += 1
+    grown_before = d.grown_blocks
+    # next host open must grow, not steal the reserve
+    for _ in range(d.ppb):                   # spend the current append point
+        d.alloc(lpn, _DieFTL.HOST)
+        lpn += 1
+    assert d.grown_blocks == grown_before + 1
+    assert len(d.free) == 1                  # the reserve is intact
+    # ... and the collector claims it without growth — via either of its
+    # streams (cold compaction or hot-survivor routing)
+    d.alloc(10_000, _DieFTL.GC, gc=True)
+    assert d.gc_grown_blocks == 0
+    assert len(d.free) == 0
+    # a collector-side hot-survivor allocation is also reserve-eligible:
+    # it must never be starved into host-side growth mid-collection
+    d2 = _DieFTL(blocks=4, pages_per_block=4)
+    d2.reserve = 1
+    d2.gc_running = True
+    lpn = 0
+    while len(d2.free) > 1:
+        d2.alloc(lpn, _DieFTL.HOST)
+        lpn += 1
+    d2.alloc(20_000, _DieFTL.HOST_HOT, gc=True)
+    assert d2.gc_grown_blocks == 0 and len(d2.free) == 0
+
+
+@pytest.mark.parametrize("vp", ["greedy", "cost_benefit", "wear_aware"])
+def test_reserved_run_never_overflow_grows_with_gc_on(vp):
+    """The satellite's law on a sanely-provisioned drive, for *every*
+    victim policy: with the reserve enabled, overflow growth happens
+    only with gc_enabled=False (the collector always keeps up; nothing
+    silently inflates OP).  Non-greedy policies must never declare a die
+    saturated while reclaimable blocks exist — a policy preferring a
+    fully-valid block would put the collector to sleep spuriously and
+    overflow-grow, inflating effective OP and confounding the WA
+    comparisons."""
+    on = drive_zipf(dataclasses.replace(POLICY_CFG, victim_policy=vp),
+                    n_writes=2500)
+    assert on.overflow_blocks == 0
+    assert on.gc_overflow_blocks == 0
+    assert on.blocks_erased > 0
+    off = drive_zipf(dataclasses.replace(POLICY_CFG, gc_enabled=False,
+                                         gc_reserve_blocks=0),
+                     n_writes=2500)
+    assert off.overflow_blocks > 0           # infinite-OP fallback grows
+    assert off.write_amplification == 1.0
+
+
+def test_score_policies_never_pick_fully_valid_over_reclaimable():
+    """The VictimPolicy contract, directly: with one fully-valid old
+    block and one sparse young block, cost-benefit and wear-aware must
+    pick the reclaimable one (greedy does by construction)."""
+    for vp in ("cost_benefit", "wear_aware"):
+        d = _DieFTL(blocks=4, pages_per_block=4)
+        for lpn in range(4):
+            d.alloc(lpn, _DieFTL.HOST)       # block 0: fully valid, oldest
+        for lpn in range(4, 8):
+            d.alloc(lpn, _DieFTL.HOST)       # block 1: young...
+        d.invalidate(1, 0)                   # ...but reclaimable
+        pol = make_victim_policy(vp, wear_alpha=4.0)
+        assert pol.select(d) == 1
+
+
+def test_suspend_knob_validation():
+    """qd 0 is always-suspended and zero backoff re-queues at a frozen
+    timestamp: both would livelock the throttled collector."""
+    with pytest.raises(ValueError, match="gc_suspend_qd"):
+        FTLConfig(gc_suspend_qd=0)
+    with pytest.raises(ValueError, match="gc_backoff_ns"):
+        FTLConfig(gc_backoff_ns=0.0)
+    bad_spec = dataclasses.replace(
+        DEFAULT_SSD, ftl=dataclasses.replace(DEFAULT_SSD.ftl,
+                                             gc_suspend_qd=0))
+    with pytest.raises(ValueError, match="livelock"):
+        make_model(FTLConfig(gc_suspend=True), spec=bad_spec)
+
+
+def test_hot_threshold_validation():
+    """threshold 1 means every write is hot — no split, and the prefill
+    append point would be stranded; rejected loudly."""
+    with pytest.raises(ValueError, match="hot_threshold"):
+        FTLConfig(hot_threshold=1)
+    with pytest.raises(ValueError, match="hot_threshold"):
+        make_model(FTLConfig(hot_cold=True),
+                   spec=dataclasses.replace(
+                       DEFAULT_SSD,
+                       ftl=dataclasses.replace(DEFAULT_SSD.ftl,
+                                               hot_threshold=1)))
+
+
+def test_free_list_is_o1_and_order_preserving():
+    """The deque free list pops in exactly the old list.pop(0) FIFO
+    order (erased blocks re-enter at the tail)."""
+    d = _DieFTL(blocks=3, pages_per_block=2)
+    assert list(d.free) == [0, 1, 2]
+    b0 = d.alloc(0, _DieFTL.HOST)[0]
+    assert b0 == 0 and list(d.free) == [1, 2]
+    d.alloc(1, _DieFTL.HOST)                 # fills block 0 -> USED
+    d.invalidate(0, 0)
+    d.invalidate(0, 1)
+    d.erase(0)
+    assert list(d.free) == [1, 2, 0]         # re-enters at the tail

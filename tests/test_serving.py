@@ -16,13 +16,16 @@ The subsystem's acceptance properties:
 Plus the ``record_decisions=False`` fast mode: identical timing, no
 DecisionRecord allocation, per-op latencies still available.
 """
+import dataclasses
+import math
+
 import pytest
 
-from repro.sim import (CatalogEntry, EventEngine, EventKind, HostIOStream,
-                       MMPPArrivals, PoissonArrivals, ServingConfig,
-                       SessionCatalog, SimConfig, TraceReplayArrivals,
-                       find_saturation, simulate, simulate_mix,
-                       simulate_serving)
+from repro.sim import (CatalogEntry, EventEngine, EventKind, FTLConfig,
+                       HostIOStream, MMPPArrivals, PoissonArrivals,
+                       ServingConfig, SessionCatalog, SimConfig,
+                       TraceReplayArrivals, find_saturation, simulate,
+                       simulate_mix, simulate_serving)
 
 from _synth import synth_trace
 
@@ -336,6 +339,235 @@ def test_saturation_treats_all_rejected_probe_as_unsustainable():
                               keep_session_results=False))
     assert any(p.n_rejected > 0 and not p.sustainable for p in sat.probes)
     assert sat.rate_per_sec < 1_000_000
+
+
+# -- satellite bugfixes --------------------------------------------------------
+
+def test_latency_ns_raises_on_incomplete_records():
+    """A rejected / never-completed session has no latency: reading it
+    must raise instead of returning a negative number that would poison
+    percentile assembly."""
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0, 3.0)), "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=0))
+    rejected = [s for s in res.sessions if s.rejected]
+    assert rejected
+    for s in rejected:
+        assert not s.completed
+        with pytest.raises(ValueError, match="never completed"):
+            s.latency_ns
+        with pytest.raises(ValueError, match="never admitted"):
+            s.queue_wait_ns
+    # percentile assembly filters on .completed, so it still works
+    assert res.p(99) >= 0.0
+    assert len(res.session_latencies_ns) == res.n_completed
+
+
+def test_all_bounced_probe_records_nan_p99_and_is_unsustainable():
+    """A probe where every in-window arrival bounced has no measured
+    latency at all: the rejected branch must not crash on the empty list
+    (ServingResult.p returns 0.0 there — recording that would fake a
+    perfect tail), and it records NaN instead."""
+    cat = two_kind_catalog()
+    # cap 1 + zero backlog + warmup past session 0's arrival: session 0
+    # (pre-window) occupies the only slot, every in-window arrival bounces
+    sat = find_saturation(
+        cat, "conduit", slo_p99_ns=1e9, rate_lo=50_000_000,
+        rate_hi=100_000_000, iters=1, n_sessions=8,
+        serving=ServingConfig(max_active_sessions=1, max_backlog=0,
+                              warmup_ns=10.0, cooldown_ns=0.0,
+                              keep_session_results=False))
+    assert sat.rate_per_sec == 0.0
+    bounced = [p for p in sat.probes if p.n_rejected > 0]
+    assert bounced
+    assert any(math.isnan(p.p99_ns) for p in bounced)
+    assert all(not p.sustainable for p in bounced)
+
+
+class _CountingCatalog(SessionCatalog):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.draws = 0
+
+    def draw(self, sid):
+        self.draws += 1
+        return super().draw(sid)
+
+
+def test_catalog_drawn_exactly_once_per_session():
+    """The driver draws each session's kind once and reuses the entry at
+    admission — the record's kind always names the executed trace."""
+    cat = _CountingCatalog(
+        [CatalogEntry("kindA", synth_trace(RAMP, name="traceA"), weight=3.0),
+         CatalogEntry("kindB", synth_trace(SHORT, name="traceB"))], seed=5)
+    res = simulate_serving(
+        cat, PoissonArrivals(rate_per_sec=6000, n_sessions=12, seed=9),
+        "conduit")
+    assert cat.draws == 12                   # one draw per offered session
+    # record kind == executed kind: the session result's workload is the
+    # trace of the drawn entry, entry names map 1:1 onto trace names
+    trace_of = {"kindA": "traceA", "kindB": "traceB"}
+    by_sid = {r.tenant: r for r in res.session_results}
+    for s in res.sessions:
+        r = by_sid[f"s{s.sid}:{s.kind}"]
+        assert r.workload == trace_of[s.kind]
+
+
+# -- steady-state window edges -------------------------------------------------
+
+def test_window_measurement_is_inclusive_at_both_edges():
+    """Arrivals exactly at lo and exactly at hi are measured."""
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1e6, 2e6)), "conduit",
+        serving=ServingConfig(warmup_ns=1e6, cooldown_ns=0.0))
+    assert res.window_ns == (1e6, 2e6)
+    assert [s.measured for s in res.sessions] == [False, True, True]
+    lo, hi = res.window_ns
+    for s in res.sessions:
+        assert s.measured == (lo <= s.arrival_ns <= hi)
+
+
+def test_busy_snapshot_precedes_same_time_arrival():
+    """The closing utilization snapshot is scheduled before the arrivals,
+    so a session arriving exactly at the window edge books its work after
+    the snapshot — its load never leaks into the measured interval."""
+    eng = EventEngine(record=True)
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1e6, 2e6)), "conduit",
+        serving=ServingConfig(warmup_ns=1e6, cooldown_ns=0.0), engine=eng)
+    hi = res.window_ns[1]
+    at_hi = [k for t, k in eng.log if t == hi
+             and k in (EventKind.TIMER, EventKind.SESSION_ARRIVAL)]
+    assert EventKind.TIMER in at_hi and EventKind.SESSION_ARRIVAL in at_hi
+    assert at_hi.index(EventKind.TIMER) \
+        < at_hi.index(EventKind.SESSION_ARRIVAL)
+
+
+def test_zero_length_window_yields_empty_steady_state():
+    """warmup past the arrival span collapses the window to a point: no
+    measured sessions, zero rates, no utilization — and no crash."""
+    res = simulate_serving(
+        one_trace_catalog(ops=SHORT),
+        TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0)), "conduit",
+        serving=ServingConfig(warmup_ns=1e9))
+    lo, hi = res.window_ns
+    assert lo == hi == 1e9
+    assert res.window_span_ns == 0.0
+    assert res.measured_sessions == []
+    assert res.offered_rate_per_sec == 0.0
+    assert res.completed_rate_per_sec == 0.0
+    assert res.utilization == {}
+    assert res.mean_in_system == 0.0
+    assert res.little_law_ratio() == 1.0
+    assert res.n_completed == 3              # the run itself still drains
+
+
+# -- FTL / GC under serving ----------------------------------------------------
+
+GC_FTL = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                   prefill=0.9)
+
+
+def serving_io(n_requests=256, iops=25_000):
+    return HostIOStream(rate_iops=iops, read_fraction=0.5,
+                        n_requests=n_requests, zipf_theta=0.95,
+                        n_logical_pages=GC_FTL.logical_pages())
+
+
+def test_serving_without_ftl_is_unchanged_by_the_ftl_plumbing():
+    """ftl=None must leave the serving path bit-identical (the law the
+    golden serving numbers below also pin): explicit None == omitted."""
+    arr = PoissonArrivals(rate_per_sec=6000, n_sessions=12, seed=9)
+    a = simulate_serving(two_kind_catalog(), arr, "conduit")
+    b = simulate_serving(two_kind_catalog(), arr, "conduit", ftl=None)
+    assert a.makespan_ns == b.makespan_ns
+    assert a.session_latencies_ns == b.session_latencies_ns
+    assert a.ftl is None and b.ftl is None
+
+
+def test_serving_with_ftl_runs_gc_and_reports_stats():
+    arr = PoissonArrivals(rate_per_sec=6000, n_sessions=24, seed=9)
+    res = simulate_serving(two_kind_catalog(), arr, "conduit",
+                           io_stream=serving_io(), ftl=GC_FTL)
+    assert res.ftl is not None
+    assert res.ftl.gc_invocations > 0
+    assert res.ftl.write_amplification > 1.0
+    assert res.n_inflight == 0               # conservation still holds
+    assert "write_amp" in res.summary()
+
+
+def test_serving_ftl_gc_disabled_is_bit_identical_to_no_ftl():
+    """The batch equivalence law lifts to serving: gc_enabled=False is
+    the idealized drive, indistinguishable from running without an FTL."""
+    arr = PoissonArrivals(rate_per_sec=6000, n_sessions=16, seed=9)
+    io = serving_io(n_requests=128)
+    base = simulate_serving(two_kind_catalog(), arr, "conduit", io_stream=io)
+    off = simulate_serving(two_kind_catalog(), arr, "conduit", io_stream=io,
+                           ftl=dataclasses.replace(GC_FTL, gc_enabled=False))
+    assert off.makespan_ns == base.makespan_ns
+    assert off.session_latencies_ns == base.session_latencies_ns
+    assert off.host_io.latencies_ns == base.host_io.latencies_ns
+    assert off.ftl is not None and off.ftl.write_amplification == 1.0
+
+
+def test_serving_with_ftl_is_deterministic():
+    mk = lambda: simulate_serving(
+        two_kind_catalog(),
+        PoissonArrivals(rate_per_sec=6000, n_sessions=16, seed=9),
+        "conduit", io_stream=serving_io(n_requests=128), ftl=GC_FTL)
+    a, b = mk(), mk()
+    assert a.makespan_ns == b.makespan_ns
+    assert a.session_latencies_ns == b.session_latencies_ns
+    assert a.ftl.erase_counts == b.ftl.erase_counts
+
+
+def test_gc_inflates_serving_session_tail():
+    """GC page copies and erases on the shared die/channel pools make
+    session p99 strictly worse than the same run on an idealized drive."""
+    arr = PoissonArrivals(rate_per_sec=6000, n_sessions=24, seed=9)
+    io = serving_io()
+    off = simulate_serving(two_kind_catalog(), arr, "conduit", io_stream=io,
+                           ftl=dataclasses.replace(GC_FTL, gc_enabled=False))
+    on = simulate_serving(two_kind_catalog(), arr, "conduit", io_stream=io,
+                          ftl=GC_FTL)
+    assert on.ftl.gc_invocations > 0
+    assert on.p(99) > off.p(99)
+
+
+def test_saturation_with_ftl_is_lower_and_finite():
+    """The acceptance law: a drive that is actively collecting sustains
+    measurably fewer sessions/sec than the idealized drive — and with the
+    suspend collector the FTL point is finite (the monolithic collector's
+    victim cycles blow the SLO outright)."""
+    cat = two_kind_catalog()
+    io = serving_io()
+    susp = dataclasses.replace(GC_FTL, gc_suspend=True, gc_reserve_blocks=1)
+    kw = dict(slo_p99_ns=6.5e6, rate_lo=2000, rate_hi=24_000, iters=3,
+              n_sessions=48, seed=9, io_stream=io,
+              serving=ServingConfig(keep_session_results=False,
+                                    warmup_ns=1e5, cooldown_ns=1e5))
+    ideal = find_saturation(cat, "conduit", **kw)
+    collecting = find_saturation(cat, "conduit", ftl=susp, **kw)
+    assert ideal.rate_per_sec == 24_000      # idealized drive: SLO met at hi
+    assert 0.0 < collecting.rate_per_sec < ideal.rate_per_sec
+    assert math.isfinite(collecting.rate_per_sec)
+
+
+def test_saturation_with_ftl_is_deterministic():
+    cat = two_kind_catalog()
+    kw = dict(slo_p99_ns=6.5e6, rate_lo=2000, rate_hi=24_000, iters=2,
+              n_sessions=24, seed=9, io_stream=serving_io(n_requests=128),
+              ftl=GC_FTL,
+              serving=ServingConfig(keep_session_results=False,
+                                    warmup_ns=1e5, cooldown_ns=1e5))
+    a = find_saturation(cat, "conduit", **kw)
+    b = find_saturation(cat, "conduit", **kw)
+    assert a.rate_per_sec == b.rate_per_sec
+    assert [p.rate_per_sec for p in a.probes] == \
+        [p.rate_per_sec for p in b.probes]
 
 
 # -- config validation ---------------------------------------------------------

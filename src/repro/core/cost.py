@@ -32,6 +32,9 @@ HOME: Dict[Resource, Location] = {
     Resource.HOST_GPU: Location.HOST,
 }
 
+#: ``HOME`` as a dense tuple indexed by ``resource.index`` (hot-path form).
+HOME_BY_INDEX: Tuple[Location, ...] = tuple(HOME[r] for r in Resource)
+
 
 def dm_latency_ns(src: Location, dst: Location, nbytes: int,
                   spec: SSDSpec) -> float:
@@ -129,6 +132,17 @@ class SystemView:
     # single-tenant simulator passes the trace name; simulate_mix passes a
     # unique tenant id — a QoS-aware policy can prioritize per tenant.
     tenant: str = ""
+    # -- fast-path mirrors (optional; wired by the simulator) ----------------
+    # Direct structure references that let ``select_fast`` probe queues and
+    # operand locations without a bound-method hop per candidate.  A view
+    # that leaves them at their defaults (hand-built views in tests) makes
+    # ``select_fast`` fall back to the callable API above — same argmin.
+    pools_by_index: Optional[tuple] = None   # ServerPool per Resource.index
+    path_pools_flat: Optional[tuple] = None  # src.index*n_locations+dst.index
+    n_locations: int = 0
+    page_entries: Optional[dict] = None      # pid -> PageEntry (.location)
+    dep_ready_abs: float = 0.0               # dep_ready_ns(instr) of the
+                                             # instr being dispatched
 
 
 def static_features(instr: VectorInstr, resource: Resource,
@@ -146,12 +160,15 @@ def static_features(instr: VectorInstr, resource: Resource,
 
     The memo lives on the instruction object and pins the spec it was
     computed for (compared by identity, so a different spec for the same
-    trace recomputes rather than aliasing)."""
+    trace recomputes rather than aliasing).  Slots 1 and 2 are dense lists
+    indexed by ``resource.index`` — the dispatch loop reads them for every
+    candidate of every instruction, so no dict hashing on that path."""
     cache = instr.__dict__.get("_static_feats")
     if cache is None or cache[0] is not spec:
-        cache = (spec, {}, {}, {})
+        n = len(Resource)
+        cache = (spec, [None] * n, [None] * n, {})
         instr._static_feats = cache
-    per = cache[1].get(resource)
+    per = cache[1][resource.index]
     if per is None:
         ok = supports(resource, instr) and instr.op_class.name != "CONTROL" \
             or resource in (Resource.ISP, Resource.HOST_CPU)
@@ -163,8 +180,43 @@ def static_features(instr: VectorInstr, resource: Resource,
                      dm_latency_ns(Location.CTRL, home, nbytes, spec),
                      dm_latency_ns(Location.HOST, home, nbytes, spec))
         per = (ok, lat, home, dm_by_loc)
-        cache[1][resource] = per
+        cache[1][resource.index] = per
     return per
+
+
+def candidate_table(instr: VectorInstr, candidates: Tuple[Resource, ...],
+                    spec: SSDSpec) -> Tuple:
+    """The supported candidates with their static features pre-joined:
+    ``((resource, latency_comp, home, dm_by_location), ...)`` in
+    ``candidates`` order, memoized per instruction.
+
+    This is the ``select_fast`` inner loop: one cached-tuple read per
+    dispatch replaces one :func:`static_features` call (plus the skip of
+    unsupported rows) per candidate.  Two cache levels: a single-slot
+    ``_cand_tab = (candidates, spec, table)`` triple — two identity checks,
+    the steady state when one policy drives one trace — backed by a dict
+    keyed by ``id(candidates)`` with an identity check on the stored tuple
+    (int hashing instead of hashing an enum tuple per dispatch; the check
+    makes a recycled id a recompute, never a wrong table)."""
+    d = instr.__dict__
+    ct = d.get("_cand_tab")
+    if ct is not None and ct[0] is candidates and ct[1] is spec:
+        return ct[2]
+    cache = d.get("_static_feats")
+    if cache is not None and cache[0] is spec:
+        ent = cache[3].get(id(candidates))
+        if ent is not None and ent[0] is candidates:
+            table = ent[1]
+            instr._cand_tab = (candidates, spec, table)
+            return table
+    static_features(instr, candidates[0], spec)      # pins the cache to spec
+    cache = instr._static_feats[3]
+    table = tuple((r,) + static_features(instr, r, spec)[1:]
+                  for r in candidates
+                  if static_features(instr, r, spec)[0])
+    cache[id(candidates)] = (candidates, table)
+    instr._cand_tab = (candidates, spec, table)
+    return table
 
 
 def exec_latency_ns(instr: VectorInstr, resource: Resource, spec: SSDSpec,
@@ -172,17 +224,25 @@ def exec_latency_ns(instr: VectorInstr, resource: Resource, spec: SSDSpec,
     """Memoized :func:`~repro.core.isa.compute_latency_ns` for the
     simulator's execution booking (both operand-latch variants cached
     per instruction alongside the static features)."""
-    ok, lat, _, _ = static_features(instr, resource, spec)  # pins the cache
+    cache = instr.__dict__.get("_static_feats")
     if not operands_latched:
+        if cache is not None and cache[0] is spec:
+            per = cache[1][resource.index]
+            if per is not None:
+                if per[0]:
+                    return per[1]
+                return compute_latency_ns(instr, resource, spec)
+        ok, lat, _, _ = static_features(instr, resource, spec)
         if ok:
             return lat
         return compute_latency_ns(instr, resource, spec)
-    cache = instr._static_feats[2]      # created by static_features above
-    lat = cache.get(resource)
+    static_features(instr, resource, spec)           # pins the cache
+    cache = instr._static_feats[2]
+    lat = cache[resource.index]
     if lat is None:
         lat = compute_latency_ns(instr, resource, spec,
                                  operands_latched=True)
-        cache[resource] = lat
+        cache[resource.index] = lat
     return lat
 
 
@@ -191,9 +251,12 @@ def exec_energy_nj(instr: VectorInstr, resource: Resource, spec: SSDSpec,
     """Memoized :func:`~repro.core.isa.compute_energy_nj` for the
     simulator's execution booking — a pure function of the instruction,
     resource and (already-memoized) latency."""
-    static_features(instr, resource, spec)      # pins the cache to spec
-    cache = instr._static_feats[3]
-    key = (resource, latency_ns)
+    cache = instr.__dict__.get("_static_feats")
+    if cache is None or cache[0] is not spec:
+        static_features(instr, resource, spec)  # pins the cache to spec
+        cache = instr._static_feats
+    cache = cache[3]
+    key = (resource.index, latency_ns)
     e = cache.get(key)
     if e is None:
         e = compute_energy_nj(instr, resource, spec, latency_ns)
@@ -216,7 +279,7 @@ def features_for(instr: VectorInstr, resource: Resource, view: SystemView,
     move_queue_ns = view.move_queue_ns
     for s in instr.srcs:
         loc = location_of(s)
-        dm += dm_by_loc[loc.value]
+        dm += dm_by_loc[loc.index]
         if loc is not home:
             m = move_queue_ns(loc, home)
             if m > mq:

@@ -43,6 +43,12 @@ class Resource(enum.Enum):
         return self in (Resource.ISP, Resource.PUD, Resource.IFP)
 
 
+# Dense integer index per resource: hot paths (feature caches, pool tables)
+# key flat tuples by ``resource.index`` instead of hashing enum members.
+for _i, _r in enumerate(Resource):
+    _r.index = _i
+N_RESOURCES = len(Resource)
+
 NDP_RESOURCES: Tuple[Resource, ...] = (Resource.ISP, Resource.PUD, Resource.IFP)
 
 
@@ -53,6 +59,14 @@ class Location(enum.Enum):
     DRAM = 1
     CTRL = 2     # controller-core registers / SRAM (transient)
     HOST = 3
+
+
+# Same dense-index trick as Resource: ``loc.index`` is a plain attribute
+# read (``loc.value`` pays the DynamicClassAttribute descriptor on every
+# access).  Values equal definition order, so index == value.
+for _i, _l in enumerate(Location):
+    _l.index = _i
+N_LOCATIONS = len(Location)
 
 
 class OpClass(enum.Enum):

@@ -20,9 +20,10 @@ import dataclasses
 import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost import HOME, Features, SystemView, features_for
-from repro.core.isa import (NDP_RESOURCES, OpClass, Resource, VectorInstr,
-                            compute_latency_ns, supports)
+from repro.core.cost import (HOME, Features, SystemView, candidate_table,
+                             features_for, static_features)
+from repro.core.isa import (NDP_RESOURCES, Location, OpClass, Resource,
+                            VectorInstr, compute_latency_ns, supports)
 from repro.hw.ssd_spec import SSDSpec
 
 
@@ -81,8 +82,22 @@ class Policy:
             return [fallback]
         return ok
 
+    def _fallback(self) -> Resource:
+        return (Resource.ISP if Resource.ISP in self.candidates
+                else self.candidates[0])
+
     def select(self, instr: VectorInstr, view: SystemView) -> Decision:
         raise NotImplementedError
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        """Allocation-free ``select``: same argmin, target resource only.
+
+        The simulator's hot dispatch path calls this when nothing reads
+        the full per-candidate feature dict (no fault replay configured);
+        each override replicates its ``select`` term-for-term — same
+        accumulation order, same tie-breaking — so the chosen resource and
+        every downstream float are bit-identical to the ``select`` path."""
+        return self.select(instr, view).resource
 
 
 class ConduitPolicy(Policy):
@@ -95,6 +110,51 @@ class ConduitPolicy(Policy):
         ok = self._supported(instr, feats)
         best = min(ok, key=lambda r: feats[r].total)
         return Decision(best, feats, reason=f"min_total={feats[best].total:.0f}ns")
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        pools = view.pools_by_index
+        if pools is None:          # hand-built view: no fast-path mirrors
+            return self.select(instr, view).resource
+        # no CONTROL check: candidate_table keeps only ISP for CONTROL
+        # instrs (static_features gate), and the loop then picks it —
+        # the same resource select() and _fallback() produce
+        now = view.now_ns
+        dd = view.dep_ready_abs - now
+        if dd < 0.0:
+            dd = 0.0
+        entries = view.page_entries
+        flat = view.path_pools_flat
+        nloc = view.n_locations
+        locs = [entries[s].location for s in instr.srcs]
+        best = prev_home = None
+        best_total = dm = mq = 0.0
+        for r, lat, home, dm_by_loc in candidate_table(
+                instr, self.candidates, self.spec):
+            # dm/mq depend only on the home location (same operands):
+            # consecutive same-home candidates (ISP, PUD -> DRAM) reuse
+            if home is not prev_home:
+                prev_home = home
+                dm = 0.0
+                mq = 0.0
+                hbase = home.index
+                probed = None
+                for loc in locs:
+                    dm += dm_by_loc[loc.index]
+                    # co-located operands (the common case) share one
+                    # path probe: same (loc, home) -> same pool maxima
+                    if loc is not home and loc is not probed:
+                        probed = loc
+                        for p in flat[loc.index * nloc + hbase]:
+                            m = p.queue_delay_ns(now)
+                            if m > mq:
+                                mq = m
+            q = pools[r.index].queue_delay_ns(now)
+            if mq > q:
+                q = mq
+            total = lat + dm + (dd if dd > q else q)
+            if best is None or total < best_total:
+                best, best_total = r, total
+        return best if best is not None else self._fallback()
 
 
 class BWOffloading(Policy):
@@ -109,6 +169,40 @@ class BWOffloading(Policy):
         best = min(ok, key=lambda r: (feats[r].delay_queue,
                                       feats[r].latency_comp))
         return Decision(best, feats, reason="min_queue")
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        pools = view.pools_by_index
+        if pools is None:          # hand-built view: no fast-path mirrors
+            return self.select(instr, view).resource
+        now = view.now_ns
+        entries = view.page_entries
+        flat = view.path_pools_flat
+        nloc = view.n_locations
+        locs = [entries[s].location for s in instr.srcs]
+        best = prev_home = None
+        best_q = best_lat = mq = 0.0
+        for r, lat, home, _ in candidate_table(
+                instr, self.candidates, self.spec):
+            if home is not prev_home:
+                prev_home = home
+                mq = 0.0
+                hbase = home.index
+                probed = None
+                for loc in locs:
+                    # co-located operands share one path probe
+                    if loc is not home and loc is not probed:
+                        probed = loc
+                        for p in flat[loc.index * nloc + hbase]:
+                            m = p.queue_delay_ns(now)
+                            if m > mq:
+                                mq = m
+            q = pools[r.index].queue_delay_ns(now)
+            if mq > q:
+                q = mq
+            if (best is None or q < best_q
+                    or (q == best_q and lat < best_lat)):
+                best, best_q, best_lat = r, q, lat
+        return best if best is not None else self._fallback()
 
 
 class DMOffloading(Policy):
@@ -129,6 +223,30 @@ class DMOffloading(Policy):
         best = min(ok, key=lambda r: (moved_bytes(r), feats[r].latency_comp))
         return Decision(best, feats, reason="min_dm_bytes")
 
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        nbytes = instr.nbytes
+        entries = view.page_entries
+        if entries is not None:
+            locs = [entries[s].location for s in instr.srcs]
+        else:
+            location_of = view.location_of
+            locs = [location_of(s) for s in instr.srcs]
+        best = prev_home = None
+        best_moved = moved = 0
+        best_lat = 0.0
+        for r, lat, home, _ in candidate_table(
+                instr, self.candidates, self.spec):
+            if home is not prev_home:
+                prev_home = home
+                moved = 0
+                for loc in locs:
+                    if loc != home:
+                        moved += nbytes
+            if (best is None or moved < best_moved
+                    or (moved == best_moved and lat < best_lat)):
+                best, best_moved, best_lat = r, moved, lat
+        return best if best is not None else self._fallback()
+
 
 class IdealPolicy(Policy):
     """Upper bound (§5.3): no queueing, zero movement, fastest resource."""
@@ -142,6 +260,15 @@ class IdealPolicy(Policy):
         ok = self._supported(instr, feats)
         best = min(ok, key=lambda r: feats[r].latency_comp)
         return Decision(best, feats, reason="min_comp")
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        best = None
+        best_lat = 0.0
+        for r, lat, _, _ in candidate_table(
+                instr, self.candidates, self.spec):
+            if best is None or lat < best_lat:
+                best, best_lat = r, lat
+        return best if best is not None else self._fallback()
 
 
 class StaticPolicy(Policy):
@@ -169,11 +296,21 @@ class StaticPolicy(Policy):
             # Flash-Cosmos/Ares-Flash compute on data stored in the flash
             # array (or chained in latches); they never program operands
             # back into flash just to compute on them.
-            from repro.core.isa import Location
             ok_primary = all(view.location_of(s) == Location.FLASH
                              for s in instr.srcs)
         target = self.primary if ok_primary else Resource.ISP
         return Decision(target, feats, reason="static")
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        primary = self.primary
+        ok, _, _, _ = static_features(instr, primary, self.spec)
+        ok_primary = (ok and supports(primary, instr)
+                      and instr.op_class is not OpClass.CONTROL
+                      and (self.ops is None or instr.op in self.ops))
+        if ok_primary and primary is Resource.IFP:
+            ok_primary = all(view.location_of(s) == Location.FLASH
+                             for s in instr.srcs)
+        return primary if ok_primary else Resource.ISP
 
 
 class HostPolicy(Policy):
@@ -198,6 +335,12 @@ class HostPolicy(Policy):
                 and self.device is Resource.HOST_GPU):
             target = Resource.HOST_CPU
         return Decision(target, feats, reason="host")
+
+    def select_fast(self, instr: VectorInstr, view: SystemView) -> Resource:
+        if (instr.op_class is OpClass.CONTROL
+                and self.device is Resource.HOST_GPU):
+            return Resource.HOST_CPU
+        return self.device
 
 
 # -- factory -----------------------------------------------------------------

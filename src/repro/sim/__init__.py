@@ -6,9 +6,11 @@ optional synthetic host I/O stream sharing one fabric).
 Open-loop serving entry point: :func:`simulate_serving` (sessions drawn
 from a weighted catalog keep arriving mid-run; steady-state throughput /
 tail latency, plus :func:`find_saturation` for the max sustainable rate).
+Batched sweeps: :func:`batched_find_saturation` runs many saturation
+searches in lockstep (policy grids, seed fans) on a vectorized driver.
 All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
-from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.events import EventEngine, EventKind
 from repro.sim.ftl import (VICTIM_POLICIES, CostBenefitVictim, FTLConfig,
                            FTLModel, GreedyVictim, VictimPolicy,
                            WearAwareVictim, drive_zipf_overwrites,
@@ -18,6 +20,9 @@ from repro.sim.servers import Fabric, ServerPool
 from repro.sim.serving import (SaturationProbe, SaturationResult,
                                ServingConfig, find_saturation,
                                simulate_serving)
+from repro.sim.sweep import (SweepLane, array_backend,
+                             batched_find_saturation,
+                             batched_poisson_arrival_times_ns)
 from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
                              MixResult, ServingResult, SessionRecord,
                              SimResult, jain_fairness, percentile)
@@ -28,7 +33,7 @@ from repro.sim.workgen import (ArrivalProcess, CatalogEntry,
                                SuperposedArrivals, TraceReplayArrivals)
 
 __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
-           "Event", "EventEngine", "EventKind",
+           "EventEngine", "EventKind",
            "HostIOStream", "simulate_mix", "clone_trace",
            "FTLConfig", "FTLModel", "FTLStats",
            "VictimPolicy", "GreedyVictim", "CostBenefitVictim",
@@ -41,4 +46,6 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "SuperposedArrivals", "CatalogEntry", "SessionCatalog",
            "ServingConfig", "ServingResult", "SessionRecord",
            "simulate_serving", "find_saturation",
-           "SaturationProbe", "SaturationResult"]
+           "SaturationProbe", "SaturationResult",
+           "SweepLane", "batched_find_saturation",
+           "batched_poisson_arrival_times_ns", "array_backend"]

@@ -5,7 +5,7 @@ The simulator is organised around a single time-ordered event heap
 :class:`~repro.sim.servers.Fabric`).  Every concurrent activity in the
 machine — a tenant's offloader dispatching its next vector instruction, a
 host I/O request arriving at the NVMe front end, a trace's epilogue flush —
-is an :class:`Event` with a typed :class:`EventKind`; handlers book time on
+is a scheduled ``(kind, handler, payload)`` record; handlers book time on
 the contended server pools and schedule their own follow-on events.
 
 Semantics:
@@ -30,20 +30,18 @@ Semantics:
 
 Performance notes:
 
-* Heap entries are plain ``(time, seq, event)`` tuples, so ordering is
-  decided by float/int comparison alone — the ``seq`` tie-break is unique,
-  and the :class:`Event` object itself is never compared.  Events are
-  ``__slots__`` records (no per-instance dict, no dataclass ``__eq__``
-  machinery), and processed events are recycled through a small free list
-  (slab allocation) so steady-state scheduling allocates nothing.
-  Consequence: an :class:`Event` returned by :meth:`EventEngine.schedule`
-  is only valid until its handler has run — do not hold on to it.
-* Handlers run inside the engine's innermost loop: keep them
-  allocation-light.  Booking time on pools costs O(log k) heap pushes
-  (see :mod:`repro.sim.servers`); anything that allocates per event (list
-  comprehensions over units, per-call closures, rebuilding latency
-  tables) shows up directly in events/sec — ``benchmarks/perf_bench.py``
-  tracks the trajectory in ``BENCH_sim_perf.json``.
+* An event IS its heap entry: a plain ``(time, seq, kind, handler,
+  payload)`` tuple.  Ordering is decided entirely by the ``(time, seq)``
+  prefix — ``seq`` is unique, so tuple comparison never reaches the
+  ``kind``/``handler``/``payload`` elements — and no per-event object or
+  side-table record is ever allocated.
+* Handlers take the event's *payload* directly (``handler(payload)``) —
+  there is no event object to pass.  Keep them allocation-light: booking
+  time on pools costs O(log k) heap pushes (see :mod:`repro.sim.servers`);
+  anything that allocates per event (list comprehensions over units,
+  per-call closures, rebuilding latency tables) shows up directly in
+  events/sec — ``benchmarks/perf_bench.py`` tracks the trajectory in
+  ``BENCH_sim_perf.json``.
 
 Single-trace runs degenerate to a single event source processed in program
 order, which is why :func:`repro.sim.tenancy.simulate_mix` with one trace
@@ -68,28 +66,6 @@ class EventKind(enum.Enum):
     TIMER = "timer"              # generic callback (tests, snapshots, policies)
 
 
-class Event:
-    """One scheduled activity.  Recycled via the engine's free list after
-    its handler runs — hold no references across processing."""
-
-    __slots__ = ("time", "seq", "kind", "handler", "payload")
-
-    def __init__(self, time: float, seq: int, kind: EventKind,
-                 handler: Callable[["Event"], None], payload: Any = None):
-        self.time = time
-        self.seq = seq
-        self.kind = kind
-        self.handler = handler
-        self.payload = payload
-
-    def __repr__(self) -> str:   # debugging aid only
-        return f"Event(t={self.time}, seq={self.seq}, kind={self.kind})"
-
-
-#: bound on the event free list — far above any steady-state working set
-_FREE_LIST_MAX = 512
-
-
 class EventEngine:
     """Time-ordered event heap with deterministic tie-breaking.
 
@@ -103,16 +79,18 @@ class EventEngine:
     def __init__(self, record: bool = False):
         self.now: float = 0.0
         self.processed: int = 0
-        self._heap: List[Tuple[float, int, Event]] = []
+        # heap of (time, seq, kind, handler, payload); (time, seq) is a
+        # unique sort key, the trailing elements are never compared
+        self._heap: List[tuple] = []
         self._seq: int = 0
-        self._free: List[Event] = []
         self.record = record
         self.log: List[Tuple[float, EventKind]] = []
 
     def schedule(self, time: float, kind: EventKind,
-                 handler: Callable[[Event], None],
-                 payload: Any = None) -> Event:
-        """Schedule ``handler`` at ``time`` (>= now: time cannot run back)."""
+                 handler: Callable[[Any], None],
+                 payload: Any = None) -> None:
+        """Schedule ``handler(payload)`` at ``time`` (>= now: time cannot
+        run back)."""
         now = self.now
         if time < now:
             if time < now - self.EPS:
@@ -121,41 +99,32 @@ class EventEngine:
             time = now
         seq = self._seq
         self._seq = seq + 1
-        if self._free:
-            ev = self._free.pop()
-            ev.time = time
-            ev.seq = seq
-            ev.kind = kind
-            ev.handler = handler
-            ev.payload = payload
-        else:
-            ev = Event(time, seq, kind, handler, payload)
-        heappush(self._heap, (time, seq, ev))
-        return ev
+        heappush(self._heap, (time, seq, kind, handler, payload))
 
     def empty(self) -> bool:
         return not self._heap
 
+    def next_time(self) -> Optional[float]:
+        """Timestamp of the next pending event, or None if the heap is
+        empty — lets arrival sources batch work that cannot interleave
+        with anything (see :mod:`repro.sim.tenancy`)."""
+        heap = self._heap
+        return heap[0][0] if heap else None
+
     def run(self, until: Optional[float] = None) -> float:
         """Process events in time order; returns the final clock value."""
         heap = self._heap
-        free = self._free
         record = self.record
         pop = heappop
         while heap:
-            time, _, ev = heap[0]
+            time = heap[0][0]
             if until is not None and time > until:
                 break
-            pop(heap)
+            ev = pop(heap)
             if time > self.now:
                 self.now = time
             self.processed += 1
             if record:
-                self.log.append((self.now, ev.kind))
-            ev.handler(ev)
-            # recycle through the free list (slab allocation): the handler
-            # has run, nothing may hold this event any more
-            if len(free) < _FREE_LIST_MAX:
-                ev.handler = ev.payload = None
-                free.append(ev)
+                self.log.append((self.now, ev[2]))
+            ev[3](ev[4])
         return self.now

@@ -83,7 +83,7 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
-from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.events import EventEngine, EventKind
 from repro.sim.servers import Fabric
 from repro.sim.stats import FTLStats
 
@@ -558,6 +558,11 @@ class FTLModel:
         self.gc_active_dies = 0
         self.gc_energy_nj = 0.0
         self.host_during_gc_ns: List[float] = []
+        # latest completion the collector booked on any pool — GC copy and
+        # erase work regularly outlives the last host request / session,
+        # and a makespan that stops at the last *host* completion would
+        # silently exclude that tail (see ServingResult/MixResult)
+        self.last_booked_ns = 0.0
 
         n_prefill = int(cfg.prefill * self.n_logical)
         if n_prefill:
@@ -688,10 +693,9 @@ class FTLModel:
         return (f.e_read_nj_per_channel + 2.0 * f.e_dma_nj_per_channel
                 + f.e_prog_nj_per_channel)
 
-    def _on_gc(self, ev: Event) -> None:
+    def _on_gc(self, die: int) -> None:
         """Reclaim one victim block in a single monolithic booking; re-arm
         until the high watermark (the legacy, non-suspend collector)."""
-        die = ev.payload
         d = self.dies[die]
         if self._collection_done(d):
             self._gc_sleep(die)
@@ -723,10 +727,12 @@ class FTLModel:
         d.erase(victim)
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block
+        if t > self.last_booked_ns:
+            self.last_booked_ns = t
         # re-check at cycle completion: keep collecting or go back to sleep
         self.engine.schedule(t, EventKind.GC, self._on_gc, payload=die)
 
-    def _on_gc_page(self, ev: Event) -> None:
+    def _on_gc_page(self, die: int) -> None:
         """Suspend-mode collector: one event per page copy.
 
         Each copy books the die/channel pools *at its own event time*, so
@@ -737,7 +743,6 @@ class FTLModel:
         invalidated mid-cycle (the host overwrote the LPN while the
         collector was suspended) are skipped — their copy would have been
         pure amplification."""
-        die = ev.payload
         d = self.dies[die]
         engine = self.engine
         if d.gc_victim is None:
@@ -776,6 +781,8 @@ class FTLModel:
             self.gc_pages_copied += 1
             self.gc_energy_nj += self._copy_energy(f)
             d.gc_cursor = pg + 1
+            if t > self.last_booked_ns:
+                self.last_booked_ns = t
             engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
             return
         # no valid pages left: erase, then move to the next victim
@@ -784,6 +791,8 @@ class FTLModel:
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block
         d.gc_victim, d.gc_cursor = None, 0
+        if t > self.last_booked_ns:
+            self.last_booked_ns = t
         engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
 
     # -- observability --------------------------------------------------------
@@ -837,7 +846,8 @@ class FTLModel:
             gc_suspensions=self.gc_suspensions,
             hot_pages_written=self.hot_pages_written,
             cold_pages_written=self.cold_pages_written,
-            gc_overflow_blocks=sum(d.gc_grown_blocks for d in self.dies))
+            gc_overflow_blocks=sum(d.gc_grown_blocks for d in self.dies),
+            last_booked_ns=self.last_booked_ns)
 
 
 def drive_zipf_overwrites(cfg: FTLConfig, spec: SSDSpec,

@@ -23,16 +23,15 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.cost import (HOME, SystemView, decision_overhead_ns,
-                             dm_energy_nj, exec_energy_nj, exec_latency_ns)
+from repro.core.cost import (HOME, HOME_BY_INDEX, SystemView, dm_energy_nj,
+                             exec_energy_nj, exec_latency_ns)
 from repro.core.isa import Location, Resource, VectorInstr
 from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
-from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.events import EventEngine, EventKind
 from repro.sim.servers import Fabric, ServerPool
 from repro.sim.stats import DecisionRecord, SimResult
 
@@ -55,6 +54,10 @@ class SimConfig:
 
 STATIC_DISPATCH_NS = 200.0   # queue-push cost for compile-time-mapped policies
 BUFFER_DEPTH = 4             # pages buffered per plane (S/A/B/C data latches)
+
+# hot-loop constants (module-level load beats enum-class attribute chain)
+_DISPATCH = EventKind.DISPATCH
+_EPILOGUE = EventKind.EPILOGUE
 
 
 def _hash01(iid: int, seed: int) -> float:
@@ -93,6 +96,7 @@ class Simulation:
         self.start_ns = start_ns      # arrival offset (staggered tenants)
         self.fabric = fabric or Fabric(spec, pud_units=self.cfg.pud_units)
         self.pools: Dict[Resource, ServerPool] = self.fabric.pools
+        self._pools_by_index = self.fabric.pools_by_index
         self.offloader = self.fabric.offloader
         self.channels = self.fabric.channels
         self.dies = self.fabric.dies
@@ -106,10 +110,17 @@ class Simulation:
         npages = len(self.pages)
         self.dram_cap = self.cfg.dram_capacity_pages or max(32, npages // 8)
         self.host_cap = self.cfg.host_capacity_pages or max(32, npages // 4)
-        self.dram_lru: "OrderedDict[int, float]" = OrderedDict()
-        self.host_lru: "OrderedDict[int, float]" = OrderedDict()
+        # plain dicts as LRUs: insertion order is the recency order
+        # (pop + reinsert moves to back, next(iter(...)) is the victim)
+        self.dram_lru: Dict[int, float] = {}
+        self.host_lru: Dict[int, float] = {}
 
-        self.completion: Dict[int, float] = {}
+        # completion times indexed by iid (the Trace builder numbers iids
+        # 0..n-1 in emit order, so a flat list replaces dict hashing on
+        # the dependency scan; None = not yet dispatched)
+        self._comp_size = 1 + max(
+            (ins.iid for ins in trace.instrs), default=-1)
+        self.completion: List[Optional[float]] = [None] * self._comp_size
         # IFP page buffers: each channel-unit holds up to BUFFER_DEPTH pages
         # in its planes' S/D latches; page -> unit map gives latch affinity.
         self.unit_buffers: Dict[int, List[int]] = {}
@@ -149,8 +160,9 @@ class Simulation:
         self._pcie_nolat_ns = nb * h.pcie_ns_per_byte
         # Movement-path queue feature: pool lists per location pair live on
         # the (possibly shared) fabric — computed once per SSD, not per
-        # tenant.
-        self._path_pools = self.fabric.path_pools
+        # tenant.  Flat int-indexed form: see Fabric.path_pools_by_index.
+        self._path_pools_flat = self.fabric.path_pools_by_index
+        self._n_locations = self.fabric.n_locations
         # Persistent SystemViews: the offloader's runtime snapshot reuses
         # bound methods reading the cursor fields below instead of building
         # a dataclass plus three closures per dispatch.
@@ -162,7 +174,14 @@ class Simulation:
             dep_ready_ns=self._dep_feature,
             location_of=self.pages.location,
             move_queue_ns=self._move_queue_feature,
-            tenant=self.tenant)
+            tenant=self.tenant,
+            # fast-path mirrors: select_fast probes these directly
+            # (pages.reset() mutates entries in place, so the dict
+            # reference stays valid across pooled re-admissions)
+            pools_by_index=self._pools_by_index,
+            path_pools_flat=self._path_pools_flat,
+            n_locations=self._n_locations,
+            page_entries=self.pages.entries)
         self._ideal_view = SystemView(
             0.0, _zero_queue, self._dep_feature, self.pages.location,
             tenant=self.tenant)
@@ -180,7 +199,72 @@ class Simulation:
         # DecisionRecord logging is off (floats only — the cheap part)
         self.op_latencies: List[float] = []
         self._record_decisions = self.cfg.record_decisions
-        self.resource_counts: Dict[Resource, int] = {r: 0 for r in Resource}
+        # fault replay is the only consumer of the full per-candidate
+        # feature dict; without it the dispatch loop can take the
+        # allocation-free select_fast path (bit-identical argmin)
+        self._fast_select = self.cfg.fail_rate == 0.0
+        # dispatch-loop hoists: per-dispatch reads of immutable state
+        self._instrs = trace.instrs
+        self._n_instrs = len(trace.instrs)
+        self._policy_dynamic = policy.dynamic
+        self._ignores_contention = policy.ignores_contention
+        self._select_fast_fn = policy.select_fast
+        # list-backed by Resource.index (enum hashing off the hot path);
+        # result() rebuilds the public Dict[Resource, int] form
+        self._resource_counts: List[int] = [0] * len(Resource)
+        # §4.5 decision-overhead constants that do not depend on the
+        # instruction: folded once (decision_overhead_ns inlined in
+        # _on_dispatch; equivalence pinned in test_cost_and_policies)
+        self._decide_const_ns = (spec.queue_delay_track_ns
+                                 + spec.dm_latency_lookup_ns
+                                 + spec.comp_latency_lookup_ns
+                                 + spec.translation_lookup_ns)
+        self._l2p_dram_ns = spec.l2p_lookup_dram_ns
+        self._l2p_flash_ns = spec.l2p_lookup_flash_ns
+        self._dep_track_ns = spec.dep_delay_track_ns
+        self._inject_faults = self.cfg.fail_rate > 0.0
+
+    def reset(self, tenant: str = "", start_ns: float = 0.0) -> None:
+        """Rewind for a fresh admission of the same trace.
+
+        The open-loop serving driver pools Simulations per catalog entry:
+        re-admitting a session reuses the trace clone, the PageTable and
+        every hoisted per-trace structure, restoring only the state a run
+        mutates.  Equivalent to constructing a new Simulation over a fresh
+        ``clone_trace`` (pinned by the pooling-law tests).  ``decisions``
+        and ``op_latencies`` get NEW lists — a previously returned
+        ``result()`` keeps references to the old ones."""
+        self.tenant = tenant or self.trace.name
+        self.start_ns = start_ns
+        self.pages.reset()
+        self.dram_lru.clear()
+        self.host_lru.clear()
+        self.completion = [None] * self._comp_size
+        self.unit_buffers.clear()
+        self.buffered.clear()
+        self._cursor_iid = 0
+        self.engine = None
+        self._idx = 0
+        self._prev_decide_end = start_ns
+        self._makespan = start_ns
+        self.done = False
+        self.on_done = None
+        self._view_now = 0.0
+        self._cur_deps_ready = start_ns
+        self._view.tenant = self.tenant
+        self._ideal_view.tenant = self.tenant
+        self.compute_energy = 0.0
+        self.movement_energy = 0.0
+        self.overhead_total = 0.0
+        self.coherence_syncs = 0
+        self.evictions = 0
+        self.replays = 0
+        self.colocations = 0
+        self.decisions = []
+        self.op_latencies = []
+        counts = self._resource_counts
+        for i in range(len(counts)):
+            counts[i] = 0
 
     # -- data movement --------------------------------------------------------
 
@@ -248,7 +332,8 @@ class Simulation:
         lru.pop(pid, None)
         lru[pid] = now
         while len(lru) > cap:
-            victim, _ = lru.popitem(last=False)
+            victim = next(iter(lru))
+            del lru[victim]
             self._evict(victim, now)
 
     def _evict(self, pid: int, now: float) -> None:
@@ -296,7 +381,9 @@ class Simulation:
         generalized: the instruction waits on these queues too).  The pool
         list per location pair is precomputed in ``__init__``."""
         best = 0.0
-        for p in self._path_pools[(src, dst)]:
+        pools = self._path_pools_flat[src.index * self._n_locations
+                                      + dst.index]
+        for p in pools:
             q = p.queue_delay_ns(now)
             if q > best:
                 best = q
@@ -305,13 +392,21 @@ class Simulation:
     # -- SystemView feature callbacks (bound once, read the dispatch cursor) --
 
     def _queue_feature(self, r: Resource) -> float:
-        return self.pools[r].queue_delay_ns(self._view_now)
+        return self._pools_by_index[r.index].queue_delay_ns(self._view_now)
 
     def _dep_feature(self, instr: VectorInstr) -> float:
         return self._cur_deps_ready
 
     def _move_queue_feature(self, src: Location, dst: Location) -> float:
-        return self._path_queue_ns(src, dst, self._view_now)
+        # _path_queue_ns inlined: probed per off-home operand per candidate
+        now = self._view_now
+        best = 0.0
+        for p in self._path_pools_flat[src.index * self._n_locations
+                                       + dst.index]:
+            q = p.queue_delay_ns(now)
+            if q > best:
+                best = q
+        return best
 
     # -- execution ------------------------------------------------------------
 
@@ -360,17 +455,16 @@ class Simulation:
             ready = self.dram_bus.acquire_end(ready, issue)
 
         lat = exec_latency_ns(instr, r, self.spec, operands_latched=latched)
-        pool = self.pools[r]
+        pool = self._pools_by_index[r.index]
         if allow_contention:
-            acq = pool.acquire(ready, lat, unit=unit)
-            start, end = acq.start, acq.end
+            start, end = pool.acquire_se(ready, lat, unit=unit)
         else:
             start, end = ready, ready + lat
             pool.busy_ns += lat
             pool.jobs += 1
         self.compute_energy += exec_energy_nj(instr, r, self.spec, lat)
 
-        home = HOME[r]
+        home = HOME_BY_INDEX[r.index]
         self.pages.record_write(instr.dst, home)
         if r is Resource.IFP:
             # Result lands in the plane's page buffer (S/D latches hold up to
@@ -440,23 +534,32 @@ class Simulation:
             self.on_done(self)
 
     def _deps_ready(self, instr: VectorInstr) -> float:
-        return max((self.completion[d] for d in instr.deps
-                    if d in self.completion), default=self.start_ns)
+        # hand-rolled max-over-present: no generator frame on the hot path
+        completion = self.completion
+        best = None
+        for d in instr.deps:
+            c = completion[d]
+            if c is not None and (best is None or c > best):
+                best = c
+        return self.start_ns if best is None else best
 
     def _after_instr(self, instr_end: float) -> None:
         """Schedule the next dispatch (or the epilogue) after one
         instruction has been issued."""
-        self._makespan = max(self._makespan, instr_end)
+        if instr_end > self._makespan:
+            self._makespan = instr_end
         self._idx += 1
         engine = self.engine
-        if self._idx < len(self.trace.instrs):
-            if self.policy.ignores_contention:
-                nxt = self._deps_ready(self.trace.instrs[self._idx])
+        if self._idx < self._n_instrs:
+            if self._ignores_contention:
+                nxt = self._deps_ready(self._instrs[self._idx])
                 when = max(engine.now, nxt)
             else:
                 # in-order issue, pipelined across the offloader cores: the
                 # next decision may start once this one occupies its core.
-                when = max(engine.now, self._prev_decide_end)
+                now = engine.now
+                prev = self._prev_decide_end
+                when = now if now > prev else prev
             engine.schedule(when, EventKind.DISPATCH, self._on_dispatch)
         elif self.cfg.move_outputs_to_host and not self.policy.ignores_contention:
             engine.schedule(max(engine.now, self._makespan),
@@ -464,29 +567,28 @@ class Simulation:
         else:
             self._finish()
 
-    def _on_dispatch(self, ev: Event) -> None:
+    def _on_dispatch(self, _payload=None) -> None:
         """Offloader core picks up the next instruction in program order:
         decide (§4.5 overhead), move operands, book execution."""
         spec = self.spec
-        instr = self.trace.instrs[self._idx]
+        instr = self._instrs[self._idx]
         self._cursor_iid = instr.iid
         deps_ready = self._deps_ready(instr)
 
-        if self.policy.ignores_contention:
+        if self._ignores_contention:
             # Ideal (§5.3): zero data-movement latency, zero decision
             # overhead, fastest resource per instruction.  Execution
             # still occupies the (contention-free scheduled) compute
             # units — an upper bound on realizable offloading.
             self._cur_deps_ready = deps_ready
-            decision = self.policy.select(instr, self._ideal_view)
-            r = decision.resource
+            r = self.policy.select_fast(instr, self._ideal_view)
             lat = exec_latency_ns(instr, r, spec)
-            acq = self.pools[r].acquire(deps_ready, lat)
-            start, end = acq.start, acq.end
+            start, end = self._pools_by_index[r.index].acquire_se(
+                deps_ready, lat)
             self.compute_energy += exec_energy_nj(instr, r, spec, lat)
-            self.pages.record_write(instr.dst, HOME[r])
+            self.pages.record_write(instr.dst, HOME_BY_INDEX[r.index])
             self.completion[instr.iid] = end
-            self.resource_counts[r] += 1
+            self._resource_counts[r.index] += 1
             self.op_latencies.append(end - start)
             if self._record_decisions:
                 self.decisions.append(DecisionRecord(
@@ -494,51 +596,107 @@ class Simulation:
             self._after_instr(end)
             return
 
-        if self.policy.dynamic:
-            pending = False
-            completion = self.completion
-            threshold = self._prev_decide_end
-            for d in instr.deps:
-                c = completion.get(d)
-                if c is not None and c > threshold:
-                    pending = True
-                    break
-            overhead = decision_overhead_ns(
-                instr, spec, l2p_lookup=self.pages.lookup_latency_ns,
-                has_pending_deps=pending)
+        if self._policy_dynamic:
+            # decision_overhead_ns inlined (§4.5): per-operand L2P lookups
+            # plus the constant tracking/lookup terms folded in __init__.
+            # ``deps_ready`` is the max completion over present deps and
+            # ``_prev_decide_end`` is monotone from start_ns, so "any dep
+            # completes after the pipeline cursor" == deps_ready > cursor.
+            overhead = self._decide_const_ns
+            if deps_ready > self._prev_decide_end:
+                overhead += self._dep_track_ns
+            dram_ns = self._l2p_dram_ns
+            flash_ns = self._l2p_flash_ns
+            entries = self.pages.entries
+            for s in instr.srcs:
+                ent = entries[s]
+                if ent.l2p_cached:
+                    overhead += dram_ns
+                else:
+                    ent.l2p_cached = True
+                    overhead += flash_ns
         else:
             # compile-time-mapped policy: queue push only
             overhead = STATIC_DISPATCH_NS
-        acq = self.offloader.acquire(self._prev_decide_end, overhead)
-        now, decide_end = acq.start, acq.end
-        self._prev_decide_end = acq.start
+        now, decide_end = self.offloader.acquire_se(
+            self._prev_decide_end, overhead)
+        self._prev_decide_end = now
         self.overhead_total += overhead
 
         self._view_now = now
         self._cur_deps_ready = deps_ready
         view = self._view
         view.now_ns = now
-        decision = self.policy.select(instr, view)
-        r = decision.resource
+        view.dep_ready_abs = deps_ready
+        if self._fast_select:
+            r = self._select_fast_fn(instr, view)
+        else:
+            decision = self.policy.select(instr, view)
+            r = decision.resource
 
         # operand movement to the resource's home (overlapped per page)
         ready = max(decide_end, deps_ready)
-        home = HOME[r]
+        home = HOME_BY_INDEX[r.index]
+        # recency bookkeeping for on-home operands: the LRU is a function
+        # of ``home`` alone, so hoist _touch's branch out of the loop
+        # (home is FLASH only for IFP — that shape keeps the _touch call)
+        if home is Location.DRAM or home is Location.CTRL:
+            lru, cap = self.dram_lru, self.dram_cap
+        elif home is Location.HOST:
+            lru, cap = self.host_lru, self.host_cap
+        else:
+            lru = None
         move_end = ready
         dm_ns = 0.0
+        entries = self.pages.entries
         for s in instr.srcs:
-            if self.pages.location(s) != home:
+            if entries[s].location is not home:
                 t = self._move_page(s, home, ready)
                 dm_ns += t - ready
-                move_end = max(move_end, t)
-            else:
+                if t > move_end:
+                    move_end = t
+            elif lru is None:
                 self._touch(s, home, ready)
+            else:
+                lru.pop(s, None)
+                lru[s] = ready
+                while len(lru) > cap:
+                    victim = next(iter(lru))
+                    del lru[victim]
+                    self._evict(victim, ready)
 
-        start, end = self._exec_on(instr, r, move_end)
+        if r is Resource.IFP:
+            start, end = self._exec_on(instr, r, move_end)
+        else:
+            # _exec_on inlined for the ISP/PUD/host resources: no latch
+            # affinity, no same-block constraint — book and account.
+            lat = exec_latency_ns(instr, r, spec)
+            if r is Resource.PUD:
+                move_end = self.dram_bus.acquire_end(move_end, 0.18 * lat)
+            start, end = self._pools_by_index[r.index].acquire_se(
+                move_end, lat)
+            self.compute_energy += exec_energy_nj(instr, r, spec, lat)
+            # record_write inlined (enum __eq__ is identity, so ``is``)
+            ent = entries[instr.dst]
+            if not (ent.owner is home and ent.dirty):
+                ent.owner = home
+                ent.dirty = True
+            ent.bump_version()
+            ent.location = home
+            if lru is None:
+                self._touch(instr.dst, home, end)
+            else:
+                dst = instr.dst
+                lru.pop(dst, None)
+                lru[dst] = end
+                while len(lru) > cap:
+                    victim = next(iter(lru))
+                    del lru[victim]
+                    self._evict(victim, end)
 
         # transient-fault injection (§4.4 failure handling): replay on
         # another resource using the latest data version.
-        if self.cfg.fail_rate > 0.0 and \
+        if self._inject_faults and \
                 _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate:
             self.replays += 1
             alts = [x for x in self.policy.candidates
@@ -554,16 +712,33 @@ class Simulation:
             r = alt
 
         self.completion[instr.iid] = end
-        self.resource_counts[r] += 1
+        self._resource_counts[r.index] += 1
         self.op_latencies.append(end - now)
         if self._record_decisions:
             self.decisions.append(DecisionRecord(
                 instr.iid, instr.op, r, now, start, end, dm_ns,
-                replayed=self.cfg.fail_rate > 0.0
+                replayed=self._inject_faults
                 and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
-        self._after_instr(end)
+        # _after_instr inlined (this branch never ignores contention)
+        if end > self._makespan:
+            self._makespan = end
+        idx = self._idx + 1
+        self._idx = idx
+        engine = self.engine
+        if idx < self._n_instrs:
+            # in-order issue, pipelined across the offloader cores: the
+            # next decision may start once this one occupies its core.
+            enow = engine.now
+            prev = self._prev_decide_end
+            engine.schedule(enow if enow > prev else prev,
+                            _DISPATCH, self._on_dispatch)
+        elif self.cfg.move_outputs_to_host:
+            engine.schedule(max(engine.now, self._makespan),
+                            _EPILOGUE, self._on_epilogue)
+        else:
+            self._finish()
 
-    def _on_epilogue(self, ev: Event) -> None:
+    def _on_epilogue(self, _payload=None) -> None:
         """End of trace: results become visible to the host (§4.4 ii)."""
         makespan = self._makespan
         for pl in self.trace.output_pages:
@@ -584,7 +759,8 @@ class Simulation:
             decision_overhead_ns_total=self.overhead_total,
             decisions=self.decisions,
             op_latencies_ns=self.op_latencies,
-            resource_counts={r: c for r, c in self.resource_counts.items() if c},
+            resource_counts={r: self._resource_counts[r.index]
+                             for r in Resource if self._resource_counts[r.index]},
             resource_busy_ns=self.fabric.busy_ns(),
             coherence_syncs=self.coherence_syncs, evictions=self.evictions,
             replays=self.replays, colocations=self.colocations,

@@ -46,7 +46,7 @@ class Acquisition(NamedTuple):
 
 class ServerPool:
     __slots__ = ("name", "units", "free", "busy_ns", "jobs", "_heap",
-                 "_pending_work")
+                 "_pending_work", "_single")
 
     def __init__(self, name: str, units: int):
         assert units >= 1
@@ -62,12 +62,20 @@ class ServerPool:
         # maintained in O(1) on every acquire.  Pending work at time t is
         # this counter minus each unit's elapsed share (pending_work_ns).
         self._pending_work: float = 0.0
+        # Single-unit pools (DRAM bus, PCIe, host CPU/GPU) are booked on
+        # nearly every page move: they skip the heap entirely — free[0]
+        # IS the min — with arithmetic identical to the heap path.  NB
+        # the heap is then never maintained for them; every reader below
+        # must branch on the flag before touching it.
+        self._single: bool = units == 1
 
     # -- min-structure maintenance --------------------------------------------
 
     def _min_unit(self) -> tuple:
         """(free_time, unit) of the earliest-free unit, lowest index on
         ties — identical to the old ``min(range(units))`` scan."""
+        if self._single:
+            return self.free[0], 0
         heap = self._heap
         free = self.free
         while True:
@@ -81,6 +89,9 @@ class ServerPool:
     def queue_delay_ns(self, now: float) -> float:
         """Expected wait before a new job could start (Table 1 feature)."""
         # inlined _min_unit: this is the cost function's innermost probe
+        if self._single:
+            d = self.free[0] - now
+            return d if d > 0.0 else 0.0
         heap = self._heap
         free = self.free
         while True:
@@ -114,6 +125,15 @@ class ServerPool:
                 unit: Optional[int] = None) -> Acquisition:
         """FIFO-acquire a unit at the earliest feasible start >= ready."""
         free = self.free
+        if self._single:
+            f = free[0]
+            start = ready if ready > f else f
+            end = start + dur
+            free[0] = end
+            self._pending_work += end - f
+            self.busy_ns += dur
+            self.jobs += 1
+            return Acquisition(0, start, end)
         if unit is None:
             heap = self._heap
             while True:
@@ -133,6 +153,41 @@ class ServerPool:
         self.jobs += 1
         return Acquisition(unit, start, end)
 
+    def acquire_se(self, ready: float, dur: float,
+                   unit: Optional[int] = None) -> tuple:
+        """:meth:`acquire`, returning a plain ``(start, end)`` tuple.
+
+        For booking sites that need both endpoints but not the unit:
+        skips the NamedTuple construction on the per-dispatch path."""
+        free = self.free
+        if self._single:
+            f = free[0]
+            start = ready if ready > f else f
+            end = start + dur
+            free[0] = end
+            self._pending_work += end - f
+            self.busy_ns += dur
+            self.jobs += 1
+            return start, end
+        if unit is None:
+            heap = self._heap
+            while True:
+                f, u = heap[0]
+                if free[u] == f:
+                    break
+                heappop(heap)
+            unit = u
+        else:
+            f = free[unit]
+        start = ready if ready > f else f
+        end = start + dur
+        free[unit] = end
+        heappush(self._heap, (end, unit))
+        self._pending_work += end - f
+        self.busy_ns += dur
+        self.jobs += 1
+        return start, end
+
     def acquire_end(self, ready: float, dur: float,
                     unit: Optional[int] = None) -> float:
         """:meth:`acquire`, returning only the completion time.
@@ -140,6 +195,14 @@ class ServerPool:
         The allocation-free fast path for the (majority of) booking sites
         that chain on ``.end`` and never read the unit or start."""
         free = self.free
+        if self._single:
+            f = free[0]
+            end = (ready if ready > f else f) + dur
+            free[0] = end
+            self._pending_work += end - f
+            self.busy_ns += dur
+            self.jobs += 1
+            return end
         if unit is None:
             heap = self._heap
             while True:
@@ -194,6 +257,9 @@ class Fabric:
             Resource.HOST_CPU: ServerPool("cpu", 1),
             Resource.HOST_GPU: ServerPool("gpu", 1),
         }
+        # dense tuple indexed by ``Resource.index`` — the dispatch loop's
+        # form of the mapping above (enum definition order == index order)
+        self.pools_by_index = tuple(self.pools[r] for r in Resource)
         # computation mode (§4.4) suspends host I/O: every controller core
         # not used for ISP compute runs offloading/transformation tasks.
         self.offloader = ServerPool(
@@ -219,6 +285,13 @@ class Fabric:
                     if Location.HOST in (src, dst):
                         pools.append(self.pcie)
                 self.path_pools[(src, dst)] = tuple(pools)
+        # flat form indexed by ``src.index * N_LOCATIONS + dst.index`` —
+        # the dispatch loop probes a movement path per off-home operand,
+        # and an int-indexed tuple read beats hashing an enum pair
+        from repro.core.isa import N_LOCATIONS
+        self.n_locations = N_LOCATIONS
+        self.path_pools_by_index = tuple(
+            self.path_pools[(s, d)] for s in Location for d in Location)
 
     def all_pools(self) -> List[ServerPool]:
         return list(self.pools.values()) + [

@@ -52,7 +52,7 @@ from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.policies import Policy, shared_policy
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
-from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.events import EventEngine, EventKind
 from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation
 from repro.sim.servers import Fabric
@@ -75,7 +75,11 @@ class ServingConfig:
     ``record_decisions`` defaults to the fast mode (serving runs dispatch
     far too many instructions to keep one DecisionRecord each);
     ``keep_session_results`` retains one :class:`SimResult` per completed
-    session (disable for large saturation sweeps)."""
+    session (disable for large saturation sweeps).  ``pool_sessions``
+    recycles completed :class:`Simulation` objects per catalog entry
+    (reset instead of re-cloned — the dominant per-admission allocation);
+    the pooled path is bit-identical to fresh construction (tested law),
+    the flag exists as an escape hatch / for the equivalence tests."""
 
     max_active_sessions: int = 8
     max_backlog: int = 64
@@ -83,6 +87,7 @@ class ServingConfig:
     cooldown_ns: float = 0.0
     record_decisions: bool = False
     keep_session_results: bool = True
+    pool_sessions: bool = True
 
     def __post_init__(self) -> None:
         if self.max_active_sessions < 1:
@@ -132,9 +137,15 @@ class _ServingDriver:
         self._busy_lo: Dict[str, float] = {}
         self._busy_hi: Dict[str, float] = {}
         engine.schedule(lo, EventKind.TIMER,
-                        lambda ev: self._busy_lo.update(fabric.busy_ns()))
+                        lambda _: self._busy_lo.update(fabric.busy_ns()))
         engine.schedule(hi, EventKind.TIMER,
-                        lambda ev: self._busy_hi.update(fabric.busy_ns()))
+                        lambda _: self._busy_hi.update(fabric.busy_ns()))
+        # recycled Simulation objects, keyed by catalog entry name: every
+        # session of one kind shares the entry's trace/policy, so a
+        # completed session's Simulation can be reset and re-admitted
+        # instead of re-cloning the page table and re-allocating all the
+        # per-run state (the dominant admission cost at high churn)
+        self._sim_pool: Dict[str, List[Simulation]] = {}
 
         # one catalog draw per session, shared by the record and the
         # admission path (drawing again at admit time would double the
@@ -162,8 +173,7 @@ class _ServingDriver:
 
     # -- session lifecycle ----------------------------------------------------
 
-    def _on_arrival(self, ev: Event) -> None:
-        sid = ev.payload
+    def _on_arrival(self, sid: int) -> None:
         now = self.engine.now
         if self.active < self.scfg.max_active_sessions:
             self._mark(now, +1)
@@ -184,9 +194,14 @@ class _ServingDriver:
         rec.admit_ns = now
         self.active += 1
         self.n_admitted += 1
-        sim = Simulation(clone_trace(entry.trace), pol, self.spec, self.cfg,
-                         fabric=self.fabric, tenant=f"s{sid}:{entry.name}",
-                         start_ns=now)
+        pooled = self._sim_pool.get(entry.name)
+        if pooled:
+            sim = pooled.pop()
+            sim.reset(f"s{sid}:{entry.name}", now)
+        else:
+            sim = Simulation(clone_trace(entry.trace), pol, self.spec,
+                             self.cfg, fabric=self.fabric,
+                             tenant=f"s{sid}:{entry.name}", start_ns=now)
         sim.on_done = lambda s, sid=sid: self._on_done(s, sid)
         sim.bind(self.engine)
 
@@ -200,6 +215,10 @@ class _ServingDriver:
             self.op_latencies.extend(sim.op_latencies)
         if self.scfg.keep_session_results:
             self.results.append(sim.result())
+        # repool AFTER every read above: reset() replaces the mutable
+        # lists, so retained SimResults keep their own references
+        if self.scfg.pool_sessions:
+            self._sim_pool.setdefault(self.entries[sid].name, []).append(sim)
         if self.backlog:
             self._admit(self.backlog.popleft())  # FIFO admission
 
@@ -217,8 +236,13 @@ class _ServingDriver:
             for name, busy in self._busy_hi.items():
                 delta = busy - self._busy_lo.get(name, 0.0)
                 util[name] = delta / (span * units[name])
+        # the makespan is when the *drive* goes quiet, not just the last
+        # session: background GC booked past the final completion (the
+        # FTL tail) counts — same fold as simulate_mix
         makespan = max([r.done_ns for r in self.records if r.completed]
-                       + ([io.last_complete_ns] if io else []) + [0.0])
+                       + ([io.last_complete_ns] if io else [])
+                       + ([ftl_model.last_booked_ns]
+                          if ftl_model is not None else []) + [0.0])
         return ServingResult(
             policy=policy_name,
             sessions=self.records,
@@ -268,6 +292,18 @@ def simulate_serving(catalog: SessionCatalog,
         raise ValueError("arrival times must be >= 0")
     if any(b < a for a, b in zip(arrival_times, arrival_times[1:])):
         raise ValueError("arrival times must be non-decreasing")
+    # an over-long warmup/cooldown trim leaves a zero-length measurement
+    # window: every steady-state metric (rates, percentiles, occupancy,
+    # utilization) silently reads 0.0 — fail loudly at the entry point
+    # instead.  Zero trim with a degenerate span (single arrival at 0.0)
+    # stays legal: that is the batch-equivalence configuration.
+    if arrival_times and (scfg.warmup_ns > 0.0 or scfg.cooldown_ns > 0.0):
+        if arrival_times[-1] - scfg.cooldown_ns <= scfg.warmup_ns:
+            raise ValueError(
+                f"empty measurement window: warmup_ns={scfg.warmup_ns:g} + "
+                f"cooldown_ns={scfg.cooldown_ns:g} swallow the arrival span "
+                f"(last arrival at {arrival_times[-1]:g} ns) — every "
+                "steady-state metric would silently read zero")
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
@@ -321,6 +357,44 @@ class SaturationResult:
         }
 
 
+def _saturation_probe(catalog: SessionCatalog, base: ArrivalProcess,
+                      policy: PolicyLike, rate: float, slo_p99_ns: float,
+                      scfg: ServingConfig, spec: SSDSpec,
+                      config: Optional[SimConfig],
+                      io_stream: Optional[HostIOStream],
+                      ftl: Optional[FTLConfig],
+                      probes: List[SaturationProbe]) -> bool:
+    """One bisection probe: serve ``base.at_rate(rate)``, append the
+    :class:`SaturationProbe`, return sustainability.  Shared verbatim by
+    :func:`find_saturation` and the batched lockstep search in
+    :mod:`repro.sim.sweep` so the two can never drift apart."""
+    res = simulate_serving(catalog, base.at_rate(rate), policy,
+                           spec=spec, config=config, serving=scfg,
+                           io_stream=io_stream, ftl=ftl)
+    if res.n_rejected > 0:
+        # rejections alone prove the rate unsustainable — even when
+        # every in-window arrival bounced and no latency was measured
+        # (then there is no p99 to report: record NaN, not the
+        # empty-percentile 0.0 that would masquerade as a great tail)
+        p99 = (res.p(99) if res.session_latencies_ns
+               else float("nan"))
+        probes.append(SaturationProbe(
+            rate, p99, res.n_rejected,
+            res.completed_rate_per_sec, False))
+        return False
+    if not res.session_latencies_ns:
+        raise ValueError(
+            f"no measured sessions at rate {rate:.1f}/s: warmup/cooldown "
+            f"trim ({scfg.warmup_ns:.0f}+{scfg.cooldown_ns:.0f} ns) "
+            "swallows the arrival span — an empty window would make "
+            "every rate look sustainable")
+    p99 = res.p(99)
+    ok = p99 <= slo_p99_ns
+    probes.append(SaturationProbe(rate, p99, 0,
+                                  res.completed_rate_per_sec, ok))
+    return ok
+
+
 def find_saturation(catalog: SessionCatalog,
                     policy: PolicyLike,
                     slo_p99_ns: float,
@@ -359,31 +433,8 @@ def find_saturation(catalog: SessionCatalog,
     probes: List[SaturationProbe] = []
 
     def probe(rate: float) -> bool:
-        res = simulate_serving(catalog, base.at_rate(rate), policy,
-                               spec=spec, config=config, serving=scfg,
-                               io_stream=io_stream, ftl=ftl)
-        if res.n_rejected > 0:
-            # rejections alone prove the rate unsustainable — even when
-            # every in-window arrival bounced and no latency was measured
-            # (then there is no p99 to report: record NaN, not the
-            # empty-percentile 0.0 that would masquerade as a great tail)
-            p99 = (res.p(99) if res.session_latencies_ns
-                   else float("nan"))
-            probes.append(SaturationProbe(
-                rate, p99, res.n_rejected,
-                res.completed_rate_per_sec, False))
-            return False
-        if not res.session_latencies_ns:
-            raise ValueError(
-                f"no measured sessions at rate {rate:.1f}/s: warmup/cooldown "
-                f"trim ({scfg.warmup_ns:.0f}+{scfg.cooldown_ns:.0f} ns) "
-                "swallows the arrival span — an empty window would make "
-                "every rate look sustainable")
-        p99 = res.p(99)
-        ok = p99 <= slo_p99_ns
-        probes.append(SaturationProbe(rate, p99, 0,
-                                      res.completed_rate_per_sec, ok))
-        return ok
+        return _saturation_probe(catalog, base, policy, rate, slo_p99_ns,
+                                 scfg, spec, config, io_stream, ftl, probes)
 
     name = policy if isinstance(policy, str) else policy.name
     if not probe(rate_lo):

@@ -15,7 +15,14 @@ from repro.core.isa import Resource
 
 
 def percentile(values: List[float], p: float) -> float:
-    """Nearest-rank percentile (p in [0,100])."""
+    """Nearest-rank percentile; ``p`` must lie in [0, 100].
+
+    Out-of-range ``p`` raises instead of silently clamping to the
+    min/max sample — ``p(990)`` is a typo for ``p(99)``, not a request
+    for the largest value, and clamping would let it masquerade as a
+    plausible tail percentile."""
+    if not 0.0 <= p <= 100.0:
+        raise ValueError(f"percentile p={p!r} out of range [0, 100]")
     if not values:
         return 0.0
     s = sorted(values)
@@ -172,6 +179,10 @@ class FTLStats:
     # before the block reserve could be honored) — 0 on healthy
     # reserve-enabled runs, a subset of ``overflow_blocks``
     gc_overflow_blocks: int = 0
+    # end of the last die/channel booking the collector made — the GC
+    # tail that can outlive every tenant and host request, folded into
+    # MixResult/ServingResult makespans (0.0 if GC never booked)
+    last_booked_ns: float = 0.0
 
     @property
     def write_amplification(self) -> float:

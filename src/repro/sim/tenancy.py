@@ -56,7 +56,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
-from repro.sim.events import Event, EventEngine, EventKind
+from repro.sim.events import EventEngine, EventKind
 from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation, _hash01, simulate
 from repro.sim.servers import Fabric
@@ -211,19 +211,55 @@ class _HostIOModel:
         self._link_ns = nb * h.pcie_ns_per_byte + h.pcie_latency_ns
         self._qd = stream.queue_depth
         # per-request (arrival, lpn, is_read, hashed_die), memoized across
-        # runs replaying the same stream spec
+        # runs replaying the same stream spec.  Arrivals are *chained*:
+        # only the first is scheduled here; _on_arrival consumes runs of
+        # consecutive arrivals inline (batched) and schedules a real event
+        # only for the first arrival that something else could preempt.
         self.plan = _request_plan(stream, self.space, spec.flash.total_dies)
-        for i, (t, _, _, _) in enumerate(self.plan):
-            engine.schedule(t, EventKind.IO_ARRIVAL, self._on_arrival,
-                            payload=i)
+        if self.plan:
+            engine.schedule(self.plan[0][0], EventKind.IO_ARRIVAL,
+                            self._on_arrival, payload=0)
 
-    def _on_arrival(self, ev: Event) -> None:
-        i = ev.payload
+    def _on_arrival(self, i: int) -> None:
+        engine = self.engine
         qd = self._qd
         if qd is not None and self.outstanding >= qd:
-            self.pending.append((i, self.engine.now))  # NVMe QD front-end cap
+            self.pending.append((i, engine.now))  # NVMe QD front-end cap
+        else:
+            self._issue(i, engine.now)
+        # Burst batching: every later arrival that strictly precedes the
+        # next pending event cannot interleave with anything — process it
+        # here with the same clock updates, processed count and log records
+        # the engine's run loop would have applied, and fall back to a real
+        # event at the first arrival that ties or follows one.  IO_COMPLETE
+        # and GC events scheduled by _issue land in the heap immediately,
+        # so they bound the batch exactly as before.
+        plan = self.plan
+        n = len(plan)
+        j = i + 1
+        if j >= n:
             return
-        self._issue(i, self.engine.now)
+        record = engine.record
+        while True:
+            t_j = plan[j][0]
+            nt = engine.next_time()
+            if nt is not None and t_j >= nt:
+                engine.schedule(t_j, EventKind.IO_ARRIVAL, self._on_arrival,
+                                payload=j)
+                return
+            if t_j > engine.now:
+                engine.now = t_j
+            engine.processed += 1
+            if record:
+                engine.log.append((engine.now, EventKind.IO_ARRIVAL))
+            arr = engine.now
+            if qd is not None and self.outstanding >= qd:
+                self.pending.append((j, arr))
+            else:
+                self._issue(j, arr)
+            j += 1
+            if j >= n:
+                return
 
     def _issue(self, i: int, arrival_ns: float) -> None:
         self.outstanding += 1
@@ -254,8 +290,8 @@ class _HostIOModel:
         self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
                              payload=(i, arrival_ns, during_gc))
 
-    def _on_complete(self, ev: Event) -> None:
-        i, arrival, during_gc = ev.payload
+    def _on_complete(self, payload: Tuple[int, float, bool]) -> None:
+        i, arrival, during_gc = payload
         lat = self.engine.now - arrival
         self.latency_by_req[i] = lat
         if during_gc:
@@ -370,8 +406,12 @@ def simulate_mix(traces: Sequence[Trace],
     engine.run()
 
     results = [sim.result() for sim in sims]
+    # the GC tail counts: collector copy/erase bookings regularly finish
+    # after the last session and the last host completion
     makespan = max([r.makespan_ns for r in results]
-                   + ([io.last_complete_ns] if io else []))
+                   + ([io.last_complete_ns] if io else [])
+                   + ([ftl_model.last_booked_ns]
+                      if ftl_model is not None else []))
     return MixResult(tenants=results, solo_makespan_ns=solo,
                      host_io=io.stats() if io else None,
                      fabric_busy_ns=fabric.busy_ns(),

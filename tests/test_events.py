@@ -30,12 +30,9 @@ MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
 def test_engine_orders_events_and_breaks_ties_fifo():
     eng = EventEngine(record=True)
     seen = []
-    eng.schedule(5.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
-                 payload="late")
-    eng.schedule(1.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
-                 payload="early")
-    eng.schedule(5.0, EventKind.TIMER, lambda ev: seen.append(ev.payload),
-                 payload="late2")
+    eng.schedule(5.0, EventKind.TIMER, seen.append, payload="late")
+    eng.schedule(1.0, EventKind.TIMER, seen.append, payload="early")
+    eng.schedule(5.0, EventKind.TIMER, seen.append, payload="late2")
     eng.run()
     assert seen == ["early", "late", "late2"]   # time order, FIFO on ties
     assert eng.processed == 3
@@ -44,17 +41,17 @@ def test_engine_orders_events_and_breaks_ties_fifo():
 
 def test_engine_rejects_time_travel():
     eng = EventEngine()
-    eng.schedule(100.0, EventKind.TIMER, lambda ev: None)
+    eng.schedule(100.0, EventKind.TIMER, lambda _: None)
     eng.run()
     with pytest.raises(ValueError):
-        eng.schedule(10.0, EventKind.TIMER, lambda ev: None)
+        eng.schedule(10.0, EventKind.TIMER, lambda _: None)
 
 
 def test_engine_handlers_can_chain():
     eng = EventEngine()
     ticks = []
 
-    def tick(ev):
+    def tick(_):
         ticks.append(eng.now)
         if len(ticks) < 5:
             eng.schedule(eng.now + 10.0, EventKind.TIMER, tick)

@@ -317,9 +317,10 @@ def test_saturation_validation():
     with pytest.raises(ValueError):
         find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=100,
                         rate_hi=200, iters=0)
-    # warmup/cooldown that swallow the arrival span fail loudly instead of
-    # making every rate look sustainable
-    with pytest.raises(ValueError, match="no measured sessions"):
+    # warmup/cooldown that swallow the arrival span fail loudly at the
+    # simulate_serving entry point instead of making every rate look
+    # sustainable
+    with pytest.raises(ValueError, match="empty measurement window"):
         find_saturation(cat, "conduit", slo_p99_ns=1e6, rate_lo=1000,
                         rate_hi=2000, n_sessions=8,
                         serving=ServingConfig(warmup_ns=1e12,
@@ -446,23 +447,28 @@ def test_busy_snapshot_precedes_same_time_arrival():
         < at_hi.index(EventKind.SESSION_ARRIVAL)
 
 
-def test_zero_length_window_yields_empty_steady_state():
-    """warmup past the arrival span collapses the window to a point: no
-    measured sessions, zero rates, no utilization — and no crash."""
-    res = simulate_serving(
-        one_trace_catalog(ops=SHORT),
-        TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0)), "conduit",
-        serving=ServingConfig(warmup_ns=1e9))
-    lo, hi = res.window_ns
-    assert lo == hi == 1e9
-    assert res.window_span_ns == 0.0
-    assert res.measured_sessions == []
-    assert res.offered_rate_per_sec == 0.0
-    assert res.completed_rate_per_sec == 0.0
-    assert res.utilization == {}
-    assert res.mean_in_system == 0.0
-    assert res.little_law_ratio() == 1.0
-    assert res.n_completed == 3              # the run itself still drains
+def test_zero_length_window_is_rejected_at_entry():
+    """Pinning test: warmup past the arrival span used to collapse the
+    window to a point and silently return all-zero steady-state metrics
+    (rates, percentiles, occupancy, utilization) that a sweep would
+    happily compare.  simulate_serving now rejects the configuration
+    loudly at the entry point."""
+    with pytest.raises(ValueError, match="empty measurement window"):
+        simulate_serving(
+            one_trace_catalog(ops=SHORT),
+            TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0)), "conduit",
+            serving=ServingConfig(warmup_ns=1e9))
+    # cooldown alone swallowing the span is rejected the same way
+    with pytest.raises(ValueError, match="empty measurement window"):
+        simulate_serving(
+            one_trace_catalog(ops=SHORT),
+            TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0)), "conduit",
+            serving=ServingConfig(cooldown_ns=5.0))
+    # zero trim stays legal even with a degenerate (single-point) span:
+    # that is the batch-equivalence configuration
+    res = simulate_serving(one_trace_catalog(ops=SHORT),
+                           TraceReplayArrivals(times_ns=(0.0,)), "conduit")
+    assert res.n_completed == 1
 
 
 # -- FTL / GC under serving ----------------------------------------------------
@@ -595,3 +601,110 @@ def test_saturation_grid_across_policies():
              for pol in ("conduit", "bw", "dm")}
     assert rates["conduit"] >= rates["dm"]
     assert rates["conduit"] > 0
+
+
+# -- serving-layer bugfix pins + pooling laws ----------------------------------
+
+
+def test_makespan_includes_the_gc_tail_in_serving():
+    """Pin for the GC-tail makespan bug: the collector's trailing
+    copy/erase bookings can outlive every session and host request, and
+    the pre-fix makespan fold (sessions + host I/O only) silently
+    truncated them — shrinking reported wall time and inflating the perf
+    harness's events/sec.  Here GC provably outlives the last session."""
+    arr = PoissonArrivals(rate_per_sec=6000, n_sessions=16, seed=9)
+    res = simulate_serving(two_kind_catalog(), arr, "conduit",
+                           io_stream=serving_io(), ftl=GC_FTL)
+    assert res.ftl.gc_invocations > 0
+    last_session = max(r.done_ns for r in res.sessions if r.completed)
+    assert res.ftl.last_booked_ns > last_session    # the tail is real
+    assert res.makespan_ns == res.ftl.last_booked_ns
+
+
+def test_makespan_includes_the_gc_tail_in_mix():
+    """The same pin for the batch entry point: MixResult.makespan_ns
+    must cover GC bookings past the last tenant completion."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(SHORT, name="B")
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.3, n_requests=256,
+                      zipf_theta=0.95, n_logical_pages=GC_FTL.logical_pages())
+    mix = simulate_mix([a, b], "conduit", io_stream=io, ftl=GC_FTL,
+                       compute_solo=False)
+    assert mix.ftl.gc_invocations > 0
+    last_tenant = max(r.makespan_ns for r in mix.tenants)
+    assert mix.ftl.last_booked_ns > last_tenant
+    assert mix.makespan_ns == mix.ftl.last_booked_ns
+
+
+def test_percentile_rejects_out_of_range_p():
+    """Pin for the percentile clamp bug: ``p(-5)`` returned the min and
+    ``p(250)`` the max — a typo for ``p(25)`` masqueraded as a plausible
+    tail.  Every percentile-bearing surface must validate."""
+    from repro.sim import percentile
+    from repro.sim.stats import FTLStats, HostIOStats
+
+    assert percentile([1.0, 2.0, 3.0], 0) == 1.0     # endpoints stay legal
+    assert percentile([1.0, 2.0, 3.0], 100) == 3.0
+    for bad in (-5, -0.001, 100.001, 250, math.nan):
+        with pytest.raises(ValueError, match="out of range"):
+            percentile([1.0, 2.0], bad)
+
+    # the result-object callers all route through the same validation
+    host = HostIOStats(n_reads=1, n_writes=0, latencies_ns=[5.0])
+    ftl = FTLStats(gc_enabled=True, n_logical_pages=0, n_physical_pages=0,
+                   host_pages_written=0, gc_pages_copied=0, blocks_erased=0,
+                   gc_invocations=0, overflow_blocks=0, gc_energy_nj=0.0,
+                   erase_counts=[], host_during_gc_ns=[1.0])
+    res = simulate_serving(one_trace_catalog(ops=SHORT),
+                           TraceReplayArrivals(times_ns=(0.0,)), "conduit")
+    sim_res = res.session_results[0]
+    for call in (host.p, ftl.p_during_gc, res.p, res.op_p, sim_res.p):
+        with pytest.raises(ValueError, match="out of range"):
+            call(101)
+
+
+def _serving_fingerprint(res):
+    """Every timing-visible surface of a ServingResult, for bit-identity
+    laws (session lifecycles, per-op latencies, utilization, and the
+    retained per-session SimResults)."""
+    return (res.makespan_ns,
+            [(r.kind, r.arrival_ns, r.admit_ns, r.done_ns, r.rejected)
+             for r in res.sessions],
+            res.op_latencies_ns,
+            res.mean_in_system,
+            sorted(res.utilization.items()),
+            [(sr.makespan_ns, sr.n_instrs, sr.compute_energy_nj,
+              sr.movement_energy_nj, sr.evictions, sr.coherence_syncs)
+             for sr in (res.session_results or [])])
+
+
+@pytest.mark.parametrize("policy", ["conduit", "bw", "cpu"])
+def test_pooled_sessions_bit_identical_to_fresh_clones(policy):
+    """Pooling law: recycling completed Simulation objects across
+    admissions (``pool_sessions=True``, the default) must reproduce the
+    fresh-clone-per-admission run bit-for-bit, for any policy.  The cap
+    is far below the session count, so pooled objects are provably
+    re-admitted many times back-to-back."""
+    arr = PoissonArrivals(rate_per_sec=8000, n_sessions=24, seed=9)
+    mk = lambda pooled: simulate_serving(
+        two_kind_catalog(), arr, policy,
+        serving=ServingConfig(max_active_sessions=4, pool_sessions=pooled))
+    pooled, fresh = mk(True), mk(False)
+    assert pooled.n_admitted > 4          # reuse actually happened
+    assert _serving_fingerprint(pooled) == _serving_fingerprint(fresh)
+
+
+def test_pool_reuse_back_to_back_on_one_catalog_entry():
+    """The sharpest reuse shape: one catalog entry, concurrency cap 1 —
+    every admission after the first resets the same pooled Simulation.
+    Still bit-identical to fresh clones."""
+    cat = one_trace_catalog(ops=SHORT)
+    arr = PoissonArrivals(rate_per_sec=4000, n_sessions=10, seed=3)
+    mk = lambda pooled: simulate_serving(
+        cat, arr, "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=16,
+                              pool_sessions=pooled))
+    pooled, fresh = mk(True), mk(False)
+    assert pooled.n_completed == fresh.n_completed
+    assert pooled.n_completed + pooled.n_rejected == 10
+    assert _serving_fingerprint(pooled) == _serving_fingerprint(fresh)

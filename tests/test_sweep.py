@@ -1,0 +1,132 @@
+"""Batched-sweep laws (:mod:`repro.sim.sweep`).
+
+The batch layer's one promise: batching never changes an answer.
+
+(a) backend — the array module is numpy unless JAX runs in 64-bit mode
+    (the bisection must stay IEEE double for the bit-identity law);
+(b) vectorized arrivals — each row of the batched Poisson grid matches
+    the scalar ``PoissonArrivals`` loop (the integer hash exactly, the
+    float tail to tight tolerance);
+(c) lockstep bisection — ``batched_find_saturation`` is bit-identical to
+    sequential ``find_saturation`` calls per lane: same probes, same
+    rates, same brackets, because the probe body is shared and float64
+    midpoints are the same arithmetic either way.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (CatalogEntry, PoissonArrivals, SessionCatalog,
+                       SweepLane, array_backend, batched_find_saturation,
+                       batched_poisson_arrival_times_ns, find_saturation)
+
+from _synth import synth_trace
+
+OPS = [1, 4, 7, 2, 5, 0, 3, 6]
+
+
+def small_catalog():
+    return SessionCatalog([CatalogEntry("A", synth_trace(OPS, name="A"))],
+                          seed=3)
+
+
+# -- (a) backend ---------------------------------------------------------------
+
+def test_array_backend_is_double_precision():
+    xp = array_backend()
+    # numpy by default; jax.numpy only if x64 was explicitly enabled —
+    # either way the backend must carry real float64
+    assert xp.asarray([0.5], dtype=xp.float64).dtype == np.float64
+    try:
+        import jax
+        if not getattr(jax.config, "jax_enable_x64", False):
+            assert xp is np
+    except ImportError:
+        assert xp is np
+
+
+# -- (b) vectorized arrivals ---------------------------------------------------
+
+def test_batched_poisson_rows_match_scalar_loop():
+    rates = [500.0, 2000.0, 8000.0, 50_000.0]
+    grid = batched_poisson_arrival_times_ns(rates, 48, seed=77, start_ns=5.0)
+    assert grid.shape == (4, 48)
+    for row, rate in zip(grid, rates):
+        ref = PoissonArrivals(rate_per_sec=rate, n_sessions=48, seed=77,
+                              start_ns=5.0).arrival_times_ns()
+        np.testing.assert_allclose(np.asarray(row), ref, rtol=1e-12)
+
+
+def test_batched_poisson_rows_are_increasing_and_rate_ordered():
+    grid = np.asarray(batched_poisson_arrival_times_ns(
+        [1000.0, 4000.0], 32, seed=9))
+    assert (np.diff(grid, axis=1) > 0).all()      # gaps strictly positive
+    # same uniforms => the faster row is a pure time compression
+    assert (grid[1] < grid[0]).all()
+
+
+def test_batched_poisson_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        batched_poisson_arrival_times_ns([], 8)
+    with pytest.raises(ValueError, match="> 0"):
+        batched_poisson_arrival_times_ns([1000.0, -1.0], 8)
+    with pytest.raises(ValueError, match="n_sessions"):
+        batched_poisson_arrival_times_ns([1000.0], 0)
+
+
+# -- (c) lockstep bisection ----------------------------------------------------
+
+def _probe_key(probes):
+    return [(p.rate_per_sec, p.p99_ns, p.n_rejected, p.sustainable)
+            for p in probes]
+
+
+def test_lockstep_bisection_bit_identical_to_sequential():
+    """The central law: a batched sweep's every lane — probes included —
+    equals the standalone search with the same (policy, seed).  The lane
+    mix is deliberate: two lanes that bisect the full ``iters`` rounds
+    next to one that dies at ``rate_lo`` (its SLO is unreachable), so the
+    live-lane bookkeeping is exercised alongside an endpoint dropout."""
+    cat = small_catalog()
+    slo, lo, hi, iters = 1.5e5, 50.0, 200_000.0, 3
+    lanes = [SweepLane("cpu", seed=11, n_sessions=10),
+             SweepLane("cpu", seed=77, n_sessions=10),
+             SweepLane("conduit", seed=11, n_sessions=10)]
+    batched = batched_find_saturation(cat, lanes, slo, lo, hi, iters=iters)
+    for lane, got in zip(lanes, batched):
+        ref = find_saturation(cat, lane.policy, slo, lo, hi, iters=iters,
+                              n_sessions=lane.n_sessions, seed=lane.seed)
+        assert got.rate_per_sec == ref.rate_per_sec
+        assert got.bracket == ref.bracket
+        assert _probe_key(got.probes) == _probe_key(ref.probes)
+    # the cpu lanes genuinely bisected (endpoints + iters midpoints);
+    # the conduit lane dropped out at the first endpoint probe
+    assert len(batched[0].probes) == 2 + iters
+    assert len(batched[1].probes) == 2 + iters
+    assert batched[2].rate_per_sec == 0.0
+    assert len(batched[2].probes) == 1
+
+
+def test_lockstep_endpoint_lanes_resolve_without_bisection():
+    """A lane that fails at rate_lo (impossible SLO) or holds at rate_hi
+    (infinite SLO) resolves in the endpoint round — 0.0 / rate_hi with
+    one / two probes — exactly as the scalar search does."""
+    cat = small_catalog()
+    lanes = [SweepLane("conduit", seed=11, n_sessions=6)]
+    dead = batched_find_saturation(cat, lanes, 1.0, 50.0, 1000.0, iters=4)[0]
+    assert dead.rate_per_sec == 0.0 and dead.bracket == (0.0, 50.0)
+    assert len(dead.probes) == 1
+    easy = batched_find_saturation(cat, lanes, 1e12, 50.0, 1000.0,
+                                   iters=4)[0]
+    assert easy.rate_per_sec == 1000.0 and easy.bracket == (1000.0, 1000.0)
+    assert len(easy.probes) == 2
+
+
+def test_batched_find_saturation_validation():
+    cat = small_catalog()
+    lane = SweepLane("conduit")
+    with pytest.raises(ValueError, match="rate_lo"):
+        batched_find_saturation(cat, [lane], 1e6, 100.0, 50.0)
+    with pytest.raises(ValueError, match="iters"):
+        batched_find_saturation(cat, [lane], 1e6, 50.0, 100.0, iters=0)
+    with pytest.raises(ValueError, match="SweepLane"):
+        batched_find_saturation(cat, [], 1e6, 50.0, 100.0)

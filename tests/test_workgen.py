@@ -162,3 +162,52 @@ def test_catalog_validation_errors():
         SessionCatalog([CatalogEntry("a", tr), CatalogEntry("a", tr)])
     with pytest.raises(ValueError):
         CatalogEntry("bad", tr, weight=0.0)
+
+
+# -- at_rate invariants (what find_saturation's rescaling relies on) -----------
+
+def _realized_rate_per_sec(times_ns):
+    """Empirical arrival rate over a stream's span (first arrival opens
+    the observation window)."""
+    span_s = (times_ns[-1] - times_ns[0]) / 1e9
+    return (len(times_ns) - 1) / span_s
+
+
+def test_superposed_at_rate_preserves_part_proportions():
+    """Rescaling a superposition must scale every component by the same
+    factor: each part's share of the total — nominal *and* realized —
+    is invariant under ``at_rate``.  (A rescale that fed the whole delta
+    to one part would change the traffic mix mid-bisection.)"""
+    base = SuperposedArrivals((
+        PoissonArrivals(rate_per_sec=2000, n_sessions=48, seed=1),
+        PoissonArrivals(rate_per_sec=6000, n_sessions=48, seed=2)))
+    scaled = base.at_rate(2.5 * base.mean_rate_per_sec)
+
+    # nominal shares: exact
+    tot_b = base.mean_rate_per_sec
+    tot_s = scaled.mean_rate_per_sec
+    for pb, ps in zip(base.parts, scaled.parts):
+        assert ps.mean_rate_per_sec / tot_s == \
+            pytest.approx(pb.mean_rate_per_sec / tot_b, rel=1e-12)
+
+    # realized shares: Poisson parts reuse the same hashed uniforms, so
+    # their streams scale exactly and the empirical mix is preserved
+    rb = [_realized_rate_per_sec(p.arrival_times_ns()) for p in base.parts]
+    rs = [_realized_rate_per_sec(p.arrival_times_ns()) for p in scaled.parts]
+    for b, s in zip(rb, rs):
+        assert s / sum(rs) == pytest.approx(b / sum(rb), rel=1e-9)
+
+
+def test_mmpp_at_rate_realized_rate_tracks_nominal():
+    """``at_rate`` on an MMPP scales both state rates (dwell structure
+    untouched); the realized rate of the rescaled stream must track the
+    requested nominal rate — not just the dataclass field."""
+    base = MMPPArrivals(rate_on_per_sec=8000, rate_off_per_sec=2000,
+                        mean_on_ns=5e6, mean_off_ns=5e6, n_sessions=400,
+                        seed=3)
+    for factor in (0.5, 1.0, 3.0):
+        target = factor * base.mean_rate_per_sec
+        p = base.at_rate(target)
+        assert p.mean_rate_per_sec == pytest.approx(target, rel=1e-12)
+        realized = _realized_rate_per_sec(p.arrival_times_ns())
+        assert realized == pytest.approx(target, rel=0.25)

@@ -29,6 +29,14 @@ sweep's first point would), the cyclic GC is disabled during timed runs
 (jax registers a gc callback that would add unrelated noise), and the
 best of ``--repeats`` runs is taken.
 
+This bench doubles as the **telemetry-off overhead guard**: every
+flight-recorder hook site (engine loop, pool acquires, dispatch, FTL
+collector, serving driver — see :mod:`repro.sim.telemetry`) sits on the
+measured path as a single ``is not None`` branch, and all three suites
+run with telemetry off (the default).  A hook that grew real work on the
+off path shows up as an events/sec regression against the committed
+baseline and fails ``--check``.
+
 Usage::
 
   PYTHONPATH=src python -m benchmarks.perf_bench            # full, writes JSON
@@ -134,8 +142,12 @@ def _suites(smoke: bool) -> Dict[str, Callable]:
                                   CatalogEntry("B", b, 1.0)], seed=5)
         arr = PoissonArrivals(rate_per_sec=8000, n_sessions=n_sessions,
                               seed=9)
+        # little_law_warn_tol=inf: the saturating, untrimmed window is
+        # the point here (timing the driver), not steady-state metrics
         simulate_serving(catalog, arr, "conduit",
-                         serving=ServingConfig(keep_session_results=False),
+                         serving=ServingConfig(
+                             keep_session_results=False,
+                             little_law_warn_tol=float("inf")),
                          engine=eng)
         return eng
 

@@ -23,6 +23,8 @@ numbers matter.)
 Profiling: ``--profile`` wraps the selected suites in cProfile and prints
 the top-20 cumulative entries afterwards, so perf work starts from data.
 It forces sequential execution (a profile of worker stubs is useless).
+``--profile-out PATH`` (implies ``--profile``) additionally dumps the
+full pstats file for offline digging (snakeviz, ``pstats.Stats(PATH)``).
 """
 from __future__ import annotations
 
@@ -85,7 +87,8 @@ def _run_one(name: str, smoke: bool) -> Tuple[str, List[str], str, Optional[str]
 
 
 def run_suites(wanted: List[str], smoke: bool = False, jobs: int = 1,
-               profile: bool = False) -> Tuple[List[str], List[str]]:
+               profile: bool = False,
+               profile_out: Optional[str] = None) -> Tuple[List[str], List[str]]:
     """Run ``wanted`` suites; returns ``(csv_rows, failed_names)``.
 
     Output (tables + CSV rows) is assembled in ``wanted`` order for any
@@ -95,6 +98,8 @@ def run_suites(wanted: List[str], smoke: bool = False, jobs: int = 1,
     failed: List[str] = []
 
     profiler = None
+    if profile_out is not None:
+        profile = True
     if profile:
         import cProfile
         jobs = 1
@@ -127,6 +132,9 @@ def run_suites(wanted: List[str], smoke: bool = False, jobs: int = 1,
 
     if profiler is not None:
         import pstats
+        if profile_out is not None:
+            profiler.dump_stats(profile_out)
+            print(f"[benchmarks] full profile written to {profile_out}")
         print("\n===== cProfile (top 20 cumulative) =====")
         pstats.Stats(profiler).sort_stats("cumulative").print_stats(20)
     return csv_rows, failed
@@ -149,12 +157,16 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="wrap the selected suites in cProfile and print "
                          "the top-20 cumulative entries (forces --jobs 1)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the full pstats dump to PATH for offline "
+                         "analysis (implies --profile)")
     args = ap.parse_args()
 
     wanted = (args.only.split(",") if args.only else list(_suite_table()))
     t0 = time.time()
     csv_rows, failed = run_suites(wanted, smoke=args.smoke, jobs=args.jobs,
-                                  profile=args.profile)
+                                  profile=args.profile,
+                                  profile_out=args.profile_out)
     print(f"\n[benchmarks] completed in {time.time()-t0:.0f}s")
     print("\n===== CSV =====")
     for row in csv_rows:

@@ -35,8 +35,13 @@ TRIM_FRACTION = 0.1
 
 def _scfg(rate_per_sec: float, n_sessions: int) -> ServingConfig:
     trim = TRIM_FRACTION * n_sessions / rate_per_sec * 1e9
+    # The curve deliberately sweeps past the saturation knee, and all
+    # points share one trim sized for the fastest rate, so the ragged
+    # Little's-law ratio is expected here (the bench prints it as its
+    # own column) — opt out of the per-run consistency warning.
     return ServingConfig(warmup_ns=trim, cooldown_ns=trim,
-                         keep_session_results=False)
+                         keep_session_results=False,
+                         little_law_warn_tol=float("inf"))
 
 
 def _catalog() -> SessionCatalog:

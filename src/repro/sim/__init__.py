@@ -26,6 +26,10 @@ from repro.sim.sweep import (SweepLane, array_backend,
 from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
                              MixResult, ServingResult, SessionRecord,
                              SimResult, jain_fairness, percentile)
+from repro.sim.telemetry import (CandidateCost, FlightRecorder,
+                                 IntervalSample, OffloadAudit,
+                                 TelemetryConfig, summarize as
+                                 summarize_trace, validate_trace)
 from repro.sim.tenancy import HostIOStream, clone_trace, simulate_mix
 from repro.sim.workgen import (ArrivalProcess, CatalogEntry,
                                DeterministicArrivals, MMPPArrivals,
@@ -48,4 +52,7 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "simulate_serving", "find_saturation",
            "SaturationProbe", "SaturationResult",
            "SweepLane", "batched_find_saturation",
-           "batched_poisson_arrival_times_ns", "array_backend"]
+           "batched_poisson_arrival_times_ns", "array_backend",
+           "TelemetryConfig", "FlightRecorder", "OffloadAudit",
+           "CandidateCost", "IntervalSample", "validate_trace",
+           "summarize_trace"]

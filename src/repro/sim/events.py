@@ -85,6 +85,9 @@ class EventEngine:
         self._seq: int = 0
         self.record = record
         self.log: List[Tuple[float, EventKind]] = []
+        # optional pure-observer flight recorder (repro.sim.telemetry);
+        # attach before run() — the loop hoists it once
+        self.telemetry = None
 
     def schedule(self, time: float, kind: EventKind,
                  handler: Callable[[Any], None],
@@ -115,6 +118,7 @@ class EventEngine:
         """Process events in time order; returns the final clock value."""
         heap = self._heap
         record = self.record
+        tele = self.telemetry
         pop = heappop
         while heap:
             time = heap[0][0]
@@ -126,5 +130,7 @@ class EventEngine:
             self.processed += 1
             if record:
                 self.log.append((self.now, ev[2]))
+            if tele is not None:
+                tele.on_event(self.now, ev[2])
             ev[3](ev[4])
         return self.now

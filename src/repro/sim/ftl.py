@@ -546,6 +546,9 @@ class FTLModel:
         # the host I/O model attaches itself so the suspend throttle can
         # probe the outstanding-command depth (None: throttle never fires)
         self._host_io = None
+        # optional flight recorder (repro.sim.telemetry): GC cycle/copy
+        # spans and suspend instants; pure observer, never books time
+        self.telemetry = None
 
         # accounting
         self.host_pages_written = 0
@@ -711,6 +714,11 @@ class FTLModel:
         chan = die % f.channels
         xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
         t = self.engine.now
+        tele = self.telemetry
+        if tele is not None:
+            tele.ctx = f"gc:die{die}"
+        t0 = t
+        pages0 = self.gc_pages_copied
         dies_pool = self.fabric.dies
         chan_pool = self.fabric.channels
         for pg in range(d.ppb):
@@ -729,6 +737,9 @@ class FTLModel:
         self.gc_energy_nj += f.e_erase_nj_per_block
         if t > self.last_booked_ns:
             self.last_booked_ns = t
+        if tele is not None:
+            tele.on_gc_cycle(die, victim, t0, t,
+                             self.gc_pages_copied - pages0)
         # re-check at cycle completion: keep collecting or go back to sleep
         self.engine.schedule(t, EventKind.GC, self._on_gc, payload=die)
 
@@ -755,9 +766,12 @@ class FTLModel:
                 self._gc_sleep(die)
                 return
             d.gc_victim, d.gc_cursor = victim, 0
+        tele = self.telemetry
         # throttle: yield to a deep host queue before booking anything
         if self._host_qd() >= self.suspend_qd:
             self.gc_suspensions += 1
+            if tele is not None:
+                tele.on_gc_suspend(die, engine.now)
             engine.schedule(engine.now + self.backoff_ns, EventKind.GC,
                             self._on_gc_page, payload=die)
             return
@@ -773,6 +787,8 @@ class FTLModel:
             chan = die % f.channels
             xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
             lpn = d.page_lpn[victim][pg]
+            if tele is not None:
+                tele.ctx = f"gc:die{die}"
             t = self.fabric.dies.acquire_end(engine.now, f.t_read_ns,
                                              unit=die)
             t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
@@ -783,9 +799,13 @@ class FTLModel:
             d.gc_cursor = pg + 1
             if t > self.last_booked_ns:
                 self.last_booked_ns = t
+            if tele is not None:
+                tele.on_gc_copy(die, engine.now, t)
             engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
             return
         # no valid pages left: erase, then move to the next victim
+        if tele is not None:
+            tele.ctx = f"gc:die{die}"
         t = self.fabric.dies.acquire_end(engine.now, f.t_erase_ns, unit=die)
         d.erase(victim)
         self.blocks_erased += 1
@@ -793,6 +813,8 @@ class FTLModel:
         d.gc_victim, d.gc_cursor = None, 0
         if t > self.last_booked_ns:
             self.last_booked_ns = t
+        if tele is not None:
+            tele.on_gc_copy(die, engine.now, t, kind="erase")
         engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
 
     # -- observability --------------------------------------------------------

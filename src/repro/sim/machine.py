@@ -33,7 +33,8 @@ from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
 from repro.sim.events import EventEngine, EventKind
 from repro.sim.servers import Fabric, ServerPool
-from repro.sim.stats import DecisionRecord, SimResult
+from repro.sim.stats import SimResult
+from repro.sim.telemetry import DecisionRecord, TelemetryLike, as_recorder
 
 
 @dataclasses.dataclass
@@ -140,6 +141,9 @@ class Simulation:
 
         # event-driven dispatch state
         self.engine: Optional[EventEngine] = None
+        # flight recorder routed via the fabric (bind() re-reads it): the
+        # dispatch loop's hooks collapse to one branch when unset
+        self._tele = None
         self._idx = 0                       # next instruction to dispatch
         self._prev_decide_end = start_ns    # offloader pipeline cursor
         self._makespan = start_ns
@@ -244,6 +248,7 @@ class Simulation:
         self.buffered.clear()
         self._cursor_iid = 0
         self.engine = None
+        self._tele = None
         self._idx = 0
         self._prev_decide_end = start_ns
         self._makespan = start_ns
@@ -512,6 +517,7 @@ class Simulation:
         dispatch.  Several Simulations sharing one engine + fabric
         interleave their dispatches in global time order."""
         self.engine = engine
+        self._tele = self.fabric.telemetry
         self._idx = 0
         self._prev_decide_end = self.start_ns
         self._makespan = self.start_ns
@@ -574,6 +580,10 @@ class Simulation:
         instr = self._instrs[self._idx]
         self._cursor_iid = instr.iid
         deps_ready = self._deps_ready(instr)
+        tele = self._tele
+        if tele is not None:
+            # attribution for every pool booking this dispatch performs
+            tele.ctx = f"{self.tenant}:{instr.op}#{instr.iid}"
 
         if self._ignores_contention:
             # Ideal (§5.3): zero data-movement latency, zero decision
@@ -593,6 +603,12 @@ class Simulation:
             if self._record_decisions:
                 self.decisions.append(DecisionRecord(
                     instr.iid, instr.op, r, start, start, end, 0.0))
+            if tele is not None:
+                feats = self.policy._feats(instr, self._ideal_view) \
+                    if tele.cfg.audit else None
+                tele.on_dispatch(self.tenant, self.policy.name, instr, r,
+                                 feats, start, start, start, start, start,
+                                 end, 0.0)
             self._after_instr(end)
             return
 
@@ -633,6 +649,13 @@ class Simulation:
         else:
             decision = self.policy.select(instr, view)
             r = decision.resource
+        feats = None
+        if tele is not None and tele.cfg.audit:
+            # decision-time candidate costs for the audit stream: _feats
+            # is the policy's own read-only derivation, taken here —
+            # after the selection, before any booking mutates pool state
+            feats = decision.features if not self._fast_select \
+                else self.policy._feats(instr, view)
 
         # operand movement to the resource's home (overlapped per page)
         ready = max(decide_end, deps_ready)
@@ -719,6 +742,12 @@ class Simulation:
                 instr.iid, instr.op, r, now, start, end, dm_ns,
                 replayed=self._inject_faults
                 and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate))
+        if tele is not None:
+            tele.on_dispatch(
+                self.tenant, self.policy.name, instr, r, feats,
+                now, decide_end, ready, move_end, start, end, dm_ns,
+                replayed=self._inject_faults
+                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate)
         # _after_instr inlined (this branch never ignores contention)
         if end > self._makespan:
             self._makespan = end
@@ -740,6 +769,8 @@ class Simulation:
 
     def _on_epilogue(self, _payload=None) -> None:
         """End of trace: results become visible to the host (§4.4 ii)."""
+        if self._tele is not None:
+            self._tele.ctx = f"{self.tenant}:epilogue"
         makespan = self._makespan
         for pl in self.trace.output_pages:
             for pid in pl:
@@ -777,18 +808,32 @@ class Simulation:
 def simulate(trace: Trace, policy: str | Policy,
              spec: SSDSpec = DEFAULT_SSD,
              config: Optional[SimConfig] = None,
-             record_decisions: Optional[bool] = None) -> SimResult:
+             record_decisions: Optional[bool] = None,
+             telemetry: TelemetryLike = None) -> SimResult:
     """Run one workload trace under one offloading policy.
 
     The single-tenant special case of the event engine; for concurrent
     traces sharing the SSD see :func:`repro.sim.tenancy.simulate_mix`.
     ``record_decisions=False`` is the fast mode (no per-dispatch
     DecisionRecord allocation, identical timing) — overrides the same
-    flag on ``config``.
+    flag on ``config``.  ``telemetry`` takes a
+    :class:`~repro.sim.telemetry.TelemetryConfig` (or a prepared
+    :class:`~repro.sim.telemetry.FlightRecorder`); the recorder observes
+    without perturbing timing and comes back on ``result.telemetry``.
     """
     if isinstance(policy, str):
         policy = make_policy(policy, spec)
     if record_decisions is not None:
         config = dataclasses.replace(config or SimConfig(),
                                      record_decisions=record_decisions)
-    return Simulation(trace, policy, spec, config).run()
+    sim = Simulation(trace, policy, spec, config)
+    tele = as_recorder(telemetry)
+    if tele is None:
+        return sim.run()
+    engine = EventEngine()
+    tele.attach(fabric=sim.fabric, engine=engine)
+    sim.bind(engine)
+    engine.run()
+    res = sim.result()
+    res.telemetry = tele
+    return res

@@ -46,7 +46,7 @@ class Acquisition(NamedTuple):
 
 class ServerPool:
     __slots__ = ("name", "units", "free", "busy_ns", "jobs", "_heap",
-                 "_pending_work", "_single")
+                 "_pending_work", "_single", "tracer")
 
     def __init__(self, name: str, units: int):
         assert units >= 1
@@ -68,6 +68,11 @@ class ServerPool:
         # the heap is then never maintained for them; every reader below
         # must branch on the flag before touching it.
         self._single: bool = units == 1
+        # optional booking observer, set by the flight recorder
+        # (repro.sim.telemetry): called (name, unit, start, end) after
+        # every acquire.  None (the default) costs one predictable
+        # branch per booking.
+        self.tracer = None
 
     # -- min-structure maintenance --------------------------------------------
 
@@ -133,6 +138,8 @@ class ServerPool:
             self._pending_work += end - f
             self.busy_ns += dur
             self.jobs += 1
+            if self.tracer is not None:
+                self.tracer(self.name, 0, start, end)
             return Acquisition(0, start, end)
         if unit is None:
             heap = self._heap
@@ -151,6 +158,8 @@ class ServerPool:
         self._pending_work += end - f
         self.busy_ns += dur
         self.jobs += 1
+        if self.tracer is not None:
+            self.tracer(self.name, unit, start, end)
         return Acquisition(unit, start, end)
 
     def acquire_se(self, ready: float, dur: float,
@@ -168,6 +177,8 @@ class ServerPool:
             self._pending_work += end - f
             self.busy_ns += dur
             self.jobs += 1
+            if self.tracer is not None:
+                self.tracer(self.name, 0, start, end)
             return start, end
         if unit is None:
             heap = self._heap
@@ -186,6 +197,8 @@ class ServerPool:
         self._pending_work += end - f
         self.busy_ns += dur
         self.jobs += 1
+        if self.tracer is not None:
+            self.tracer(self.name, unit, start, end)
         return start, end
 
     def acquire_end(self, ready: float, dur: float,
@@ -202,6 +215,8 @@ class ServerPool:
             self._pending_work += end - f
             self.busy_ns += dur
             self.jobs += 1
+            if self.tracer is not None:
+                self.tracer(self.name, 0, end - dur, end)
             return end
         if unit is None:
             heap = self._heap
@@ -219,6 +234,8 @@ class ServerPool:
         self._pending_work += end - f
         self.busy_ns += dur
         self.jobs += 1
+        if self.tracer is not None:
+            self.tracer(self.name, unit, end - dur, end)
         return end
 
     def peek_start(self, ready: float, unit: Optional[int] = None) -> float:
@@ -246,6 +263,10 @@ class Fabric:
         from repro.core.isa import Resource
         f = spec.flash
         self.spec = spec
+        # optional flight recorder (repro.sim.telemetry): set by
+        # FlightRecorder.attach; tenant Simulations bound to this fabric
+        # read it to route their dispatch hooks
+        self.telemetry = None
         self.pools: Dict = {
             Resource.ISP: ServerPool("isp", spec.isp.compute_cores),
             Resource.PUD: ServerPool("pud", pud_units),

@@ -47,6 +47,7 @@ strict generalization of the batch entry points.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -57,6 +58,7 @@ from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation
 from repro.sim.servers import Fabric
 from repro.sim.stats import ServingResult, SessionRecord
+from repro.sim.telemetry import TelemetryLike, as_recorder
 from repro.sim.tenancy import (HostIOStream, _HostIOModel, build_ftl_model,
                                clone_trace)
 from repro.sim.workgen import ArrivalProcess, PoissonArrivals, SessionCatalog
@@ -79,7 +81,19 @@ class ServingConfig:
     recycles completed :class:`Simulation` objects per catalog entry
     (reset instead of re-cloned — the dominant per-admission allocation);
     the pooled path is bit-identical to fresh construction (tested law),
-    the flag exists as an escape hatch / for the equivalence tests."""
+    the flag exists as an escape hatch / for the equivalence tests.
+
+    ``little_law_warn_tol`` bounds how far the run's Little's-law
+    consistency check (:meth:`~repro.sim.stats.ServingResult.little_law_ratio`,
+    L / λW ≈ 1.0 on a clean steady-state measurement) may drift before
+    :func:`simulate_serving` emits a ``RuntimeWarning``.  Deviations come
+    from window edge effects — sessions straddling the warm-up/cool-down
+    trim, a window too short relative to session latency — and from the
+    engine's lazy booking; the default 0.35 stays quiet on stable,
+    properly-trimmed configurations while flagging windows that are
+    measuring mostly transients.  Runs that probe overload on purpose
+    (the saturation bisection, past-the-knee bench sweeps) suppress or
+    opt out of the warning — pass ``float("inf")`` to disable it."""
 
     max_active_sessions: int = 8
     max_backlog: int = 64
@@ -88,6 +102,7 @@ class ServingConfig:
     record_decisions: bool = False
     keep_session_results: bool = True
     pool_sessions: bool = True
+    little_law_warn_tol: float = 0.35
 
     def __post_init__(self) -> None:
         if self.max_active_sessions < 1:
@@ -96,6 +111,8 @@ class ServingConfig:
             raise ValueError("max_backlog must be >= 0")
         if self.warmup_ns < 0.0 or self.cooldown_ns < 0.0:
             raise ValueError("warmup_ns/cooldown_ns must be >= 0")
+        if self.little_law_warn_tol <= 0.0:
+            raise ValueError("little_law_warn_tol must be > 0")
 
 
 class _ServingDriver:
@@ -114,6 +131,8 @@ class _ServingDriver:
                                if isinstance(policy, str) else policy)
 
         self.active = 0
+        # optional flight recorder (repro.sim.telemetry): session spans
+        self.telemetry = None
         self.backlog: Deque[int] = deque()
         self.n_rejected = 0
         self.n_admitted = 0
@@ -175,6 +194,9 @@ class _ServingDriver:
 
     def _on_arrival(self, sid: int) -> None:
         now = self.engine.now
+        tele = self.telemetry
+        if tele is not None:
+            tele.on_session_arrival(sid, self.entries[sid].name, now)
         if self.active < self.scfg.max_active_sessions:
             self._mark(now, +1)
             self._admit(sid)
@@ -184,6 +206,8 @@ class _ServingDriver:
         else:
             self.records[sid].rejected = True
             self.n_rejected += 1
+            if tele is not None:
+                tele.on_session_reject(sid, self.entries[sid].name, now)
 
     def _admit(self, sid: int) -> None:
         rec = self.records[sid]
@@ -194,6 +218,8 @@ class _ServingDriver:
         rec.admit_ns = now
         self.active += 1
         self.n_admitted += 1
+        if self.telemetry is not None:
+            self.telemetry.on_session_admit(sid, now)
         pooled = self._sim_pool.get(entry.name)
         if pooled:
             sim = pooled.pop()
@@ -208,6 +234,8 @@ class _ServingDriver:
     def _on_done(self, sim: Simulation, sid: int) -> None:
         rec = self.records[sid]
         rec.done_ns = sim._makespan
+        if self.telemetry is not None:
+            self.telemetry.on_session_done(sid, rec.kind, rec.done_ns)
         self.n_completed += 1
         self.active -= 1
         self._mark(self.engine.now, -1)
@@ -269,7 +297,8 @@ def simulate_serving(catalog: SessionCatalog,
                      serving: Optional[ServingConfig] = None,
                      io_stream: Optional[HostIOStream] = None,
                      ftl: Optional[FTLConfig] = None,
-                     engine: Optional[EventEngine] = None) -> ServingResult:
+                     engine: Optional[EventEngine] = None,
+                     telemetry: TelemetryLike = None) -> ServingResult:
     """Serve an open-loop session stream on one SSD; see module docstring.
 
     ``policy`` is the run-wide offloading policy (catalog entries may
@@ -283,7 +312,15 @@ def simulate_serving(catalog: SessionCatalog,
     ``offered == completed + rejected`` holds on the result.
     ``ServingConfig.record_decisions`` governs the per-session
     DecisionRecord logging even when a ``config`` is passed (serving
-    admits far too many sessions to default to full logging)."""
+    admits far too many sessions to default to full logging).
+    ``telemetry`` attaches a :class:`~repro.sim.telemetry.FlightRecorder`
+    across the engine, fabric, FTL, host-I/O model and session lifecycle;
+    the recorder comes back on ``result.telemetry``.
+
+    When the run's Little's-law consistency ratio deviates from 1.0 by
+    more than ``ServingConfig.little_law_warn_tol``, a ``RuntimeWarning``
+    is emitted: the steady-state numbers are then dominated by window
+    edge effects and should not be trusted as sustained-load metrics."""
     scfg = serving or ServingConfig()
     cfg = dataclasses.replace(config or SimConfig(),
                               record_decisions=scfg.record_decisions)
@@ -307,15 +344,37 @@ def simulate_serving(catalog: SessionCatalog,
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
+    tele = as_recorder(telemetry)
+    if tele is not None:
+        tele.attach(fabric=fabric, engine=engine)
     driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
                             scfg, fabric, engine)
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
                  if ftl is not None else None)
     io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
           if io_stream is not None else None)
+    if tele is not None:
+        tele.attach_serving(driver)
+        if ftl_model is not None:
+            tele.attach_ftl(ftl_model)
+        if io is not None:
+            tele.attach_host_io(io)
     engine.run()
     name = policy if isinstance(policy, str) else policy.name
-    return driver.result(name, io, ftl_model)
+    res = driver.result(name, io, ftl_model)
+    res.telemetry = tele
+    if res.session_latencies_ns:
+        ratio = res.little_law_ratio()
+        tol = scfg.little_law_warn_tol
+        if not (abs(ratio - 1.0) <= tol):
+            warnings.warn(
+                f"little_law_ratio {ratio:.3f} deviates from 1.0 beyond "
+                f"tolerance {tol:g}: the measurement window is dominated "
+                "by edge effects (sessions straddling warmup/cooldown, or "
+                "a window short relative to session latency) — widen the "
+                "window before trusting the steady-state metrics",
+                RuntimeWarning, stacklevel=2)
+    return res
 
 
 # -- saturation-point finder ---------------------------------------------------
@@ -368,9 +427,16 @@ def _saturation_probe(catalog: SessionCatalog, base: ArrivalProcess,
     :class:`SaturationProbe`, return sustainability.  Shared verbatim by
     :func:`find_saturation` and the batched lockstep search in
     :mod:`repro.sim.sweep` so the two can never drift apart."""
-    res = simulate_serving(catalog, base.at_rate(rate), policy,
-                           spec=spec, config=config, serving=scfg,
-                           io_stream=io_stream, ftl=ftl)
+    # the bisection probes unsustainable rates on purpose: past the knee
+    # the Little's-law ratio always degrades, so the edge-effect warning
+    # carries no information here — sustainability is judged on
+    # rejections and the p99 directly
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message="little_law_ratio",
+                                category=RuntimeWarning)
+        res = simulate_serving(catalog, base.at_rate(rate), policy,
+                               spec=spec, config=config, serving=scfg,
+                               io_stream=io_stream, ftl=ftl)
     if res.n_rejected > 0:
         # rejections alone prove the rate unsustainable — even when
         # every in-window arrival bounced and no latency was measured

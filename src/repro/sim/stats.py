@@ -12,6 +12,10 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.isa import Resource
+# DecisionRecord's definition lives with the rest of the decision-audit
+# machinery in repro.sim.telemetry; re-exported here so existing callers
+# (`from repro.sim.stats import DecisionRecord`) keep working.
+from repro.sim.telemetry import DecisionRecord
 
 
 def percentile(values: List[float], p: float) -> float:
@@ -28,18 +32,6 @@ def percentile(values: List[float], p: float) -> float:
     s = sorted(values)
     k = max(0, min(len(s) - 1, math.ceil(p / 100.0 * len(s)) - 1))
     return s[k]
-
-
-@dataclasses.dataclass
-class DecisionRecord:
-    iid: int
-    op: str
-    resource: Resource
-    t_decide: float
-    t_start: float
-    t_end: float
-    dm_ns: float
-    replayed: bool = False
 
 
 @dataclasses.dataclass
@@ -60,9 +52,11 @@ class SimResult:
     colocations: int
     tenant: str = ""                 # tenant id in a simulate_mix run
     start_ns: float = 0.0            # arrival offset in a simulate_mix run
-    # per-op dispatch-to-completion latencies, populated even when full
-    # DecisionRecord logging is disabled (SimConfig.record_decisions=False)
+    # per-op dispatch-to-completion latencies (floats, always cheap);
+    # richer per-dispatch detail lives in the telemetry audit stream
     op_latencies_ns: Optional[List[float]] = None
+    # FlightRecorder when the run was invoked with telemetry=...
+    telemetry: Optional[object] = None
 
     @property
     def total_energy_nj(self) -> float:
@@ -312,6 +306,8 @@ class ServingResult:
     host_io: Optional[HostIOStats] = None
     session_results: Optional[List[SimResult]] = None  # per-session detail
     ftl: Optional[FTLStats] = None   # present when an FTL was configured
+    # FlightRecorder when the run was invoked with telemetry=...
+    telemetry: Optional[object] = None
 
     # -- conservation ---------------------------------------------------------
 
@@ -433,6 +429,8 @@ class MixResult:
     fabric_busy_ns: Dict[str, float]
     makespan_ns: float               # end of all tenants + host I/O
     ftl: Optional["FTLStats"] = None  # present when an FTL was configured
+    # FlightRecorder when the run was invoked with telemetry=...
+    telemetry: Optional[object] = None
 
     def tenant(self, name: str) -> SimResult:
         for r in self.tenants:

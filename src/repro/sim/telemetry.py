@@ -1,0 +1,783 @@
+"""Flight recorder: engine tracing, offload-decision audit, interval metrics.
+
+The simulator so far only reports *aggregate* outcomes (makespans,
+percentiles, counters).  This module adds a :class:`FlightRecorder` that
+hooks into the event engine, the server pools, the dispatch loop, the FTL
+collector and the serving driver as a **pure observer** — zero overhead
+when off (the default: every hook site is one ``is not None`` branch),
+and bit-identical simulation results when on (the recorder never books
+time, never mutates simulation state, and its sampler events carry
+pure-read handlers; ``tests/test_telemetry.py`` pins the golden digests
+with telemetry fully enabled).
+
+Three products from one hook layer:
+
+1. **Chrome-trace / Perfetto spans** — one track per pool unit (every
+   die, channel, compute core, the DRAM bus, PCIe, the offloader), GC
+   cycle/copy/erase spans per die, session-lifecycle async spans, and
+   host-I/O request spans.  Drop the exported JSON into
+   ``chrome://tracing`` or https://ui.perfetto.dev.
+2. **Offload-decision audit stream** — per dispatch, the six cost
+   features (Table 1) for *every* candidate resource, each candidate's
+   Eqn-1 total, and the chosen resource; :meth:`OffloadAudit.explain`
+   renders one decision end-to-end.  This stream subsumes the legacy
+   ``DecisionRecord`` logging: the record type now lives here (re-exported
+   by :mod:`repro.sim.stats` for compatibility) and
+   ``SimConfig.record_decisions`` keeps its exact semantics as the thin
+   always-available slice of the audit stream.
+3. **Interval time-series metrics** — sampled on TIMER events every
+   ``TelemetryConfig.interval_ns``: per-pool utilization (busy-time delta
+   over the interval), queue depth (pending booked work), GC-busy die
+   count, serving backlog/active sessions, and a sliding-window p99 of
+   per-op latency; plus a per-instruction latency breakdown (decide vs
+   data movement vs queue wait vs compute) aggregated by (op, resource).
+
+Trace schema (``conduit-flight-recorder/v1``)
+--------------------------------------------
+
+The export is standard Chrome Trace Event JSON (object form)::
+
+    {
+      "traceEvents": [...],          # ts/dur in MICROseconds
+      "displayTimeUnit": "ns",
+      "otherData": {
+        "schema": "conduit-flight-recorder/v1",
+        "event_counts": {kind: n},           # engine events by EventKind
+        "audit": [ {tenant, iid, op, policy, t_decide_ns, chosen,
+                    chosen_total_ns, replayed, candidates: [
+                      {resource, supported, latency_comp_ns,
+                       latency_dm_ns, delay_dd_ns, delay_queue_ns,
+                       total_ns} ]} ],
+        "intervals": [ {t_ns, utilization: {pool: x}, queue_depth_ns:
+                        {pool: ns}, gc_active_dies, backlog,
+                        active_sessions, p99_op_ns} ],
+        "breakdown": [ {op, resource, count, decide_ns, dm_ns,
+                        queue_ns, compute_ns, total_ns} ],   # sums
+        "dropped_spans": n, "dropped_audit": n   # loud truncation counts
+      }
+    }
+
+``traceEvents`` uses five phases: ``"X"`` complete spans (pool bookings
+on pid 1 "fabric", GC activity on pid 2 "ftl-gc"), ``"b"``/``"e"`` async
+spans (sessions on pid 3, host I/O on pid 4 — every ``b`` has a matching
+``e``, including rejected sessions), ``"i"`` instants (admissions,
+rejections, GC suspends), ``"C"`` counters (pid 5 "metrics": the interval
+samples, rendered as counter tracks by Perfetto), and ``"M"`` metadata
+naming processes/threads.  :func:`validate_trace` checks all of this
+structurally; the ``summarize``/``validate`` CLI::
+
+    python -m repro.sim.telemetry summarize trace.json
+    python -m repro.sim.telemetry validate  trace.json
+
+Wiring: pass ``telemetry=TelemetryConfig(...)`` (or a ``FlightRecorder``)
+to :func:`repro.sim.machine.simulate`,
+:func:`repro.sim.tenancy.simulate_mix` or
+:func:`repro.sim.serving.simulate_serving`; the recorder comes back on
+``result.telemetry``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import sys
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, TextIO,
+                    Tuple, Union)
+
+from repro.core.isa import Resource
+from repro.sim.events import EventEngine, EventKind
+
+SCHEMA = "conduit-flight-recorder/v1"
+
+# fixed Chrome-trace process ids (named via "M" metadata on export)
+PID_FABRIC = 1      # one thread per (pool, unit): every booking is a span
+PID_FTL = 2         # one thread per die: GC cycle / copy / erase spans
+PID_SESSIONS = 3    # async b/e per session (arrival -> done/reject)
+PID_HOST_IO = 4     # async b/e per host request (arrival -> complete)
+PID_METRICS = 5     # "C" counter tracks fed by the interval sampler
+
+_NS_TO_US = 1e-3    # Chrome-trace ts/dur are microseconds
+
+
+@dataclasses.dataclass
+class DecisionRecord:
+    """One dispatch outcome — the always-available slice of the audit
+    stream (:class:`OffloadAudit` is the telemetry-enabled superset with
+    per-candidate costs).  ``SimConfig.record_decisions`` governs whether
+    the simulator keeps one of these per dispatch; re-exported by
+    :mod:`repro.sim.stats` for existing callers."""
+
+    iid: int
+    op: str
+    resource: Resource
+    t_decide: float
+    t_start: float
+    t_end: float
+    dm_ns: float
+    replayed: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateCost:
+    """One candidate resource's six-feature cost vector at decision time
+    (Table 1 / Eqn 1): what the policy saw, per resource it considered."""
+
+    resource: str
+    supported: bool
+    latency_comp_ns: float
+    latency_dm_ns: float
+    delay_dd_ns: float
+    delay_queue_ns: float
+    total_ns: float          # latency_comp + latency_dm + max(dd, queue)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadAudit:
+    """One offloading decision end-to-end: the six cost features per
+    candidate, every candidate's Eqn-1 total, and the chosen resource."""
+
+    tenant: str
+    iid: int
+    op: str
+    policy: str
+    t_decide_ns: float
+    chosen: str
+    chosen_total_ns: float
+    candidates: Tuple[CandidateCost, ...]
+    replayed: bool = False
+
+    def explain(self) -> str:
+        """Render the decision as a table: features -> costs -> choice."""
+        lines = [
+            f"dispatch iid={self.iid} op={self.op!r} tenant={self.tenant!r}"
+            f" policy={self.policy} at t={self.t_decide_ns:.0f} ns",
+            f"  {'resource':<10} {'sup':<4} {'comp_ns':>12} {'dm_ns':>12}"
+            f" {'dd_ns':>12} {'queue_ns':>12} {'total_ns':>12}",
+        ]
+        for c in self.candidates:
+            mark = "->" if c.resource == self.chosen else "  "
+            total = "inf" if math.isinf(c.total_ns) else f"{c.total_ns:.0f}"
+            comp = "inf" if math.isinf(c.latency_comp_ns) \
+                else f"{c.latency_comp_ns:.0f}"
+            lines.append(
+                f"{mark}{c.resource:<10} {str(c.supported):<4} {comp:>12}"
+                f" {c.latency_dm_ns:>12.0f} {c.delay_dd_ns:>12.0f}"
+                f" {c.delay_queue_ns:>12.0f} {total:>12}")
+        lines.append(
+            f"  chosen: {self.chosen}"
+            f" (total {self.chosen_total_ns:.0f} ns"
+            f"{', replayed on fault' if self.replayed else ''})")
+        return "\n".join(lines)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "tenant": self.tenant, "iid": self.iid, "op": self.op,
+            "policy": self.policy, "t_decide_ns": self.t_decide_ns,
+            "chosen": self.chosen, "chosen_total_ns": self.chosen_total_ns,
+            "replayed": self.replayed,
+            "candidates": [c.as_dict() for c in self.candidates],
+        }
+
+
+@dataclasses.dataclass
+class IntervalSample:
+    """One sampler tick: the drive's state over the last interval."""
+
+    t_ns: float
+    utilization: Dict[str, float]      # pool -> busy delta / interval
+    queue_depth_ns: Dict[str, float]   # pool -> pending booked work
+    gc_active_dies: int
+    backlog: int
+    active_sessions: int
+    p99_op_ns: float                   # sliding-window per-op p99
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """What the flight recorder captures.
+
+    ``spans`` drives product (1) (pool/GC/session/IO spans), ``audit``
+    product (2) (per-candidate cost vectors — recomputed read-only from
+    the policy's own feature derivation, so enabling it cannot perturb
+    the decision), ``interval_ns > 0`` product (3) (the TIMER sampler;
+    0 disables sampling).  ``sliding_window`` sizes the p99 window;
+    ``max_spans`` / ``max_audit`` cap memory with *loud* truncation —
+    the export carries ``dropped_spans`` / ``dropped_audit`` counts and
+    ``summarize`` reports them, never silently."""
+
+    spans: bool = True
+    audit: bool = True
+    interval_ns: float = 0.0
+    sliding_window: int = 512
+    max_spans: int = 200_000
+    max_audit: int = 100_000
+
+    def __post_init__(self) -> None:
+        if self.interval_ns < 0.0:
+            raise ValueError("interval_ns must be >= 0 (0 = sampler off)")
+        if self.sliding_window < 1:
+            raise ValueError("sliding_window must be >= 1")
+        if self.max_spans < 1 or self.max_audit < 1:
+            raise ValueError("max_spans/max_audit must be >= 1")
+
+
+TelemetryLike = Union[None, bool, TelemetryConfig, "FlightRecorder"]
+
+
+def as_recorder(telemetry: TelemetryLike) -> Optional["FlightRecorder"]:
+    """Normalize the ``telemetry=`` argument of the simulate entry points:
+    ``None``/``False`` -> no recorder, ``True`` -> default config,
+    a :class:`TelemetryConfig` -> fresh recorder, a recorder -> itself."""
+    if telemetry is None or telemetry is False:
+        return None
+    if telemetry is True:
+        return FlightRecorder()
+    if isinstance(telemetry, TelemetryConfig):
+        return FlightRecorder(telemetry)
+    if isinstance(telemetry, FlightRecorder):
+        return telemetry
+    raise TypeError(f"telemetry must be None/bool/TelemetryConfig/"
+                    f"FlightRecorder, got {type(telemetry).__name__}")
+
+
+class FlightRecorder:
+    """Pure-observer recorder for one simulation run.
+
+    Attach with :meth:`attach` (fabric and/or engine), plus
+    :meth:`attach_ftl` / :meth:`attach_host_io` / :meth:`attach_serving`
+    for the optional subsystems; the entry points in
+    :mod:`repro.sim.machine` / :mod:`repro.sim.tenancy` /
+    :mod:`repro.sim.serving` do all of this when given ``telemetry=``.
+
+    Invariants the hook sites rely on (and the golden tests pin):
+
+    * no method ever books pool time or mutates engine/simulation state —
+      sampler TIMER events only *read* (pool busy/pending probes and the
+      registered lambdas), so interleaving them shifts event sequence
+      numbers without changing any simulated timestamp;
+    * ``ctx`` is written by the handler that is about to book pool time
+      (dispatch, epilogue, GC, host I/O) and read by the pool tracer to
+      attribute the booking's span — it never feeds back into simulation.
+    """
+
+    def __init__(self, config: Optional[TelemetryConfig] = None):
+        self.cfg = config or TelemetryConfig()
+        #: attribution label for the next pool booking (set by handlers)
+        self.ctx: Optional[str] = None
+
+        # product 1: spans
+        self.spans: List[dict] = []          # "X" on fabric/ftl pids
+        self.async_events: List[dict] = []   # "b"/"e"/"i"
+        self.counters: List[dict] = []       # "C" from the sampler
+        self.dropped_spans = 0
+        self._meta: List[dict] = []
+        self._tids: Dict[Tuple[int, str], int] = {}
+
+        # product 2: audit + breakdown
+        self.audit: List[OffloadAudit] = []
+        self.dropped_audit = 0
+        # (op, resource) -> [count, decide, dm, queue, compute, total] sums
+        self.breakdown: Dict[Tuple[str, str], List[float]] = {}
+
+        # product 3: interval samples
+        self.intervals: List[IntervalSample] = []
+        self.sample_probes: Dict[str, Callable[[], float]] = {}
+        self._latwin: Deque[float] = deque(maxlen=self.cfg.sliding_window)
+
+        self.event_counts: Dict[str, int] = {}
+        self._engine: Optional[EventEngine] = None
+        self._fabric = None
+        self._prev_busy: Dict[str, float] = {}
+        self._prev_t = 0.0
+        self._sampler_on = False
+
+    # -- attachment -----------------------------------------------------------
+
+    def attach(self, fabric=None, engine: Optional[EventEngine] = None
+               ) -> "FlightRecorder":
+        """Hook into a fabric (pool-booking tracer) and/or engine (event
+        counts + interval sampler).  Idempotent; returns self."""
+        if fabric is not None:
+            self._fabric = fabric
+            fabric.telemetry = self
+            if self.cfg.spans:
+                tracer = self._on_booking
+                for p in fabric.all_pools():
+                    p.tracer = tracer
+        if engine is not None:
+            self._engine = engine
+            engine.telemetry = self
+        self._start_sampler()
+        return self
+
+    def attach_ftl(self, ftl_model) -> None:
+        """Register the FTL: GC span hooks plus the gc-busy sampler probe."""
+        ftl_model.telemetry = self
+        self.sample_probes["gc_active_dies"] = \
+            lambda: ftl_model.gc_active_dies
+
+    def attach_host_io(self, io_model) -> None:
+        """Register the host I/O model for request-lifecycle spans."""
+        io_model.telemetry = self
+
+    def attach_serving(self, driver) -> None:
+        """Register the serving driver: session-lifecycle spans plus the
+        backlog / active-session sampler probes."""
+        driver.telemetry = self
+        self.sample_probes["backlog"] = lambda: len(driver.backlog)
+        self.sample_probes["active_sessions"] = lambda: driver.active
+
+    def _start_sampler(self) -> None:
+        eng = self._engine
+        if (self._sampler_on or eng is None or self._fabric is None
+                or self.cfg.interval_ns <= 0.0):
+            return
+        self._sampler_on = True
+        self._prev_busy = {p.name: p.busy_ns
+                           for p in self._fabric.all_pools()}
+        self._prev_t = eng.now
+        eng.schedule(eng.now + self.cfg.interval_ns, EventKind.TIMER,
+                     self._on_sample)
+
+    # -- engine hook ----------------------------------------------------------
+
+    def on_event(self, t: float, kind: EventKind) -> None:
+        """Called by the engine run loop (and the host-I/O burst batcher,
+        which mirrors the loop's bookkeeping) for every processed event."""
+        c = self.event_counts
+        k = kind.value
+        c[k] = c.get(k, 0) + 1
+
+    # -- pool-booking tracer (product 1) --------------------------------------
+
+    def _tid(self, pid: int, name: str) -> int:
+        key = (pid, name)
+        t = self._tids.get(key)
+        if t is None:
+            t = len(self._tids) + 1
+            self._tids[key] = t
+            self._meta.append({"ph": "M", "name": "thread_name",
+                               "pid": pid, "tid": t,
+                               "args": {"name": name}})
+        return t
+
+    def _on_booking(self, pool_name: str, unit: int, start: float,
+                    end: float) -> None:
+        """ServerPool tracer: one "X" span per acquire on the unit's
+        track, named by the current ``ctx`` attribution."""
+        if len(self.spans) >= self.cfg.max_spans:
+            self.dropped_spans += 1
+            return
+        self.spans.append({
+            "ph": "X", "pid": PID_FABRIC,
+            "tid": self._tid(PID_FABRIC, f"{pool_name}/{unit}"),
+            "name": self.ctx or "?",
+            "ts": start * _NS_TO_US, "dur": (end - start) * _NS_TO_US,
+        })
+
+    def _gc_span(self, die: int, name: str, t0: float, t1: float,
+                 args: Optional[dict] = None) -> None:
+        if len(self.spans) >= self.cfg.max_spans:
+            self.dropped_spans += 1
+            return
+        ev = {"ph": "X", "pid": PID_FTL,
+              "tid": self._tid(PID_FTL, f"die{die}"),
+              "name": name, "ts": t0 * _NS_TO_US,
+              "dur": (t1 - t0) * _NS_TO_US}
+        if args:
+            ev["args"] = args
+        self.spans.append(ev)
+
+    # -- dispatch hook (products 2 + 3) ---------------------------------------
+
+    def on_dispatch(self, tenant: str, policy: str, instr, resource,
+                    feats, t_decide: float, decide_end: float,
+                    ready: float, move_end: float, start: float,
+                    end: float, dm_ns: float,
+                    replayed: bool = False) -> None:
+        """Called once per dispatched instruction, after all bookings.
+
+        ``feats`` is the per-candidate :class:`~repro.core.cost.Features`
+        dict (None when the audit product is off) — computed by the
+        policy's own read-only ``_feats`` derivation right after the
+        selection, before any booking mutated pool state, so it is the
+        exact decision-time view."""
+        lat = end - t_decide
+        self._latwin.append(lat)
+        rname = resource.value
+        key = (instr.op, rname)
+        row = self.breakdown.get(key)
+        if row is None:
+            row = self.breakdown[key] = [0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        row[0] += 1
+        row[1] += decide_end - t_decide      # decision overhead window
+        row[2] += move_end - ready           # operand data movement
+        row[3] += start - move_end           # queue wait at the exec pool
+        row[4] += end - start                # compute occupancy
+        row[5] += lat
+        if feats is None:
+            return
+        if len(self.audit) >= self.cfg.max_audit:
+            self.dropped_audit += 1
+            return
+        cands = tuple(
+            CandidateCost(r.value, f.supported, f.latency_comp,
+                          f.latency_dm, f.delay_dd, f.delay_queue, f.total)
+            for r, f in feats.items())
+        chosen = feats.get(resource)
+        self.audit.append(OffloadAudit(
+            tenant=tenant, iid=instr.iid, op=instr.op, policy=policy,
+            t_decide_ns=t_decide, chosen=rname,
+            chosen_total_ns=(chosen.total if chosen is not None
+                             else float("nan")),
+            candidates=cands, replayed=replayed))
+
+    # -- GC hooks (product 1) -------------------------------------------------
+
+    def on_gc_cycle(self, die: int, victim: int, t0: float, t1: float,
+                    pages_copied: int) -> None:
+        if self.cfg.spans:
+            self._gc_span(die, f"gc-cycle b{victim}", t0, t1,
+                          {"pages_copied": pages_copied})
+
+    def on_gc_copy(self, die: int, t0: float, t1: float,
+                   kind: str = "copy") -> None:
+        if self.cfg.spans:
+            self._gc_span(die, f"gc-{kind}", t0, t1)
+
+    def on_gc_suspend(self, die: int, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "i", "pid": PID_FTL,
+                "tid": self._tid(PID_FTL, f"die{die}"),
+                "name": "gc-suspend", "ts": t * _NS_TO_US, "s": "t"})
+
+    # -- session hooks (product 1) --------------------------------------------
+
+    def on_session_arrival(self, sid: int, kind: str, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "b", "cat": "session", "id": sid,
+                "pid": PID_SESSIONS, "tid": 0,
+                "name": f"session:{kind}", "ts": t * _NS_TO_US})
+
+    def on_session_admit(self, sid: int, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "i", "pid": PID_SESSIONS, "tid": 0,
+                "name": f"admit s{sid}", "ts": t * _NS_TO_US, "s": "t"})
+
+    def on_session_done(self, sid: int, kind: str, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "e", "cat": "session", "id": sid,
+                "pid": PID_SESSIONS, "tid": 0,
+                "name": f"session:{kind}", "ts": t * _NS_TO_US})
+
+    def on_session_reject(self, sid: int, kind: str, t: float) -> None:
+        # close the async span so b/e stay balanced, and mark the bounce
+        if self.cfg.spans:
+            ts = t * _NS_TO_US
+            self.async_events.append({
+                "ph": "e", "cat": "session", "id": sid,
+                "pid": PID_SESSIONS, "tid": 0,
+                "name": f"session:{kind}", "ts": ts,
+                "args": {"rejected": True}})
+            self.async_events.append({
+                "ph": "i", "pid": PID_SESSIONS, "tid": 0,
+                "name": f"reject s{sid}", "ts": ts, "s": "t"})
+
+    # -- host-I/O hooks (product 1) -------------------------------------------
+
+    def on_io_issue(self, req: int, arrival_ns: float, is_read: bool,
+                    die: int) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "b", "cat": "host_io", "id": req,
+                "pid": PID_HOST_IO, "tid": 0,
+                "name": f"io:{'read' if is_read else 'write'}",
+                "ts": arrival_ns * _NS_TO_US, "args": {"die": die}})
+
+    def on_io_complete(self, req: int, is_read: bool, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "e", "cat": "host_io", "id": req,
+                "pid": PID_HOST_IO, "tid": 0,
+                "name": f"io:{'read' if is_read else 'write'}",
+                "ts": t * _NS_TO_US})
+
+    # -- interval sampler (product 3) -----------------------------------------
+
+    def _on_sample(self, _payload=None) -> None:
+        """TIMER handler: sample, emit counters, re-arm while work remains.
+
+        Pure reads only — pool busy/pending probes and the registered
+        lambdas never mutate simulation state, so the extra TIMER events
+        shift sequence numbers without changing any simulated timestamp
+        (the telemetry-on golden-digest law)."""
+        eng = self._engine
+        now = eng.now
+        dt = now - self._prev_t
+        util: Dict[str, float] = {}
+        qdepth: Dict[str, float] = {}
+        prev = self._prev_busy
+        for p in self._fabric.all_pools():
+            busy = p.busy_ns
+            if dt > 0.0:
+                # busy time accrues at (lazy) booking time, so a heavily
+                # booked interval can read > 1.0 — same caveat as the
+                # serving window utilization
+                util[p.name] = (busy - prev.get(p.name, 0.0)) \
+                    / (dt * p.units)
+            prev[p.name] = busy
+            qdepth[p.name] = p.pending_work_ns(now)
+        self._prev_t = now
+        probes = self.sample_probes
+        gc_dies = int(probes["gc_active_dies"]()) \
+            if "gc_active_dies" in probes else 0
+        backlog = int(probes["backlog"]()) if "backlog" in probes else 0
+        active = int(probes["active_sessions"]()) \
+            if "active_sessions" in probes else 0
+        p99 = _p99(self._latwin)
+        self.intervals.append(IntervalSample(
+            t_ns=now, utilization=util, queue_depth_ns=qdepth,
+            gc_active_dies=gc_dies, backlog=backlog,
+            active_sessions=active, p99_op_ns=p99))
+        ts = now * _NS_TO_US
+        counters = self.counters
+        if util:
+            counters.append({"ph": "C", "pid": PID_METRICS, "tid": 0,
+                             "name": "utilization", "ts": ts,
+                             "args": {k: round(v, 4)
+                                      for k, v in util.items()}})
+        counters.append({"ph": "C", "pid": PID_METRICS, "tid": 0,
+                         "name": "queue_depth_ns", "ts": ts,
+                         "args": {k: round(v, 1)
+                                  for k, v in qdepth.items()}})
+        counters.append({"ph": "C", "pid": PID_METRICS, "tid": 0,
+                         "name": "drive", "ts": ts,
+                         "args": {"gc_active_dies": gc_dies,
+                                  "backlog": backlog,
+                                  "active_sessions": active,
+                                  "p99_op_ns": p99}})
+        # re-arm only while the run is live: the sampler must not keep an
+        # otherwise-drained engine spinning (runs end when the heap does)
+        if not eng.empty():
+            eng.schedule(now + self.cfg.interval_ns, EventKind.TIMER,
+                         self._on_sample)
+
+    # -- export ---------------------------------------------------------------
+
+    def breakdown_rows(self) -> List[Dict[str, object]]:
+        """Per-(op, resource) latency breakdown — summed ns per phase."""
+        rows = []
+        for (op, res), row in sorted(self.breakdown.items()):
+            rows.append({"op": op, "resource": res, "count": int(row[0]),
+                         "decide_ns": row[1], "dm_ns": row[2],
+                         "queue_ns": row[3], "compute_ns": row[4],
+                         "total_ns": row[5]})
+        return rows
+
+    def chrome_trace(self) -> Dict[str, object]:
+        """Assemble the full Chrome-trace object (see module docstring)."""
+        events: List[dict] = [
+            {"ph": "M", "name": "process_name", "pid": PID_FABRIC,
+             "args": {"name": "fabric"}},
+            {"ph": "M", "name": "process_name", "pid": PID_FTL,
+             "args": {"name": "ftl-gc"}},
+            {"ph": "M", "name": "process_name", "pid": PID_SESSIONS,
+             "args": {"name": "sessions"}},
+            {"ph": "M", "name": "process_name", "pid": PID_HOST_IO,
+             "args": {"name": "host-io"}},
+            {"ph": "M", "name": "process_name", "pid": PID_METRICS,
+             "args": {"name": "metrics"}},
+        ]
+        events += self._meta
+        events += self.spans
+        events += self.async_events
+        events += self.counters
+        return {
+            "traceEvents": events,
+            "displayTimeUnit": "ns",
+            "otherData": {
+                "schema": SCHEMA,
+                "event_counts": dict(self.event_counts),
+                "audit": [a.as_dict() for a in self.audit],
+                "intervals": [s.as_dict() for s in self.intervals],
+                "breakdown": self.breakdown_rows(),
+                "dropped_spans": self.dropped_spans,
+                "dropped_audit": self.dropped_audit,
+            },
+        }
+
+    def export(self, path: str) -> Dict[str, object]:
+        """Write the Chrome-trace JSON to ``path``; returns the object."""
+        obj = self.chrome_trace()
+        with open(path, "w") as f:
+            json.dump(obj, f)
+        return obj
+
+
+def _p99(values) -> float:
+    """Nearest-rank p99 over the sliding window (0.0 when empty)."""
+    if not values:
+        return 0.0
+    s = sorted(values)
+    k = max(0, min(len(s) - 1, math.ceil(0.99 * len(s)) - 1))
+    return s[k]
+
+
+# -- validation / summary ------------------------------------------------------
+
+_LEGAL_PH = frozenset("XMbeiC")
+
+
+def validate_trace(obj: Any) -> List[str]:
+    """Structural validation of an exported trace; returns error strings
+    (empty = valid).  Checks the envelope, the schema tag, every event's
+    phase/timestamps, non-negative span durations, and b/e balance per
+    (cat, id) — everything :func:`summarize` relies on."""
+    errors: List[str] = []
+    if not isinstance(obj, dict):
+        return [f"trace must be a JSON object, got {type(obj).__name__}"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        errors.append("missing/invalid traceEvents list")
+        events = []
+    other = obj.get("otherData")
+    if not isinstance(other, dict):
+        errors.append("missing/invalid otherData object")
+        other = {}
+    schema = other.get("schema")
+    if schema != SCHEMA:
+        errors.append(f"otherData.schema is {schema!r}, expected {SCHEMA!r}")
+    open_async: Dict[Tuple[str, Any], int] = {}
+    for n, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event #{n}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _LEGAL_PH:
+            errors.append(f"event #{n}: illegal ph {ph!r}")
+            continue
+        if ph != "M":
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)):
+                errors.append(f"event #{n} ({ph}): non-numeric ts {ts!r}")
+            if "pid" not in ev:
+                errors.append(f"event #{n} ({ph}): missing pid")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event #{n} (X): bad dur {dur!r}")
+        elif ph in "be":
+            key = (ev.get("cat"), ev.get("id"))
+            if key[0] is None or key[1] is None:
+                errors.append(f"event #{n} ({ph}): missing cat/id")
+                continue
+            if ph == "b":
+                open_async[key] = open_async.get(key, 0) + 1
+            else:
+                cnt = open_async.get(key, 0)
+                if cnt <= 0:
+                    errors.append(f"event #{n} (e): unmatched end {key}")
+                else:
+                    open_async[key] = cnt - 1
+    for key, cnt in open_async.items():
+        if cnt != 0:
+            errors.append(f"async span {key}: {cnt} unmatched begin(s)")
+    for field in ("audit", "intervals", "breakdown"):
+        val = other.get(field)
+        if val is not None and not isinstance(val, list):
+            errors.append(f"otherData.{field} must be a list")
+    for i, a in enumerate(other.get("audit") or []):
+        if not isinstance(a, dict) or "chosen" not in a \
+                or "candidates" not in a:
+            errors.append(f"audit #{i}: missing chosen/candidates")
+            break
+    return errors
+
+
+def summarize(obj: Any) -> Dict[str, object]:
+    """Condense a validated trace: span counts per process, engine event
+    counts, audit/interval sizes, and the heaviest (op, resource) rows.
+    Raises ``ValueError`` on an invalid trace — the round-trip law is
+    that ``validate`` accepts everything ``summarize`` accepts."""
+    errors = validate_trace(obj)
+    if errors:
+        raise ValueError("invalid trace: " + "; ".join(errors[:5]))
+    events = obj["traceEvents"]
+    other = obj.get("otherData", {})
+    pname: Dict[Any, str] = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            pname[ev.get("pid")] = ev["args"]["name"]
+    spans_by_proc: Dict[str, int] = {}
+    phases: Dict[str, int] = {}
+    for ev in events:
+        ph = ev["ph"]
+        phases[ph] = phases.get(ph, 0) + 1
+        if ph == "X":
+            name = pname.get(ev.get("pid"), str(ev.get("pid")))
+            spans_by_proc[name] = spans_by_proc.get(name, 0) + 1
+    rows = sorted(other.get("breakdown") or [],
+                  key=lambda r: -r.get("total_ns", 0.0))
+    return {
+        "schema": other.get("schema"),
+        "n_events": len(events),
+        "phases": phases,
+        "spans_by_process": spans_by_proc,
+        "engine_event_counts": other.get("event_counts", {}),
+        "n_audit": len(other.get("audit") or []),
+        "n_intervals": len(other.get("intervals") or []),
+        "dropped_spans": other.get("dropped_spans", 0),
+        "dropped_audit": other.get("dropped_audit", 0),
+        "top_breakdown": rows[:5],
+    }
+
+
+def main(argv: Optional[List[str]] = None,
+         out: TextIO = sys.stdout) -> int:
+    """``python -m repro.sim.telemetry summarize|validate <trace.json>``"""
+    ap = argparse.ArgumentParser(
+        prog="repro.sim.telemetry",
+        description="Inspect flight-recorder traces "
+                    f"(schema {SCHEMA})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for name, hlp in (("summarize", "print a condensed trace summary"),
+                      ("validate", "structurally validate a trace")):
+        p = sub.add_parser(name, help=hlp)
+        p.add_argument("trace", help="path to an exported trace JSON")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.trace) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read {args.trace}: {e}", file=out)
+        return 2
+    errors = validate_trace(obj)
+    if args.cmd == "validate":
+        if errors:
+            for e in errors:
+                print(f"INVALID: {e}", file=out)
+            return 1
+        print(f"OK: {args.trace} is a valid {SCHEMA} trace "
+              f"({len(obj['traceEvents'])} events)", file=out)
+        return 0
+    if errors:
+        print(f"error: invalid trace ({errors[0]})", file=out)
+        return 1
+    print(json.dumps(summarize(obj), indent=2), file=out)
+    return 0
+
+
+if __name__ == "__main__":                       # pragma: no cover
+    sys.exit(main())

@@ -61,6 +61,7 @@ from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation, _hash01, simulate
 from repro.sim.servers import Fabric
 from repro.sim.stats import HostIOStats, MixResult
+from repro.sim.telemetry import TelemetryLike, as_recorder
 
 PolicyLike = Union[str, Policy]
 
@@ -204,6 +205,8 @@ class _HostIOModel:
         self.outstanding = 0
         self.pending: Deque[Tuple[int, float]] = deque()
         self.last_complete_ns = 0.0
+        # optional flight recorder (repro.sim.telemetry): request spans
+        self.telemetry = None
         # hoisted per-request constants (the issue path runs per event)
         f, h = spec.flash, spec.host
         nb = spec.page_size
@@ -240,6 +243,7 @@ class _HostIOModel:
         if j >= n:
             return
         record = engine.record
+        tele = engine.telemetry
         while True:
             t_j = plan[j][0]
             nt = engine.next_time()
@@ -252,6 +256,8 @@ class _HostIOModel:
             engine.processed += 1
             if record:
                 engine.log.append((engine.now, EventKind.IO_ARRIVAL))
+            if tele is not None:
+                tele.on_event(engine.now, EventKind.IO_ARRIVAL)
             arr = engine.now
             if qd is not None and self.outstanding >= qd:
                 self.pending.append((j, arr))
@@ -267,6 +273,9 @@ class _HostIOModel:
         now = self.engine.now
         _, lpn, is_read, die = self.plan[i]
         during_gc = self.ftl is not None and self.ftl.gc_busy
+        tele = self.telemetry
+        if tele is not None:
+            tele.ctx = f"io#{i}:{'r' if is_read else 'w'}"
         xfer = self._xfer_ns
         link = self._link_ns
         if is_read:
@@ -287,6 +296,8 @@ class _HostIOModel:
             t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
             if self.ftl is not None:
                 self.ftl.maybe_start_gc(die)        # watermark check
+        if tele is not None:
+            tele.on_io_issue(i, arrival_ns, is_read, die)
         self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
                              payload=(i, arrival_ns, during_gc))
 
@@ -297,6 +308,9 @@ class _HostIOModel:
         if during_gc:
             self.ftl.note_host_latency_during_gc(lat)
         self.last_complete_ns = max(self.last_complete_ns, self.engine.now)
+        if self.telemetry is not None:
+            self.telemetry.on_io_complete(i, self.plan[i][2],
+                                          self.engine.now)
         self.outstanding -= 1
         if self.pending:
             j, arr = self.pending.popleft()
@@ -343,7 +357,8 @@ def simulate_mix(traces: Sequence[Trace],
                  engine: Optional[EventEngine] = None,
                  ftl: Optional[FTLConfig] = None,
                  start_ns: Optional[Sequence[float]] = None,
-                 record_decisions: Optional[bool] = None) -> MixResult:
+                 record_decisions: Optional[bool] = None,
+                 telemetry: TelemetryLike = None) -> MixResult:
     """Run several traces concurrently on one SSD, plus optional host I/O.
 
     ``policies`` is one policy (applied to every trace) or one per trace;
@@ -358,7 +373,10 @@ def simulate_mix(traces: Sequence[Trace],
     :class:`EventEngine` to capture the event timeline.
     ``record_decisions=False`` is the fast mode: skip per-dispatch
     DecisionRecord allocation (timing identical; op latencies stay
-    available) — overrides the same flag on ``config``.
+    available) — overrides the same flag on ``config``.  ``telemetry``
+    attaches a :class:`~repro.sim.telemetry.FlightRecorder` to the shared
+    engine/fabric/FTL/I-O model (solo reference runs stay unobserved);
+    the recorder comes back on ``result.telemetry``.
     """
     traces = list(traces)
     if not traces:
@@ -394,8 +412,13 @@ def simulate_mix(traces: Sequence[Trace],
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
+    tele = as_recorder(telemetry)
+    if tele is not None:
+        tele.attach(fabric=fabric, engine=engine)
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
                  if ftl is not None else None)
+    if tele is not None and ftl_model is not None:
+        tele.attach_ftl(ftl_model)
     sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name,
                        start_ns=st)
             for name, tr, pol, st in zip(names, tenant_traces, pols, starts)]
@@ -403,6 +426,8 @@ def simulate_mix(traces: Sequence[Trace],
         sim.bind(engine)
     io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
           if io_stream is not None else None)
+    if tele is not None and io is not None:
+        tele.attach_host_io(io)
     engine.run()
 
     results = [sim.result() for sim in sims]
@@ -416,4 +441,5 @@ def simulate_mix(traces: Sequence[Trace],
                      host_io=io.stats() if io else None,
                      fabric_busy_ns=fabric.busy_ns(),
                      makespan_ns=makespan,
-                     ftl=ftl_model.stats() if ftl_model is not None else None)
+                     ftl=ftl_model.stats() if ftl_model is not None else None,
+                     telemetry=tele)

@@ -73,31 +73,33 @@ def digest_mix(m) -> str:
 
 # -- scenarios -----------------------------------------------------------------
 
-def scenario_single(policy: str) -> str:
+def scenario_single(policy: str, telemetry=None) -> str:
     """simulate() on the synthetic mixed-op trace."""
-    return digest_sim(simulate(synth_trace(MIXED), policy))
+    return digest_sim(simulate(synth_trace(MIXED), policy,
+                               telemetry=telemetry))
 
 
-def scenario_pressure() -> str:
+def scenario_pressure(telemetry=None) -> str:
     """Capacity pressure + transient faults: evictions, coherence syncs
     and the replay path all fire."""
     tr = synth_trace(MIXED, n_arrays=6, pages_per_array=4)
     cfg = SimConfig(dram_capacity_pages=32, host_capacity_pages=48,
                     fail_rate=0.05)
-    return digest_sim(simulate(tr, "conduit", config=cfg))
+    return digest_sim(simulate(tr, "conduit", config=cfg,
+                               telemetry=telemetry))
 
 
-def scenario_mix() -> str:
+def scenario_mix(telemetry=None) -> str:
     """Two tenants + host I/O on one shared fabric."""
     a = synth_trace(RAMP, name="A")
     b = synth_trace(MIXED, name="B")
     io = HostIOStream(rate_iops=80_000, n_requests=64, seed=7,
                       queue_depth=16)
     return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
-                                   compute_solo=False))
+                                   compute_solo=False, telemetry=telemetry))
 
 
-def scenario_gc() -> str:
+def scenario_gc(telemetry=None) -> str:
     """GC-enabled FTL run: write-heavy Zipf host I/O on a preconditioned
     drive, collector contending on the shared die/channel pools."""
     a = synth_trace(RAMP, name="A")
@@ -107,14 +109,16 @@ def scenario_gc() -> str:
     io = HostIOStream(rate_iops=250_000, read_fraction=0.3, n_requests=160,
                       zipf_theta=0.95, n_logical_pages=ftl.logical_pages())
     return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
-                                   ftl=ftl, compute_solo=False))
+                                   ftl=ftl, compute_solo=False,
+                                   telemetry=telemetry))
 
 
-def all_digests() -> Dict[str, str]:
-    out = {f"single/{p}": scenario_single(p) for p in GOLDEN_POLICIES}
-    out["pressure_fault"] = scenario_pressure()
-    out["mix_2tenant_io"] = scenario_mix()
-    out["gc_ftl"] = scenario_gc()
+def all_digests(telemetry=None) -> Dict[str, str]:
+    out = {f"single/{p}": scenario_single(p, telemetry=telemetry)
+           for p in GOLDEN_POLICIES}
+    out["pressure_fault"] = scenario_pressure(telemetry=telemetry)
+    out["mix_2tenant_io"] = scenario_mix(telemetry=telemetry)
+    out["gc_ftl"] = scenario_gc(telemetry=telemetry)
     return out
 
 

@@ -29,6 +29,11 @@ from repro.sim import (CatalogEntry, EventEngine, EventKind, FTLConfig,
 
 from _synth import synth_trace
 
+# Most fixtures here run tiny, untrimmed or deliberately-overloaded
+# windows where the Little's-law ratio is meaningless by construction;
+# the warning itself is pinned (quiet + loud) in test_telemetry.py.
+pytestmark = pytest.mark.filterwarnings("ignore:little_law_ratio")
+
 RAMP = list(range(40))
 SHORT = [2, 4, 6] * 3
 

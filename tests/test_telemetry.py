@@ -1,0 +1,394 @@
+"""Flight-recorder laws (:mod:`repro.sim.telemetry`).
+
+The acceptance properties:
+
+(a) non-perturbation — with telemetry FULLY enabled (spans + audit +
+    interval sampler) every golden digest in
+    ``tests/test_golden_equivalence.py`` is bit-identical: the recorder
+    observes, never perturbs;
+(b) off by default — no recorder object exists unless asked for
+    (the zero-overhead-off discipline; the wall-clock side is gated by
+    ``benchmarks/perf_bench.py --check``, whose measured path runs with
+    telemetry off);
+(c) audit fidelity — the audit stream agrees 1:1 with the always-on
+    DecisionRecord slice, and every candidate's Eqn-1 total re-derives
+    from its six features;
+(d) breakdown accounting — per-(op, resource) phase sums are
+    non-negative and the counts add up to the run's instruction count;
+(e) round trip — ``validate_trace`` accepts every trace the recorder
+    exports and everything ``summarize`` accepts, and rejects corrupted
+    traces loudly (the CLI exit codes pin the same contract);
+(f) the serving Little's-law consistency warning fires on
+    edge-dominated windows and stays quiet on stable ones.
+"""
+import io
+import json
+import warnings
+
+import pytest
+
+from repro.sim import (CatalogEntry, FTLConfig, FlightRecorder,
+                       HostIOStream, PoissonArrivals, ServingConfig,
+                       SessionCatalog, TelemetryConfig, simulate,
+                       simulate_mix, simulate_serving)
+from repro.sim.telemetry import (PID_FABRIC, PID_FTL, SCHEMA, as_recorder,
+                                 main as telemetry_main, summarize,
+                                 validate_trace)
+
+import _golden
+from _synth import synth_trace
+from test_golden_equivalence import GOLDEN
+
+#: everything on, sampler included — the config the golden law runs under
+FULL = TelemetryConfig(spans=True, audit=True, interval_ns=50_000.0)
+
+RAMP = list(range(40))
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+
+
+def small_catalog():
+    return SessionCatalog(
+        [CatalogEntry("A", synth_trace(RAMP, name="A"))])
+
+
+def _gc_mix(telemetry):
+    """The golden GC scenario's exact configuration, recorder attached."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, prefill=0.9,
+                    op_ratio=0.28)
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.3, n_requests=160,
+                      zipf_theta=0.95, n_logical_pages=ftl.logical_pages())
+    return simulate_mix([a, b], "conduit", io_stream=io, ftl=ftl,
+                        compute_solo=False, telemetry=telemetry)
+
+
+@pytest.fixture(scope="module")
+def gc_recorder():
+    return _gc_mix(FULL).telemetry
+
+
+@pytest.fixture(scope="module")
+def gc_trace(gc_recorder):
+    return gc_recorder.chrome_trace()
+
+
+# -- (a) the recorder never perturbs the simulation ----------------------------
+
+@pytest.mark.parametrize("policy", _golden.GOLDEN_POLICIES)
+def test_single_digest_bit_identical_with_telemetry_on(policy):
+    assert _golden.scenario_single(policy, telemetry=FULL) \
+        == GOLDEN[f"single/{policy}"]
+
+
+def test_pressure_fault_digest_bit_identical_with_telemetry_on():
+    assert _golden.scenario_pressure(telemetry=FULL) \
+        == GOLDEN["pressure_fault"]
+
+
+def test_mix_digest_bit_identical_with_telemetry_on():
+    assert _golden.scenario_mix(telemetry=FULL) == GOLDEN["mix_2tenant_io"]
+
+
+def test_gc_ftl_digest_bit_identical_with_telemetry_on():
+    assert _golden.scenario_gc(telemetry=FULL) == GOLDEN["gc_ftl"]
+
+
+# -- (b) off by default, normalization at the entry points ---------------------
+
+def test_telemetry_is_off_by_default():
+    res = simulate(synth_trace(MIXED), "conduit")
+    assert res.telemetry is None
+
+
+def test_as_recorder_normalization():
+    assert as_recorder(None) is None
+    assert as_recorder(False) is None
+    rec = as_recorder(True)
+    assert isinstance(rec, FlightRecorder)
+    cfg = TelemetryConfig(spans=False)
+    assert as_recorder(cfg).cfg is cfg
+    assert as_recorder(rec) is rec
+    with pytest.raises(TypeError, match="telemetry must be"):
+        as_recorder(3)
+
+
+def test_config_validation_is_loud():
+    with pytest.raises(ValueError):
+        TelemetryConfig(interval_ns=-1.0)
+    with pytest.raises(ValueError):
+        TelemetryConfig(sliding_window=0)
+    with pytest.raises(ValueError):
+        TelemetryConfig(max_spans=0)
+
+
+# -- (c) audit fidelity --------------------------------------------------------
+
+def test_audit_agrees_with_decision_records():
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=FULL)
+    rec = res.telemetry
+    assert len(rec.audit) == len(res.decisions) == res.n_instrs
+    for a, d in zip(rec.audit, res.decisions):
+        assert a.iid == d.iid
+        assert a.op == d.op
+        assert a.chosen == d.resource.value
+        assert a.t_decide_ns == d.t_decide
+        assert a.replayed == d.replayed
+
+
+def test_audit_candidate_totals_rederive_from_features():
+    """Eqn 1: total = comp + dm + max(dd, queue) for every candidate the
+    policy considered; the chosen resource is one of the candidates."""
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=FULL)
+    checked = 0
+    for a in res.telemetry.audit:
+        names = {c.resource for c in a.candidates}
+        assert a.chosen in names
+        for c in a.candidates:
+            if c.supported:
+                want = c.latency_comp_ns + c.latency_dm_ns \
+                    + max(c.delay_dd_ns, c.delay_queue_ns)
+                assert c.total_ns == pytest.approx(want)
+                checked += 1
+    assert checked > 0
+
+
+def test_audit_explain_renders_the_decision():
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=FULL)
+    a = res.telemetry.audit[0]
+    text = a.explain()
+    assert f"iid={a.iid}" in text
+    assert "->" in text                 # the chosen row is marked
+    assert f"chosen: {a.chosen}" in text
+    for c in a.candidates:
+        assert c.resource in text
+
+
+def test_audit_off_still_fills_breakdown():
+    cfg = TelemetryConfig(spans=True, audit=False)
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=cfg)
+    rec = res.telemetry
+    assert rec.audit == []
+    assert sum(r["count"] for r in rec.breakdown_rows()) == res.n_instrs
+
+
+# -- (d) breakdown accounting --------------------------------------------------
+
+def test_breakdown_counts_sum_to_instruction_count():
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=FULL)
+    rows = res.telemetry.breakdown_rows()
+    assert sum(r["count"] for r in rows) == res.n_instrs
+    for r in rows:
+        for field in ("decide_ns", "dm_ns", "queue_ns", "compute_ns",
+                      "total_ns"):
+            assert r[field] >= -1e-9, (r["op"], r["resource"], field)
+        # each phase is a slice of dispatch->completion, never more
+        assert r["total_ns"] + 1e-9 >= max(r["dm_ns"], r["queue_ns"],
+                                           r["compute_ns"])
+
+
+# -- spans, sampler, GC overlap ------------------------------------------------
+
+def test_engine_event_counts_cover_the_run(gc_recorder):
+    counts = gc_recorder.event_counts
+    assert counts.get("dispatch", 0) > 0
+    assert counts.get("io_arrival", 0) > 0
+    assert counts.get("gc", 0) > 0
+    assert counts.get("timer", 0) > 0       # the sampler's own events
+
+
+def test_interval_samples_are_monotone_and_sane(gc_recorder):
+    samples = gc_recorder.intervals
+    assert len(samples) >= 2
+    times = [s.t_ns for s in samples]
+    assert times == sorted(times)
+    for s in samples:
+        assert s.gc_active_dies >= 0
+        assert s.p99_op_ns >= 0.0
+        for pool, u in s.utilization.items():
+            assert u >= 0.0, pool
+        for pool, q in s.queue_depth_ns.items():
+            assert q >= 0.0, pool
+
+
+def test_gc_spans_overlap_host_io_spans(gc_trace):
+    """The headline observability claim: the exported trace shows GC
+    activity on a die concurrent with in-flight host requests."""
+    gc_spans = [(e["ts"], e["ts"] + e["dur"])
+                for e in gc_trace["traceEvents"]
+                if e.get("ph") == "X" and e.get("pid") == PID_FTL]
+    assert gc_spans, "no GC spans in a GC-enabled run"
+    opens = {}
+    io_spans = []
+    for e in gc_trace["traceEvents"]:
+        if e.get("cat") != "host_io":
+            continue
+        if e["ph"] == "b":
+            opens[e["id"]] = e["ts"]
+        elif e["ph"] == "e":
+            io_spans.append((opens.pop(e["id"]), e["ts"]))
+    assert io_spans, "no host-I/O spans in a host-I/O run"
+    assert any(g0 < i1 and i0 < g1
+               for g0, g1 in gc_spans for i0, i1 in io_spans), \
+        "no GC span overlaps any host-I/O request"
+
+
+def test_fabric_spans_carry_attribution(gc_trace):
+    names = {e["name"] for e in gc_trace["traceEvents"]
+             if e.get("ph") == "X" and e.get("pid") == PID_FABRIC}
+    assert any(n.startswith("gc:die") for n in names)
+    assert any(n.startswith("io#") for n in names)
+    assert any("#" in n and ":" in n and not n.startswith(("gc", "io"))
+               for n in names), "no tenant dispatch spans"
+    assert "?" not in names, "unattributed pool booking"
+
+
+def test_span_cap_truncates_loudly():
+    cfg = TelemetryConfig(spans=True, audit=True, max_spans=10,
+                          max_audit=5)
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=cfg)
+    rec = res.telemetry
+    assert len(rec.spans) == 10 and rec.dropped_spans > 0
+    assert len(rec.audit) == 5 and rec.dropped_audit > 0
+    other = rec.chrome_trace()["otherData"]
+    assert other["dropped_spans"] == rec.dropped_spans
+    assert other["dropped_audit"] == rec.dropped_audit
+
+
+# -- (e) export round trip + CLI -----------------------------------------------
+
+def test_exported_trace_validates_and_summarizes(gc_trace):
+    assert validate_trace(gc_trace) == []
+    s = summarize(gc_trace)
+    assert s["schema"] == SCHEMA
+    assert s["n_events"] == len(gc_trace["traceEvents"])
+    assert s["spans_by_process"].get("ftl-gc", 0) > 0
+    assert s["spans_by_process"].get("fabric", 0) > 0
+    assert s["n_audit"] == len(gc_trace["otherData"]["audit"])
+    assert s["n_intervals"] > 0
+
+
+def test_export_json_round_trips(gc_recorder, tmp_path):
+    path = tmp_path / "trace.json"
+    obj = gc_recorder.export(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded == json.loads(json.dumps(obj))
+    assert validate_trace(loaded) == []
+
+
+@pytest.mark.parametrize("corrupt, expect", [
+    (lambda t: t["otherData"].pop("schema"), "schema"),
+    (lambda t: t["traceEvents"].append({"ph": "Q", "ts": 0, "pid": 1}),
+     "illegal ph"),
+    (lambda t: t["traceEvents"].append(
+        {"ph": "b", "cat": "session", "id": 999_999, "pid": 3, "tid": 0,
+         "name": "x", "ts": 0}), "unmatched begin"),
+    (lambda t: t["traceEvents"].append(
+        {"ph": "e", "cat": "session", "id": 888_888, "pid": 3, "tid": 0,
+         "name": "x", "ts": 0}), "unmatched end"),
+    (lambda t: t["traceEvents"].append(
+        {"ph": "X", "pid": 1, "tid": 1, "name": "x", "ts": 0.0,
+         "dur": -1.0}), "bad dur"),
+    (lambda t: t.__setitem__("traceEvents", {}), "traceEvents"),
+])
+def test_corrupt_traces_are_rejected(gc_recorder, corrupt, expect):
+    """The round-trip law: whatever validate rejects, summarize raises."""
+    trace = json.loads(json.dumps(gc_recorder.chrome_trace()))
+    corrupt(trace)
+    errors = validate_trace(trace)
+    assert errors and any(expect in e for e in errors), errors
+    with pytest.raises(ValueError, match="invalid trace"):
+        summarize(trace)
+
+
+def test_cli_summarize_and_validate(gc_recorder, tmp_path):
+    path = tmp_path / "trace.json"
+    gc_recorder.export(str(path))
+
+    buf = io.StringIO()
+    assert telemetry_main(["validate", str(path)], out=buf) == 0
+    assert "OK" in buf.getvalue()
+
+    buf = io.StringIO()
+    assert telemetry_main(["summarize", str(path)], out=buf) == 0
+    assert json.loads(buf.getvalue())["schema"] == SCHEMA
+
+
+def test_cli_exit_codes_on_bad_input(gc_recorder, tmp_path):
+    buf = io.StringIO()
+    assert telemetry_main(["validate", str(tmp_path / "missing.json")],
+                          out=buf) == 2
+
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    assert telemetry_main(["validate", str(garbage)], out=io.StringIO()) == 2
+
+    bad = json.loads(json.dumps(gc_recorder.chrome_trace()))
+    del bad["otherData"]["schema"]
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    buf = io.StringIO()
+    assert telemetry_main(["validate", str(p)], out=buf) == 1
+    assert "INVALID" in buf.getvalue()
+    assert telemetry_main(["summarize", str(p)], out=io.StringIO()) == 1
+
+
+# -- serving: lifecycle spans + (f) the Little's-law warning -------------------
+
+def test_serving_trace_validates_with_rejections():
+    """Rejected sessions still close their async spans (b/e balance)."""
+    res = simulate_serving(
+        small_catalog(),
+        PoissonArrivals(rate_per_sec=50_000, n_sessions=40, seed=3),
+        "conduit",
+        serving=ServingConfig(max_active_sessions=1, max_backlog=2,
+                              little_law_warn_tol=float("inf")),
+        telemetry=FULL)
+    assert res.n_rejected > 0
+    rec = res.telemetry
+    trace = rec.chrome_trace()
+    assert validate_trace(trace) == []
+    rejects = [e for e in trace["traceEvents"]
+               if e.get("ph") == "i" and e["name"].startswith("reject")]
+    assert len(rejects) == res.n_rejected
+    assert rec.event_counts.get("session_arrival", 0) == res.n_offered
+    assert any(s.backlog > 0 or s.active_sessions > 0
+               for s in rec.intervals)
+
+
+def test_little_law_quiet_on_a_stable_trimmed_run():
+    catalog = SessionCatalog(
+        [CatalogEntry("A", synth_trace(RAMP, name="A"), weight=3.0),
+         CatalogEntry("B", synth_trace(MIXED, name="B"), weight=1.0)],
+        seed=11)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        res = simulate_serving(
+            catalog,
+            PoissonArrivals(rate_per_sec=2000, n_sessions=64, seed=9),
+            "conduit",
+            serving=ServingConfig(warmup_ns=3e6, cooldown_ns=3e6))
+    assert abs(res.little_law_ratio() - 1.0) \
+        <= ServingConfig().little_law_warn_tol
+
+
+def test_little_law_warns_on_an_edge_dominated_window():
+    with pytest.warns(RuntimeWarning, match="little_law_ratio"):
+        res = simulate_serving(
+            small_catalog(),
+            PoissonArrivals(rate_per_sec=50_000, n_sessions=40, seed=3),
+            "conduit")
+    assert abs(res.little_law_ratio() - 1.0) \
+        > ServingConfig().little_law_warn_tol
+
+
+def test_little_law_tolerance_is_configurable():
+    with pytest.warns(RuntimeWarning, match="little_law_ratio"):
+        simulate_serving(
+            small_catalog(),
+            PoissonArrivals(rate_per_sec=2000, n_sessions=24, seed=9),
+            "conduit",
+            serving=ServingConfig(warmup_ns=3e6, cooldown_ns=3e6,
+                                  little_law_warn_tol=1e-9))
+    with pytest.raises(ValueError, match="little_law_warn_tol"):
+        ServingConfig(little_law_warn_tol=0.0)

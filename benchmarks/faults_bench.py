@@ -1,0 +1,149 @@
+"""Fault injection benchmark: reliability cost curves on a serving drive.
+
+Three studies of :mod:`repro.sim.faults`, all hashed-seed deterministic
+(byte-identical across ``benchmarks/run.py --jobs`` values):
+
+1. **goodput-at-SLO vs error rate** — the headline curve:
+   :func:`~repro.sim.serving.find_saturation` with the error model armed
+   at escalating raw bit error rates.  A read-heavy host stream shares
+   the dies/channels with the NDP sessions, so every recovery-ladder
+   stage (retry re-senses, soft decodes, parity rebuilds) steals real
+   bandwidth from compute.  Goodput degrades monotonically: flat while
+   hard-decode ECC absorbs the errors, then a cliff as the soft/rebuild
+   tiers engage.
+2. **wear-coupled errors, greedy vs wear-aware GC** — the drive is
+   preconditioned with ``prewear_writes`` of Zipf churn under each
+   victim policy, then serves sessions + mixed host I/O with
+   ``rber_per_pe`` armed: reads of high-wear blocks walk the ladder
+   more often, so the wear-aware picker's flatter histogram measurably
+   cuts hard-decode failures and recovery work vs. greedy.
+3. **degradation endgame** — uncorrectable-grade errors on a tiny
+   drive: blocks retire (survivors relocated through the GC machinery),
+   the reserve drains, dies degrade to read-only, and every failed
+   write/read is surfaced and counted — the conservation story under
+   the worst case.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import csv_row
+from repro.sim import (CatalogEntry, FaultConfig, FTLConfig, HostIOStream,
+                       PoissonArrivals, ServingConfig, SessionCatalog,
+                       find_saturation, simulate_serving)
+from repro.workloads import get_trace
+
+#: p99 session-latency SLO for the saturation finder (ns) — the
+#: serving_bench calibration (a few x the uncontended p99)
+SLO_P99_NS = 1.5e6
+TRIM_FRACTION = 0.1
+
+
+def _catalog() -> SessionCatalog:
+    return SessionCatalog(
+        [CatalogEntry("jacobi1d", get_trace("jacobi1d", "tiny"), weight=3.0),
+         CatalogEntry("xor_filter", get_trace("xor_filter", "tiny"),
+                      weight=1.0)],
+        seed=5)
+
+
+def _scfg(rate_per_sec: float, n_sessions: int) -> ServingConfig:
+    trim = TRIM_FRACTION * n_sessions / rate_per_sec * 1e9
+    return ServingConfig(warmup_ns=trim, cooldown_ns=trim,
+                         keep_session_results=False,
+                         little_law_warn_tol=float("inf"))
+
+
+def fault_injection(policy: str = "conduit", smoke: bool = False) -> List[str]:
+    """Saturation/goodput vs error rate + wear-aware GC payoff +
+    degradation endgame."""
+    rows: List[str] = []
+    catalog = _catalog()
+
+    # -- study 1: goodput-at-SLO vs injected error rate -----------------------
+    n_sessions = 24 if smoke else 96
+    sat_iters = 2 if smoke else 5
+    rbers = (0.0, 1e-3) if smoke else (0.0, 4e-4, 7e-4, 1e-3)
+    io = HostIOStream(rate_iops=80_000, read_fraction=1.0,
+                      n_requests=1000 if smoke else 4000, seed=7)
+    scfg = _scfg(16_000, n_sessions)
+    print(f"\n== goodput-at-SLO vs raw bit error rate ({policy} policy, "
+          f"read-heavy host stream sharing the drive)")
+    for rber in rbers:
+        fc = FaultConfig(rber_base=rber) if rber > 0.0 else None
+        sat = find_saturation(catalog, policy, slo_p99_ns=SLO_P99_NS,
+                              rate_lo=1000, rate_hi=16_000, iters=sat_iters,
+                              n_sessions=n_sessions, seed=9, serving=scfg,
+                              io_stream=io, faults=fc, min_availability=0.99)
+        last = sat.probes[-1]
+        print(f"  rber={rber:7.1e} saturation={sat.rate_per_sec:8.1f}/s "
+              f"avail={last.availability:5.3f} ({len(sat.probes)} probes)")
+        rows.append(csv_row(f"faults/saturation/rber_{rber:g}",
+                            f"{sat.rate_per_sec:.1f}",
+                            f"per_sec,slo_p99_us={SLO_P99_NS/1e3:.0f}"))
+
+    # -- study 2: wear-coupled errors, greedy vs wear-aware GC ----------------
+    prewear = 3000 if smoke else 8000
+    wear_rbers = (5e-5,) if smoke else (5e-5, 1e-4)
+    base = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                     prefill=0.9, gc_suspend=True, gc_reserve_blocks=1,
+                     prewear_writes=prewear)
+    wear_io = HostIOStream(rate_iops=12_000, read_fraction=0.5,
+                           n_requests=1500 if smoke else 4000,
+                           zipf_theta=0.95,
+                           n_logical_pages=base.logical_pages())
+    arr = PoissonArrivals(rate_per_sec=4000, n_sessions=n_sessions, seed=9)
+    wcfg = ServingConfig(keep_session_results=False,
+                         little_law_warn_tol=float("inf"))
+    print(f"\n== wear-coupled errors after {prewear} prewear writes "
+          f"(rber = base + per_pe x erase_count)")
+    print(f"  {'victim':>12s} {'rber_per_pe':>11s} {'hard_fails':>10s} "
+          f"{'recovered':>9s} {'io_p99_us':>9s} {'max_wear':>8s}")
+    for e in wear_rbers:
+        for vp in ("greedy", "wear_aware"):
+            cfg = dataclasses.replace(base, victim_policy=vp)
+            fc = FaultConfig(rber_base=1e-4, rber_per_pe=e)
+            res = simulate_serving(catalog, arr, policy, io_stream=wear_io,
+                                   ftl=cfg, serving=wcfg, faults=fc)
+            st = res.faults
+            print(f"  {vp:>12s} {e:11.1e} {st.n_hard_fails:10d} "
+                  f"{st.recovered:9d} {res.host_io.p(99)/1e3:9.1f} "
+                  f"{max(res.ftl.erase_counts):8d}")
+            rows.append(csv_row(f"faults/wear/{vp}/{e:g}/hard_fails",
+                                str(st.n_hard_fails),
+                                f"recovered={st.recovered}"))
+            rows.append(csv_row(f"faults/wear/{vp}/{e:g}/io_p99",
+                                f"{res.host_io.p(99)/1e3:.1f}", "us"))
+
+    # -- study 3: degradation endgame -----------------------------------------
+    n_req = 200 if smoke else 400
+    endgame_ftl = FTLConfig(blocks_per_die=3, pages_per_block=4, prefill=0.9,
+                            op_ratio=0.34, gc_enabled=False)
+    endgame_io = HostIOStream(rate_iops=400_000, read_fraction=0.5,
+                              n_requests=n_req, zipf_theta=0.9,
+                              n_logical_pages=endgame_ftl.logical_pages())
+    res = simulate_serving(
+        catalog, PoissonArrivals(rate_per_sec=4000, n_sessions=8, seed=9),
+        policy, io_stream=endgame_io, ftl=endgame_ftl, serving=wcfg,
+        faults=FaultConfig(rber_base=0.05, retire_after=1))
+    st = res.faults
+    hio = res.host_io
+    n_ops = hio.n_reads + hio.n_writes
+    io_avail = 1.0 - hio.n_failed / n_ops if n_ops else 1.0
+    print(f"\n== degradation endgame (uncorrectable-grade errors, tiny "
+          f"drive, retire_after=1)")
+    print(f"  {st.summary()}")
+    print(f"  host-I/O availability={io_avail:.4f} "
+          f"({hio.n_failed}/{n_ops} ops failed, all surfaced)")
+    assert len(hio.latencies_ns) + hio.n_failed == n_ops, \
+        "conservation: every op completes or is surfaced as failed"
+    rows.append(csv_row("faults/endgame/blocks_retired",
+                        str(st.n_blocks_retired),
+                        f"pages_relocated={st.n_pages_relocated}"))
+    rows.append(csv_row("faults/endgame/read_only_dies",
+                        str(st.n_read_only_dies),
+                        f"failed_writes={st.n_failed_writes}"))
+    rows.append(csv_row("faults/endgame/io_availability",
+                        f"{io_avail:.4f}", f"failed={hio.n_failed}"))
+    return rows

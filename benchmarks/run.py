@@ -37,12 +37,13 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 #: suites whose signature takes a ``smoke`` kwarg (CI-sized shrink)
-SMOKE_AWARE = {"mix", "gc", "gc_policies", "serving"}
+SMOKE_AWARE = {"mix", "gc", "gc_policies", "serving", "faults"}
 
 
 def _suite_table() -> Dict:
-    from benchmarks import (kernel_bench, paper_figures, perf_bench,
-                            pressure_bench, roofline_bench, serving_bench)
+    from benchmarks import (faults_bench, kernel_bench, paper_figures,
+                            perf_bench, pressure_bench, roofline_bench,
+                            serving_bench)
 
     return {
         "table3": paper_figures.table3_characterize,
@@ -60,6 +61,7 @@ def _suite_table() -> Dict:
         "gc": pressure_bench.gc_interference,
         "gc_policies": pressure_bench.gc_policies,
         "serving": serving_bench.serving_curve,
+        "faults": faults_bench.fault_injection,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,

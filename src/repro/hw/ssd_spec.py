@@ -168,6 +168,73 @@ class FTLSpec:
     gc_suspend_qd: int = 2
     gc_backoff_ns: float = 30_000.0
 
+    def __post_init__(self) -> None:
+        if not 0.0 < self.op_ratio:
+            raise ValueError(f"op_ratio must be > 0, got {self.op_ratio}")
+        if not 0.0 <= self.gc_low_watermark < self.gc_high_watermark <= 1.0:
+            raise ValueError(
+                "need 0 <= gc_low_watermark < gc_high_watermark <= 1, got "
+                f"low={self.gc_low_watermark} high={self.gc_high_watermark}")
+        if self.hot_threshold < 2:
+            raise ValueError(
+                f"hot_threshold must be >= 2, got {self.hot_threshold}")
+        if self.wear_alpha < 0.0:
+            raise ValueError(
+                f"wear_alpha must be >= 0, got {self.wear_alpha}")
+        # gc_suspend_qd / gc_backoff_ns are deliberately NOT validated
+        # here: the suspend machinery checks them at model-build time
+        # (see FTLModel) so a spec with suspend disabled may carry any
+        # placeholder values, and tests pin that contract.
+
+
+@dataclasses.dataclass(frozen=True)
+class ReliabilitySpec:
+    """ECC / read-recovery hardware constants (the *cost* side of the
+    reliability model; the *error-rate* side is the seeded
+    :class:`~repro.sim.faults.FaultConfig`).
+
+    The hard-decode BCH/LDPC engine corrects up to an RBER of
+    ``ecc_hard_rber`` essentially for free (decode latency is hidden in
+    the channel transfer, as on real controllers).  Past it, recovery
+    escalates through the classic ladder — read-retry re-senses at
+    shifted reference voltages (each retry a real re-read of the die plus
+    a channel transfer), then LDPC soft-decode on longer soft-sense data,
+    then superpage-parity reconstruction across the stripe's sibling
+    dies.  Every stage books real time on the contended pools."""
+
+    ecc_hard_rber: float = 1e-3       # hard-decode correction limit (RBER)
+    ecc_steepness: float = 4.0        # decode-failure curve sharpness
+    read_retry_ns: float = 8_000.0    # extra sense time per retry step
+    max_read_retries: int = 4         # voltage-shift retry steps
+    retry_rber_factor: float = 0.5    # effective RBER shrink per retry step
+    soft_decode_ns: float = 60_000.0  # LDPC soft-decode on the ECC engine
+    soft_rber_factor: float = 0.05    # soft decode corrects ~20x harder reads
+    ecc_engines: int = 2              # controller soft-decode/XOR engines
+    rebuild_xor_ns_per_page: float = 2_000.0  # parity XOR per stripe page
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.ecc_hard_rber < 1.0:
+            raise ValueError(
+                f"ecc_hard_rber must be in (0, 1), got {self.ecc_hard_rber}")
+        if self.ecc_steepness <= 0.0:
+            raise ValueError(
+                f"ecc_steepness must be > 0, got {self.ecc_steepness}")
+        if self.read_retry_ns < 0.0 or self.soft_decode_ns < 0.0 \
+                or self.rebuild_xor_ns_per_page < 0.0:
+            raise ValueError("reliability latencies must be >= 0")
+        if self.max_read_retries < 0:
+            raise ValueError(
+                f"max_read_retries must be >= 0, got {self.max_read_retries}")
+        if not 0.0 < self.retry_rber_factor <= 1.0:
+            raise ValueError("retry_rber_factor must be in (0, 1], got "
+                             f"{self.retry_rber_factor}")
+        if not 0.0 < self.soft_rber_factor <= 1.0:
+            raise ValueError("soft_rber_factor must be in (0, 1], got "
+                             f"{self.soft_rber_factor}")
+        if self.ecc_engines < 1:
+            raise ValueError(
+                f"ecc_engines must be >= 1, got {self.ecc_engines}")
+
 
 @dataclasses.dataclass(frozen=True)
 class HostSpec:
@@ -218,6 +285,8 @@ class SSDSpec:
     isp: ISPSpec = dataclasses.field(default_factory=ISPSpec)
     host: HostSpec = dataclasses.field(default_factory=HostSpec)
     ftl: FTLSpec = dataclasses.field(default_factory=FTLSpec)
+    reliability: ReliabilitySpec = dataclasses.field(
+        default_factory=ReliabilitySpec)
     # Conduit runtime overheads (§4.5)
     l2p_lookup_dram_ns: float = 100.0
     l2p_lookup_flash_ns: float = 30.0 * US

@@ -11,10 +11,11 @@ searches in lockstep (policy grids, seed fans) on a vectorized driver.
 All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
 from repro.sim.events import EventEngine, EventKind
+from repro.sim.faults import FaultConfig, FaultModel, FaultStats
 from repro.sim.ftl import (VICTIM_POLICIES, CostBenefitVictim, FTLConfig,
-                           FTLModel, GreedyVictim, VictimPolicy,
-                           WearAwareVictim, drive_zipf_overwrites,
-                           make_victim_policy)
+                           FTLModel, GreedyVictim, OutOfPhysicalBlocks,
+                           VictimPolicy, WearAwareVictim,
+                           drive_zipf_overwrites, make_victim_policy)
 from repro.sim.machine import SimConfig, Simulation, simulate
 from repro.sim.servers import Fabric, ServerPool
 from repro.sim.serving import (SaturationProbe, SaturationResult,
@@ -25,7 +26,8 @@ from repro.sim.sweep import (SweepLane, array_backend,
                              batched_poisson_arrival_times_ns)
 from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
                              MixResult, ServingResult, SessionRecord,
-                             SimResult, jain_fairness, percentile)
+                             SessionState, SimResult, jain_fairness,
+                             percentile)
 from repro.sim.telemetry import (CandidateCost, FlightRecorder,
                                  IntervalSample, OffloadAudit,
                                  TelemetryConfig, summarize as
@@ -49,7 +51,9 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "DeterministicArrivals", "TraceReplayArrivals",
            "SuperposedArrivals", "CatalogEntry", "SessionCatalog",
            "ServingConfig", "ServingResult", "SessionRecord",
-           "simulate_serving", "find_saturation",
+           "SessionState", "simulate_serving", "find_saturation",
+           "FaultConfig", "FaultModel", "FaultStats",
+           "OutOfPhysicalBlocks",
            "SaturationProbe", "SaturationResult",
            "SweepLane", "batched_find_saturation",
            "batched_poisson_arrival_times_ns", "array_backend",

@@ -91,6 +91,12 @@ from repro.sim.stats import FTLStats
 PPN = Tuple[int, int, int]
 
 
+class OutOfPhysicalBlocks(RuntimeError):
+    """A die's free block pool is exhausted and overflow growth is
+    forbidden (fault injection active): the drive must degrade to
+    read-only instead of silently growing capacity."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FTLConfig:
     """Simulation-scale FTL knobs.
@@ -125,6 +131,13 @@ class FTLConfig:
     gc_suspend_qd: Optional[int] = None       # default: spec.ftl.gc_suspend_qd
     gc_backoff_ns: Optional[float] = None     # default: spec.ftl.gc_backoff_ns
     gc_reserve_blocks: int = 0                # free blocks held back for GC
+    # -- wear preconditioning -------------------------------------------------
+    # state-only Zipf overwrite churn applied at model build (after
+    # prefill): the drive starts the timed run with the wear histogram
+    # its own victim policy produces after ``prewear_writes`` writes —
+    # the substrate for wear-dependent error injection (repro.sim.faults)
+    prewear_writes: int = 0
+    prewear_theta: float = 0.99
 
     def __post_init__(self) -> None:
         if self.victim_policy not in VICTIM_POLICIES:
@@ -133,6 +146,10 @@ class FTLConfig:
                 f"choose from {sorted(VICTIM_POLICIES)}")
         if self.gc_reserve_blocks < 0:
             raise ValueError("gc_reserve_blocks must be >= 0")
+        if self.prewear_writes < 0:
+            raise ValueError("prewear_writes must be >= 0")
+        if self.prewear_theta <= 0.0:
+            raise ValueError("prewear_theta must be > 0")
         if self.gc_reserve_blocks >= self.blocks_per_die:
             raise ValueError("gc_reserve_blocks must leave host blocks")
         if self.hot_threshold is not None and self.hot_threshold < 2:
@@ -164,6 +181,7 @@ class _DieFTL:
 
     FREE, HOST, GC, USED = "free", "host", "gc", "used"
     HOST_HOT, HOST_COLD = "host_hot", "host_cold"   # hot/cold append points
+    RETIRED = "retired"               # bad block: out of the pool forever
 
     def __init__(self, blocks: int, pages_per_block: int):
         self.ppb = pages_per_block
@@ -188,6 +206,10 @@ class _DieFTL:
             self.HOST_HOT: None, self.HOST_COLD: None}
         self.grown_blocks = 0          # overflow allocations (infinite OP)
         self.gc_grown_blocks = 0       # of which: GC append-point fallbacks
+        self.retired_blocks = 0        # bad blocks retired (fault injection)
+        # fault injection forbids the infinite-OP escape hatch: an empty
+        # pool raises OutOfPhysicalBlocks instead of growing
+        self.no_grow = False
         self.gc_running = False
         # free blocks held back from host append points (collector reserve)
         self.reserve = 0
@@ -252,11 +274,19 @@ class _DieFTL:
         if gc:
             if free:
                 return free.popleft()
+            if self.no_grow:
+                raise OutOfPhysicalBlocks("collector starved: no free block")
             self.gc_grown_blocks += 1
             self._grow()
             return free.pop()          # the block _grow just appended
         if len(free) > self.reserve:
             return free.popleft()
+        if self.no_grow:
+            # retirement drained the pool down to (or past) the reserve:
+            # the die degrades to read-only rather than silently growing
+            raise OutOfPhysicalBlocks("host append point starved: "
+                                      f"{len(free)} free <= reserve "
+                                      f"{self.reserve}")
         # host overflow growth: the infinite-OP / saturation escape valve —
         # and, with a reserve, what happens *instead of* stealing the
         # collector's block mid-collection
@@ -312,6 +342,7 @@ class _DieFTL:
         return best
 
     def erase(self, blk: int) -> None:
+        assert self.state[blk] != self.RETIRED, "erasing a retired block"
         assert self.valid_count[blk] == 0, "erasing block with valid pages"
         self.valid[blk] = [False] * self.ppb
         self.page_lpn[blk] = [-1] * self.ppb
@@ -335,6 +366,8 @@ class _DieFTL:
         c.active = dict(self.active)
         c.grown_blocks = self.grown_blocks
         c.gc_grown_blocks = self.gc_grown_blocks
+        c.retired_blocks = self.retired_blocks
+        c.no_grow = self.no_grow
         c.gc_running = self.gc_running
         c.reserve = self.reserve
         c.gc_victim = self.gc_victim
@@ -549,6 +582,9 @@ class FTLModel:
         # optional flight recorder (repro.sim.telemetry): GC cycle/copy
         # spans and suspend instants; pure observer, never books time
         self.telemetry = None
+        # optional fault model (repro.sim.faults): wear-dependent read
+        # errors, bad-block retirement, read-only degradation
+        self.faults = None
 
         # accounting
         self.host_pages_written = 0
@@ -557,6 +593,7 @@ class FTLModel:
         self.gc_pages_copied = 0
         self.blocks_erased = 0
         self.gc_invocations = 0
+        self.pages_relocated = 0       # survivor pages moved by retirement
         self.gc_suspensions = 0
         self.gc_active_dies = 0
         self.gc_energy_nj = 0.0
@@ -586,6 +623,8 @@ class FTLModel:
                         _PREFILL_CACHE.pop(next(iter(_PREFILL_CACHE)))
                     _PREFILL_CACHE[key] = ([d.clone() for d in self.dies],
                                            dict(self.l2p))
+        if cfg.prewear_writes:
+            self._apply_prewear(prefill_key)
         # the reserve is a per-run policy, not prefill state: apply after
         # any snapshot restore (a cached snapshot may have been taken
         # under a different reserve/GC setting)
@@ -593,11 +632,89 @@ class FTLModel:
         for d in self.dies:
             d.reserve = reserve
 
+    def _apply_prewear(self, prefill_key: Optional[tuple]) -> None:
+        """Build-time wear preconditioning: churn a *private* clone of
+        this drive with a seeded Zipf overwrite stream and adopt the
+        resulting state (mapping, heat, and — the point — the per-block
+        erase histogram the run's own victim policy produces).
+
+        State-only by construction: the churn runs on a throwaway
+        fabric/engine, so nothing is booked on the live pools and the
+        timed run is unperturbed.  Runtime accounting (WA, erase and GC
+        counters) starts at zero — prewear is drive *state*, like
+        ``prefill``.  Memoized alongside the prefill snapshots: the
+        outcome is a pure function of (LBA->die hash, full FTLConfig)."""
+        from repro.sim.tenancy import _zipf_cdf
+        cfg = self.cfg
+        key = None
+        if prefill_key is not None:
+            key = ("prewear", prefill_key, cfg)
+        hit = _PREFILL_CACHE.get(key) if key is not None else None
+        if hit is not None:
+            dies_snap, l2p_snap, heat_snap = hit
+            self.dies = [d.clone() for d in dies_snap]
+            self.l2p = dict(l2p_snap)
+            self.heat = dict(heat_snap)
+            return
+        from repro.sim.machine import _hash01
+        sub = dataclasses.replace(cfg, prewear_writes=0, prefill=0.0)
+        tmp = FTLModel(sub, self.spec, Fabric(self.spec), EventEngine(),
+                       self.die_of)
+        tmp.dies = self.dies               # continue from the prefill state
+        tmp.l2p = self.l2p
+        reserve = cfg.gc_reserve_blocks if cfg.gc_enabled else 0
+        for d in tmp.dies:
+            d.reserve = reserve
+        space = tmp.n_logical
+        cdf = _zipf_cdf(space, cfg.prewear_theta)
+        lpn_seed = 0x9EA7                  # fixed: prewear replays exactly
+        for i in range(cfg.prewear_writes):
+            u = min(0.999999, max(0.0, _hash01(i, lpn_seed)))
+            lpn = min(space - 1, bisect.bisect_left(cdf, u * cdf[-1]))
+            die = tmp.die_of(lpn)
+            tmp.host_write(lpn, die)
+            tmp.maybe_start_gc(die)
+            tmp.engine.run()
+        tmp.check_invariants()
+        self.dies = tmp.dies
+        self.l2p = tmp.l2p
+        self.heat = tmp.heat
+        if key is not None:
+            if len(_PREFILL_CACHE) >= _PREFILL_CACHE_MAX:
+                _PREFILL_CACHE.pop(next(iter(_PREFILL_CACHE)))
+            _PREFILL_CACHE[key] = ([d.clone() for d in self.dies],
+                                   dict(self.l2p), dict(self.heat))
+
     # -- host I/O attachment ---------------------------------------------------
 
     def attach_host(self, host_io) -> None:
         """Register the host I/O model whose queue depth throttles GC."""
         self._host_io = host_io
+
+    def attach_faults(self, fm) -> None:
+        """Register a :class:`~repro.sim.faults.FaultModel`: its wear/
+        retention error model gates every flash read, and uncorrectable
+        reads feed block retirement through this FTL.
+
+        Retirement permanently drains free blocks, so a GC-enabled run
+        *must* hold a collector reserve — without one, a retirement that
+        lands while the host has drained the pool would underflow the
+        free list mid-collection.  Rejected loudly here rather than
+        failing as a deque underflow deep inside a GC cycle."""
+        if self.cfg.gc_enabled and self.cfg.gc_reserve_blocks < 1:
+            raise ValueError(
+                "fault injection on a GC-enabled FTL requires "
+                "gc_reserve_blocks >= 1 (got "
+                f"{self.cfg.gc_reserve_blocks}): block retirement drains "
+                "the per-die free pool, and without a collector reserve "
+                "the free list underflows mid-collection")
+        self.faults = fm
+        fm.attach_ftl(self)
+        # growth stays allowed until a die actually retires a block (see
+        # retire_block): an error-free faulted run keeps the legacy
+        # overflow-valve dynamics bit-for-bit, and only a drive that is
+        # genuinely losing blocks trades the infinite-OP escape hatch
+        # for read-only degradation
 
     def _host_qd(self) -> int:
         h = self._host_io
@@ -609,18 +726,28 @@ class FTLModel:
 
     def _map_write(self, lpn: int, die: int, kind: str,
                    gc: bool = False) -> PPN:
-        """Allocate a physical page for ``lpn`` on ``die`` and remap."""
+        """Allocate a physical page for ``lpn`` on ``die`` and remap.
+
+        Allocation happens *before* the old mapping is invalidated (the
+        two touch disjoint state) so an :class:`OutOfPhysicalBlocks` from
+        a fault-degraded die leaves the mapping untouched."""
+        blk, pg = self.dies[die].alloc(lpn, kind, gc)
         old = self.l2p.get(lpn)
         if old is not None:
             self.dies[old[0]].invalidate(old[1], old[2])
-        blk, pg = self.dies[die].alloc(lpn, kind, gc)
         ppn = (die, blk, pg)
         self.l2p[lpn] = ppn
+        if self.faults is not None:
+            self.faults.on_program(die, blk, pg, self.engine.now)
         return ppn
 
     def host_write(self, lpn: int, die: int) -> PPN:
-        """One host page write through the mapping (caller books the time)."""
-        self.host_pages_written += 1
+        """One host page write through the mapping (caller books the time).
+
+        Raises :class:`OutOfPhysicalBlocks` when fault injection has
+        drained the die's pool — the caller surfaces a failed write and
+        the die degrades to read-only.  Counters only advance on
+        success."""
         heat = self.heat
         n = heat.get(lpn, 0) + 1
         heat[lpn] = n
@@ -628,11 +755,15 @@ class FTLModel:
         if self.cfg.hot_cold:
             if n >= self.hot_threshold:
                 kind = _DieFTL.HOST_HOT
-                self.hot_pages_written += 1
             else:
                 kind = _DieFTL.HOST_COLD
-                self.cold_pages_written += 1
-        return self._map_write(lpn, die, kind)
+        ppn = self._map_write(lpn, die, kind)
+        self.host_pages_written += 1
+        if kind == _DieFTL.HOST_HOT:
+            self.hot_pages_written += 1
+        elif kind == _DieFTL.HOST_COLD:
+            self.cold_pages_written += 1
+        return ppn
 
     def _survivor_kind(self, lpn: int) -> str:
         """Where a GC-copied survivor lands: cold compaction by default;
@@ -647,6 +778,81 @@ class FTLModel:
         """Die physically holding ``lpn`` (``default`` when never written)."""
         ppn = self.l2p.get(lpn)
         return ppn[0] if ppn is not None else default
+
+    def read_ppn(self, lpn: int) -> Optional[PPN]:
+        """Full physical address of ``lpn`` (None when never written)."""
+        return self.l2p.get(lpn)
+
+    # -- bad-block retirement (fault injection) --------------------------------
+
+    def retire_block(self, die: int, blk: int, t: float) -> float:
+        """Retire a bad block: relocate its surviving valid pages through
+        the GC machinery (real read/transfer/program bookings starting at
+        ``t``) and remove the block from the die's pool forever.
+
+        Returns the completion time of the relocation work.  When the
+        die cannot absorb the survivors (:class:`OutOfPhysicalBlocks`)
+        the die degrades to read-only and the block stays in place — its
+        pages remain readable through the parity-rebuild path."""
+        d = self.dies[die]
+        if blk >= len(d.state) or d.state[blk] == _DieFTL.RETIRED:
+            return t
+        fm = self.faults
+        if fm is not None and fm.die_dead(die, self.engine.now):
+            return t                   # the whole die is already gone
+        # the die is now genuinely losing capacity: close the infinite-OP
+        # overflow valve so further exhaustion surfaces as read-only
+        # degradation instead of silent growth
+        d.no_grow = True
+        f = self.spec.flash
+        nb = self.spec.page_size
+        chan = die % f.channels
+        xfer = 2.0 * (f.t_dma_ns + nb * f.channel_ns_per_byte)
+        dies_pool = self.fabric.dies
+        chan_pool = self.fabric.channels
+        t0 = t
+        relocated = 0
+        for pg in range(d.ppb):
+            if not d.valid[blk][pg]:
+                continue
+            lpn = d.page_lpn[blk][pg]
+            try:
+                # mapping first: a failed allocation must leave the page
+                # in place (still rebuildable), not half-moved
+                self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
+            except OutOfPhysicalBlocks:
+                if fm is not None:
+                    fm.mark_read_only(die)
+                return t               # block not retired; pages stay put
+            t = dies_pool.acquire_end(t, f.t_read_ns, unit=die)
+            t = chan_pool.acquire_end(t, xfer, unit=chan)
+            t = dies_pool.acquire_end(t, f.t_prog_ns, unit=die)
+            relocated += 1
+            self.gc_energy_nj += self._copy_energy(f)
+        # out of the pool forever: never free, never an append point
+        if d.state[blk] == _DieFTL.FREE:
+            try:
+                d.free.remove(blk)
+            except ValueError:
+                pass
+        for kind, ap in list(d.active.items()):
+            if ap is not None and ap[0] == blk:
+                d.active[kind] = None
+        d.state[blk] = _DieFTL.RETIRED
+        d.retired_blocks += 1
+        self.pages_relocated += relocated
+        if t > self.last_booked_ns:
+            self.last_booked_ns = t
+        if fm is not None:
+            fm.stats_.n_blocks_retired += 1
+            fm.stats_.n_pages_relocated += relocated
+            fm.uncorrectable.pop((die, blk), None)
+        tele = self.telemetry
+        if tele is not None:
+            tele.on_retirement(die, blk, t0, t, relocated)
+        # the pool just shrank: the collector may need to wake
+        self.maybe_start_gc(die)
+        return t
 
     # -- garbage collection as a background tenant ----------------------------
 
@@ -663,6 +869,9 @@ class FTLModel:
         d = self.dies[die]
         if not self.cfg.gc_enabled or d.gc_running:
             return
+        if (self.faults is not None
+                and self.faults.die_dead(die, self.engine.now)):
+            return                     # a failed die has nothing to collect
         if (d.free_fraction() >= self.low_wm
                 and (d.reserve == 0 or len(d.free) > d.reserve)):
             return
@@ -721,18 +930,44 @@ class FTLModel:
         pages0 = self.gc_pages_copied
         dies_pool = self.fabric.dies
         chan_pool = self.fabric.channels
+        fm = self.faults
         for pg in range(d.ppb):
             if not d.valid[victim][pg]:
                 continue
             lpn = d.page_lpn[victim][pg]
             t = dies_pool.acquire_end(t, f.t_read_ns, unit=die)
+            if fm is not None:
+                t, ok = fm.check_read(t, die, victim, pg)
+                if not d.valid[victim][pg]:
+                    continue    # check_read retired this very block and
+                                # already relocated the page
+                if not ok:
+                    # unrecoverable mid-GC: the data is gone.  Drop the
+                    # mapping (counted in FaultStats.n_failed_reads)
+                    # rather than program garbage.
+                    d.invalidate(victim, pg)
+                    del self.l2p[lpn]
+                    continue
             t = chan_pool.acquire_end(t, xfer, unit=chan)
+            try:
+                self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
+            except OutOfPhysicalBlocks:
+                fm.mark_read_only(die)     # no_grow implies fm is attached
+                self._gc_sleep(die)
+                return
             t = dies_pool.acquire_end(t, f.t_prog_ns, unit=die)
-            self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
             self.gc_pages_copied += 1
             self.gc_energy_nj += self._copy_energy(f)
+        if d.state[victim] == _DieFTL.RETIRED:
+            # retirement beat the collector to this block: nothing to erase
+            if t > self.last_booked_ns:
+                self.last_booked_ns = t
+            self.engine.schedule(t, EventKind.GC, self._on_gc, payload=die)
+            return
         t = self.fabric.dies.acquire_end(t, f.t_erase_ns, unit=die)
         d.erase(victim)
+        if fm is not None:
+            fm.on_erase(die, victim)
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block
         if t > self.last_booked_ns:
@@ -791,9 +1026,29 @@ class FTLModel:
                 tele.ctx = f"gc:die{die}"
             t = self.fabric.dies.acquire_end(engine.now, f.t_read_ns,
                                              unit=die)
+            fm = self.faults
+            if fm is not None:
+                t, ok = fm.check_read(t, die, victim, pg)
+                if not d.valid[victim][pg] or not ok:
+                    # either check_read retired the block (page already
+                    # relocated) or the data is unrecoverable: skip it
+                    if d.valid[victim][pg]:
+                        d.invalidate(victim, pg)
+                        del self.l2p[lpn]
+                    d.gc_cursor = pg + 1
+                    if t > self.last_booked_ns:
+                        self.last_booked_ns = t
+                    engine.schedule(t, EventKind.GC, self._on_gc_page,
+                                    payload=die)
+                    return
             t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
             t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
-            self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
+            try:
+                self._map_write(lpn, die, self._survivor_kind(lpn), gc=True)
+            except OutOfPhysicalBlocks:
+                fm.mark_read_only(die)     # no_grow implies fm is attached
+                self._gc_sleep(die)
+                return
             self.gc_pages_copied += 1
             self.gc_energy_nj += self._copy_energy(f)
             d.gc_cursor = pg + 1
@@ -804,10 +1059,18 @@ class FTLModel:
             engine.schedule(t, EventKind.GC, self._on_gc_page, payload=die)
             return
         # no valid pages left: erase, then move to the next victim
+        if d.state[victim] == _DieFTL.RETIRED:
+            # retirement beat the collector to this block: nothing to erase
+            d.gc_victim, d.gc_cursor = None, 0
+            engine.schedule(engine.now, EventKind.GC, self._on_gc_page,
+                            payload=die)
+            return
         if tele is not None:
             tele.ctx = f"gc:die{die}"
         t = self.fabric.dies.acquire_end(engine.now, f.t_erase_ns, unit=die)
         d.erase(victim)
+        if self.faults is not None:
+            self.faults.on_erase(die, victim)
         self.blocks_erased += 1
         self.gc_energy_nj += f.e_erase_nj_per_block
         d.gc_victim, d.gc_cursor = None, 0
@@ -846,6 +1109,12 @@ class FTLModel:
                 n = sum(d.valid[b])
                 assert n == d.valid_count[b], "valid count drifted"
                 total_valid += n
+                if d.state[b] == _DieFTL.RETIRED:
+                    assert n == 0, "retired block still holds valid pages"
+                    assert b not in d.free, "retired block on the free list"
+                    assert all(ap is None or ap[0] != b
+                               for ap in d.active.values()), \
+                        "retired block is an append point"
         assert total_valid == len(self.l2p), "valid pages != live mappings"
 
     def stats(self) -> FTLStats:
@@ -869,7 +1138,9 @@ class FTLModel:
             hot_pages_written=self.hot_pages_written,
             cold_pages_written=self.cold_pages_written,
             gc_overflow_blocks=sum(d.gc_grown_blocks for d in self.dies),
-            last_booked_ns=self.last_booked_ns)
+            last_booked_ns=self.last_booked_ns,
+            blocks_retired=sum(d.retired_blocks for d in self.dies),
+            pages_relocated=self.pages_relocated)
 
 
 def drive_zipf_overwrites(cfg: FTLConfig, spec: SSDSpec,

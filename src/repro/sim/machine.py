@@ -148,6 +148,14 @@ class Simulation:
         self._prev_decide_end = start_ns    # offloader pipeline cursor
         self._makespan = start_ns
         self.done = False
+        # an NDP operand sense came back unrecoverable (fault injection):
+        # the trace still drains — timing stays honest — but the result is
+        # marked failed and the serving layer surfaces it as a failed op
+        self.failed = False
+        # fault subsystem, if one is attached to the fabric (re-read in
+        # bind(): tenancy/serving construct the FaultModel after the sims)
+        self._faults = None
+        self._last_ifp_unit: Optional[int] = None
         # completion hook: the open-loop serving driver uses this to free
         # an admission slot / record session latency the moment a trace
         # drains (set before bind(); never affects simulation timing)
@@ -253,6 +261,9 @@ class Simulation:
         self._prev_decide_end = start_ns
         self._makespan = start_ns
         self.done = False
+        self.failed = False
+        self._faults = None
+        self._last_ifp_unit = None
         self.on_done = None
         self._view_now = 0.0
         self._cur_deps_ready = start_ns
@@ -290,6 +301,13 @@ class Simulation:
         if src == Location.FLASH:
             if pid not in self.buffered:   # latched pages skip the sense
                 t = self.dies.acquire_end(t, f.t_read_ns, unit=ent.die)
+                fm = self._faults
+                if fm is not None:
+                    # NDP operand senses are unmapped by the FTL
+                    # (blk/pg = -1): base + retention error rate only
+                    t, ok = fm.check_read(t, ent.die)
+                    if not ok:
+                        self.failed = True
             t = self.channels.acquire_end(
                 t, self._chan_xfer_ns, unit=ent.channel)
             if to in (Location.DRAM, Location.CTRL):
@@ -451,6 +469,7 @@ class Simulation:
             if unit is None:
                 unit = (self.pages[instr.srcs[0]].die
                         if instr.srcs else 0)
+            self._last_ifp_unit = unit   # audit: which die executed
         else:
             unit = None
         if r is Resource.PUD:
@@ -518,6 +537,7 @@ class Simulation:
         interleave their dispatches in global time order."""
         self.engine = engine
         self._tele = self.fabric.telemetry
+        self._faults = self.fabric.faults
         self._idx = 0
         self._prev_decide_end = self.start_ns
         self._makespan = self.start_ns
@@ -747,7 +767,8 @@ class Simulation:
                 self.tenant, self.policy.name, instr, r, feats,
                 now, decide_end, ready, move_end, start, end, dm_ns,
                 replayed=self._inject_faults
-                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate)
+                and _hash01(instr.iid, self.cfg.seed) < self.cfg.fail_rate,
+                unit=self._last_ifp_unit if r is Resource.IFP else None)
         # _after_instr inlined (this branch never ignores contention)
         if end > self._makespan:
             self._makespan = end
@@ -795,7 +816,8 @@ class Simulation:
             resource_busy_ns=self.fabric.busy_ns(),
             coherence_syncs=self.coherence_syncs, evictions=self.evictions,
             replays=self.replays, colocations=self.colocations,
-            tenant=self.tenant, start_ns=self.start_ns)
+            tenant=self.tenant, start_ns=self.start_ns,
+            failed=self.failed)
 
     def run(self) -> SimResult:
         """Single-tenant convenience: drive a private event loop to empty."""
@@ -809,7 +831,8 @@ def simulate(trace: Trace, policy: str | Policy,
              spec: SSDSpec = DEFAULT_SSD,
              config: Optional[SimConfig] = None,
              record_decisions: Optional[bool] = None,
-             telemetry: TelemetryLike = None) -> SimResult:
+             telemetry: TelemetryLike = None,
+             faults=None) -> SimResult:
     """Run one workload trace under one offloading policy.
 
     The single-tenant special case of the event engine; for concurrent
@@ -820,6 +843,11 @@ def simulate(trace: Trace, policy: str | Policy,
     :class:`~repro.sim.telemetry.TelemetryConfig` (or a prepared
     :class:`~repro.sim.telemetry.FlightRecorder`); the recorder observes
     without perturbing timing and comes back on ``result.telemetry``.
+    ``faults`` takes a :class:`~repro.sim.faults.FaultConfig`: an active
+    config arms the error model on the private fabric (NDP operand
+    senses roll the RBER model and walk the recovery ladder); ``None``
+    or an all-off config is bit-identical to a build without the fault
+    subsystem.
     """
     if isinstance(policy, str):
         policy = make_policy(policy, spec)
@@ -828,12 +856,22 @@ def simulate(trace: Trace, policy: str | Policy,
                                      record_decisions=record_decisions)
     sim = Simulation(trace, policy, spec, config)
     tele = as_recorder(telemetry)
-    if tele is None:
+    fault_on = faults is not None and faults.active
+    if tele is None and not fault_on:
         return sim.run()
     engine = EventEngine()
-    tele.attach(fabric=sim.fabric, engine=engine)
+    if fault_on:
+        from repro.sim.faults import FaultModel
+        FaultModel(faults, spec, sim.fabric, engine)
+    if tele is not None:
+        tele.attach(fabric=sim.fabric, engine=engine)
+        if sim.fabric.faults is not None:
+            tele.attach_faults(sim.fabric.faults)
     sim.bind(engine)
     engine.run()
     res = sim.result()
-    res.telemetry = tele
+    if tele is not None:
+        res.telemetry = tele
+    if sim.fabric.faults is not None:
+        res.faults = sim.fabric.faults.stats()
     return res

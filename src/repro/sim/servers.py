@@ -267,6 +267,16 @@ class Fabric:
         # FlightRecorder.attach; tenant Simulations bound to this fabric
         # read it to route their dispatch hooks
         self.telemetry = None
+        # optional fault model (repro.sim.faults): set by the simulate_*
+        # wiring when a FaultConfig with active error sources is passed;
+        # tenant Simulations and the host I/O model read it to route
+        # flash reads through the recovery ladder
+        self.faults = None
+        # pools that exist only in some configurations (e.g. the ECC
+        # soft-decode engines the fault model registers).  Kept out of
+        # ``pools`` so ``busy_ns()`` — and hence the golden digests — is
+        # unchanged whenever the list is empty.
+        self.extra: List[ServerPool] = []
         self.pools: Dict = {
             Resource.ISP: ServerPool("isp", spec.isp.compute_cores),
             Resource.PUD: ServerPool("pud", pud_units),
@@ -316,7 +326,8 @@ class Fabric:
 
     def all_pools(self) -> List[ServerPool]:
         return list(self.pools.values()) + [
-            self.offloader, self.channels, self.dram_bus, self.pcie]
+            self.offloader, self.channels, self.dram_bus, self.pcie] \
+            + self.extra
 
     def busy_ns(self) -> Dict[str, float]:
         return {p.name: p.busy_ns for p in self.all_pools()}

@@ -57,7 +57,7 @@ from repro.sim.events import EventEngine, EventKind
 from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation
 from repro.sim.servers import Fabric
-from repro.sim.stats import ServingResult, SessionRecord
+from repro.sim.stats import ServingResult, SessionRecord, SessionState
 from repro.sim.telemetry import TelemetryLike, as_recorder
 from repro.sim.tenancy import (HostIOStream, _HostIOModel, build_ftl_model,
                                clone_trace)
@@ -103,6 +103,12 @@ class ServingConfig:
     keep_session_results: bool = True
     pool_sessions: bool = True
     little_law_warn_tol: float = 0.35
+    # host-side session deadline: an admitted session still running this
+    # long after admission is marked TIMED_OUT, its slot freed and the
+    # backlog drained (the in-flight work is not revoked — the drive
+    # finishes it; the *host* stopped waiting).  Catalog entries may
+    # override per kind via CatalogEntry.timeout_ns.  None = no deadline.
+    session_timeout_ns: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.max_active_sessions < 1:
@@ -113,6 +119,9 @@ class ServingConfig:
             raise ValueError("warmup_ns/cooldown_ns must be >= 0")
         if self.little_law_warn_tol <= 0.0:
             raise ValueError("little_law_warn_tol must be > 0")
+        if self.session_timeout_ns is not None and self.session_timeout_ns <= 0.0:
+            raise ValueError("session_timeout_ns must be > 0 (or None), "
+                             f"got {self.session_timeout_ns}")
 
 
 class _ServingDriver:
@@ -137,6 +146,8 @@ class _ServingDriver:
         self.n_rejected = 0
         self.n_admitted = 0
         self.n_completed = 0
+        self.n_failed = 0
+        self.n_timed_out = 0
         self.results: List = []
         self.op_latencies: List[float] = []
 
@@ -204,7 +215,7 @@ class _ServingDriver:
             self._mark(now, +1)             # queued sessions are in-system
             self.backlog.append(sid)
         else:
-            self.records[sid].rejected = True
+            self.records[sid].state = SessionState.REJECTED
             self.n_rejected += 1
             if tele is not None:
                 tele.on_session_reject(sid, self.entries[sid].name, now)
@@ -230,16 +241,53 @@ class _ServingDriver:
                              tenant=f"s{sid}:{entry.name}", start_ns=now)
         sim.on_done = lambda s, sid=sid: self._on_done(s, sid)
         sim.bind(self.engine)
+        timeout = (entry.timeout_ns if entry.timeout_ns is not None
+                   else self.scfg.session_timeout_ns)
+        if timeout is not None:
+            self.engine.schedule(now + timeout, EventKind.TIMER,
+                                 self._on_timeout, payload=sid)
+
+    def _on_timeout(self, sid: int) -> None:
+        """Host-side session deadline fired: if the session is still
+        running, the host stops waiting — the slot frees and the backlog
+        drains, while the in-flight work drains on the fabric (its
+        completion is then a bookkeeping no-op)."""
+        rec = self.records[sid]
+        if rec.state is not SessionState.PENDING:
+            return                      # already done / failed / rejected
+        rec.state = SessionState.TIMED_OUT
+        self.n_timed_out += 1
+        self.active -= 1
+        now = self.engine.now
+        self._mark(now, -1)
+        if self.telemetry is not None:
+            self.telemetry.on_session_timeout(sid, rec.kind, now)
+        if self.backlog:
+            self._admit(self.backlog.popleft())
 
     def _on_done(self, sim: Simulation, sid: int) -> None:
         rec = self.records[sid]
         rec.done_ns = sim._makespan
+        if rec.state is SessionState.TIMED_OUT:
+            # the host already gave up on this session: the drained work
+            # only gets repooled — slot/occupancy freed at timeout time
+            if self.scfg.pool_sessions:
+                self._sim_pool.setdefault(
+                    self.entries[sid].name, []).append(sim)
+            return
+        if sim.failed:
+            # an operand read came back unrecoverable mid-run: the
+            # session drained (timing honest) but its result is garbage
+            rec.state = SessionState.FAILED
+            self.n_failed += 1
+        else:
+            rec.state = SessionState.COMPLETED
+            self.n_completed += 1
         if self.telemetry is not None:
             self.telemetry.on_session_done(sid, rec.kind, rec.done_ns)
-        self.n_completed += 1
         self.active -= 1
         self._mark(self.engine.now, -1)
-        if rec.measured:
+        if rec.measured and rec.state is SessionState.COMPLETED:
             self.op_latencies.extend(sim.op_latencies)
         if self.scfg.keep_session_results:
             self.results.append(sim.result())
@@ -266,11 +314,14 @@ class _ServingDriver:
                 util[name] = delta / (span * units[name])
         # the makespan is when the *drive* goes quiet, not just the last
         # session: background GC booked past the final completion (the
-        # FTL tail) counts — same fold as simulate_mix
-        makespan = max([r.done_ns for r in self.records if r.completed]
+        # FTL tail) counts — same fold as simulate_mix.  Failed and
+        # timed-out sessions drained real work, so their done times count.
+        makespan = max([r.done_ns for r in self.records
+                        if r.done_ns >= 0.0]
                        + ([io.last_complete_ns] if io else [])
                        + ([ftl_model.last_booked_ns]
                           if ftl_model is not None else []) + [0.0])
+        fm = self.fabric.faults
         return ServingResult(
             policy=policy_name,
             sessions=self.records,
@@ -286,7 +337,10 @@ class _ServingDriver:
             host_io=io.stats() if io else None,
             session_results=(self.results
                              if self.scfg.keep_session_results else None),
-            ftl=ftl_model.stats() if ftl_model is not None else None)
+            ftl=ftl_model.stats() if ftl_model is not None else None,
+            n_failed=self.n_failed,
+            n_timed_out=self.n_timed_out,
+            faults=fm.stats() if fm is not None else None)
 
 
 def simulate_serving(catalog: SessionCatalog,
@@ -298,7 +352,8 @@ def simulate_serving(catalog: SessionCatalog,
                      io_stream: Optional[HostIOStream] = None,
                      ftl: Optional[FTLConfig] = None,
                      engine: Optional[EventEngine] = None,
-                     telemetry: TelemetryLike = None) -> ServingResult:
+                     telemetry: TelemetryLike = None,
+                     faults=None) -> ServingResult:
     """Serve an open-loop session stream on one SSD; see module docstring.
 
     ``policy`` is the run-wide offloading policy (catalog entries may
@@ -308,8 +363,11 @@ def simulate_serving(catalog: SessionCatalog,
     via the prefill snapshot cache) so sessions churn while the drive
     collects garbage — the full production picture.  Pass a
     ``record=True`` engine to capture the event timeline.  The run always
-    drains: every admitted session completes, so the conservation law
-    ``offered == completed + rejected`` holds on the result.
+    drains: every admitted session reaches a terminal state, so the
+    conservation law ``offered == completed + rejected + failed +
+    timed_out`` holds on the result (failed and timed-out sessions exist
+    only under fault injection / session timeouts — see ``faults`` and
+    ``ServingConfig.session_timeout_ns``).
     ``ServingConfig.record_decisions`` governs the per-session
     DecisionRecord logging even when a ``config`` is passed (serving
     admits far too many sessions to default to full logging).
@@ -344,13 +402,21 @@ def simulate_serving(catalog: SessionCatalog,
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
+    fm = None
+    if faults is not None and faults.active:
+        from repro.sim.faults import FaultModel
+        fm = FaultModel(faults, spec, fabric, engine)
     tele = as_recorder(telemetry)
     if tele is not None:
         tele.attach(fabric=fabric, engine=engine)
+        if fm is not None:
+            tele.attach_faults(fm)
     driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
                             scfg, fabric, engine)
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
                  if ftl is not None else None)
+    if ftl_model is not None and fm is not None:
+        ftl_model.attach_faults(fm)
     io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
           if io_stream is not None else None)
     if tele is not None:
@@ -381,13 +447,22 @@ def simulate_serving(catalog: SessionCatalog,
 
 @dataclasses.dataclass
 class SaturationProbe:
-    """One bisection probe: the serving run at one offered rate."""
+    """One bisection probe: the serving run at one offered rate.
+
+    ``completed_rate_per_sec`` is the *goodput* — only sessions that ran
+    to completion count, so under fault injection it diverges from the
+    admitted rate.  ``p99_ns`` is NaN when no session latency could be
+    measured (every in-window arrival bounced, failed or timed out);
+    ``availability`` then carries the verdict instead."""
 
     rate_per_sec: float
     p99_ns: float
     n_rejected: int
     completed_rate_per_sec: float
     sustainable: bool
+    availability: float = 1.0        # completed / (completed+failed+timed out)
+    n_failed: int = 0
+    n_timed_out: int = 0
 
 
 @dataclasses.dataclass
@@ -422,7 +497,9 @@ def _saturation_probe(catalog: SessionCatalog, base: ArrivalProcess,
                       config: Optional[SimConfig],
                       io_stream: Optional[HostIOStream],
                       ftl: Optional[FTLConfig],
-                      probes: List[SaturationProbe]) -> bool:
+                      probes: List[SaturationProbe],
+                      faults=None,
+                      min_availability: float = 1.0) -> bool:
     """One bisection probe: serve ``base.at_rate(rate)``, append the
     :class:`SaturationProbe`, return sustainability.  Shared verbatim by
     :func:`find_saturation` and the batched lockstep search in
@@ -430,34 +507,41 @@ def _saturation_probe(catalog: SessionCatalog, base: ArrivalProcess,
     # the bisection probes unsustainable rates on purpose: past the knee
     # the Little's-law ratio always degrades, so the edge-effect warning
     # carries no information here — sustainability is judged on
-    # rejections and the p99 directly
+    # rejections, availability and the p99 directly
     with warnings.catch_warnings():
         warnings.filterwarnings("ignore", message="little_law_ratio",
                                 category=RuntimeWarning)
         res = simulate_serving(catalog, base.at_rate(rate), policy,
                                spec=spec, config=config, serving=scfg,
-                               io_stream=io_stream, ftl=ftl)
+                               io_stream=io_stream, ftl=ftl, faults=faults)
+    avail = res.availability
+    # a measured-but-uncompleted window (every session failed/timed out/
+    # bounced) is a legitimate *unsustainable* verdict — distinguish it
+    # via the session terminal states instead of the old NaN-p99-only
+    # convention; p99 stays NaN when nothing completed in-window
+    p99 = res.p(99) if res.session_latencies_ns else float("nan")
     if res.n_rejected > 0:
         # rejections alone prove the rate unsustainable — even when
         # every in-window arrival bounced and no latency was measured
         # (then there is no p99 to report: record NaN, not the
         # empty-percentile 0.0 that would masquerade as a great tail)
-        p99 = (res.p(99) if res.session_latencies_ns
-               else float("nan"))
         probes.append(SaturationProbe(
-            rate, p99, res.n_rejected,
-            res.completed_rate_per_sec, False))
+            rate, p99, res.n_rejected, res.completed_rate_per_sec, False,
+            availability=avail, n_failed=res.n_failed,
+            n_timed_out=res.n_timed_out))
         return False
-    if not res.session_latencies_ns:
+    if not any(s.measured for s in res.sessions):
         raise ValueError(
             f"no measured sessions at rate {rate:.1f}/s: warmup/cooldown "
             f"trim ({scfg.warmup_ns:.0f}+{scfg.cooldown_ns:.0f} ns) "
             "swallows the arrival span — an empty window would make "
             "every rate look sustainable")
-    p99 = res.p(99)
-    ok = p99 <= slo_p99_ns
+    ok = (avail >= min_availability
+          and bool(res.session_latencies_ns) and p99 <= slo_p99_ns)
     probes.append(SaturationProbe(rate, p99, 0,
-                                  res.completed_rate_per_sec, ok))
+                                  res.completed_rate_per_sec, ok,
+                                  availability=avail, n_failed=res.n_failed,
+                                  n_timed_out=res.n_timed_out))
     return ok
 
 
@@ -474,7 +558,9 @@ def find_saturation(catalog: SessionCatalog,
                     config: Optional[SimConfig] = None,
                     serving: Optional[ServingConfig] = None,
                     io_stream: Optional[HostIOStream] = None,
-                    ftl: Optional[FTLConfig] = None
+                    ftl: Optional[FTLConfig] = None,
+                    faults=None,
+                    min_availability: float = 1.0
                     ) -> SaturationResult:
     """Bisect the offered rate for the max sustainable sessions/sec.
 
@@ -488,11 +574,20 @@ def find_saturation(catalog: SessionCatalog,
     saturation point under bursty traffic instead.  ``ftl`` (with an
     ``io_stream`` whose writes drive the collector) finds the saturation
     point of a drive that is actively collecting garbage — GC steals
-    sustainable session throughput, measurably."""
+    sustainable session throughput, measurably.
+
+    ``faults`` threads a :class:`~repro.sim.faults.FaultConfig` through
+    every probe, and sustainability then additionally requires
+    ``availability >= min_availability`` — the bisection reports the max
+    rate at which the drive still delivers its *goodput* SLO while
+    walking recovery ladders and retiring blocks."""
     if rate_lo <= 0.0 or rate_hi <= rate_lo:
         raise ValueError("need 0 < rate_lo < rate_hi")
     if iters < 1:
         raise ValueError("iters must be >= 1")
+    if not 0.0 < min_availability <= 1.0:
+        raise ValueError(
+            f"min_availability must be in (0, 1], got {min_availability}")
     base = base_process or PoissonArrivals(rate_per_sec=rate_lo,
                                            n_sessions=n_sessions, seed=seed)
     scfg = serving or ServingConfig(keep_session_results=False)
@@ -500,7 +595,9 @@ def find_saturation(catalog: SessionCatalog,
 
     def probe(rate: float) -> bool:
         return _saturation_probe(catalog, base, policy, rate, slo_p99_ns,
-                                 scfg, spec, config, io_stream, ftl, probes)
+                                 scfg, spec, config, io_stream, ftl, probes,
+                                 faults=faults,
+                                 min_availability=min_availability)
 
     name = policy if isinstance(policy, str) else policy.name
     if not probe(rate_lo):

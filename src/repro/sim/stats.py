@@ -8,6 +8,7 @@ the slowdowns, and host-I/O tail latency (:class:`HostIOStats`)."""
 from __future__ import annotations
 
 import dataclasses
+import enum
 import math
 from typing import Dict, List, Optional, Tuple
 
@@ -57,6 +58,11 @@ class SimResult:
     op_latencies_ns: Optional[List[float]] = None
     # FlightRecorder when the run was invoked with telemetry=...
     telemetry: Optional[object] = None
+    # fault injection: an NDP operand sense came back unrecoverable
+    # somewhere in the run (timing stayed honest; data did not)
+    failed: bool = False
+    # FaultStats snapshot when the run was invoked with faults=...
+    faults: Optional[object] = None
 
     @property
     def total_energy_nj(self) -> float:
@@ -110,6 +116,10 @@ class HostIOStats:
     n_reads: int
     n_writes: int
     latencies_ns: List[float]
+    # ops surfaced as failed under fault injection (unrecoverable reads,
+    # rejected writes, timeout-retry budgets spent) — excluded from the
+    # latency population above, never silently dropped
+    n_failed: int = 0
 
     @property
     def n_requests(self) -> int:
@@ -125,7 +135,7 @@ class HostIOStats:
         return percentile(self.latencies_ns, pct)
 
     def summary(self) -> Dict[str, object]:
-        return {
+        out: Dict[str, object] = {
             "io_requests": self.n_requests,
             "io_reads": self.n_reads,
             "io_mean_us": self.mean_ns / 1e3,
@@ -133,6 +143,9 @@ class HostIOStats:
             "io_p99_us": self.p(99) / 1e3,
             "io_p999_us": self.p(99.9) / 1e3,
         }
+        if self.n_failed:
+            out["io_failed"] = self.n_failed
+        return out
 
 
 @dataclasses.dataclass
@@ -177,6 +190,11 @@ class FTLStats:
     # tail that can outlive every tenant and host request, folded into
     # MixResult/ServingResult makespans (0.0 if GC never booked)
     last_booked_ns: float = 0.0
+    # bad-block retirement (fault injection; see repro.sim.faults):
+    # blocks permanently removed from the pool and the surviving valid
+    # pages relocated through the GC machinery on the way out
+    blocks_retired: int = 0
+    pages_relocated: int = 0
 
     @property
     def write_amplification(self) -> float:
@@ -217,7 +235,7 @@ class FTLStats:
         return percentile(self.host_during_gc_ns, pct)
 
     def summary(self) -> Dict[str, object]:
-        return {
+        out: Dict[str, object] = {
             "ftl_gc": self.gc_enabled,
             "victim_policy": self.victim_policy,
             "hot_cold": self.hot_cold,
@@ -233,6 +251,27 @@ class FTLStats:
             "io_during_gc": len(self.host_during_gc_ns),
             "io_p99_during_gc_us": self.p_during_gc(99) / 1e3,
         }
+        if self.blocks_retired:
+            out["blocks_retired"] = self.blocks_retired
+            out["pages_relocated"] = self.pages_relocated
+        return out
+
+
+class SessionState(enum.Enum):
+    """Terminal state of an open-loop session (:mod:`repro.sim.serving`).
+
+    ``PENDING`` is the only non-terminal state: a session still queued or
+    executing when the record is inspected mid-run (a drained run leaves
+    none).  The terminal states are mutually exclusive — the explicit
+    enum replaces the old ``completed`` bool + NaN-p99 convention, under
+    which a window where every session timed out was indistinguishable
+    from one that measured nothing at all."""
+
+    PENDING = "pending"
+    COMPLETED = "completed"          # ran to completion, counted in goodput
+    REJECTED = "rejected"            # bounced off the full admission backlog
+    FAILED = "failed"                # an unrecoverable fault inside the run
+    TIMED_OUT = "timed_out"          # exceeded the session timeout
 
 
 @dataclasses.dataclass
@@ -242,7 +281,7 @@ class SessionRecord:
     ``latency_ns`` is arrival-to-completion — it includes time spent in
     the admission backlog, which is exactly what an open-loop client
     observes.  It is only defined for completed sessions: reading it on a
-    rejected / never-completed record raises instead of returning the
+    rejected / failed / timed-out record raises instead of returning the
     nonsense negative ``-1.0 - arrival_ns`` (consumers must filter on
     :attr:`completed` first, as :attr:`ServingResult.measured_sessions`
     does).  ``measured`` marks sessions whose *arrival* falls inside the
@@ -253,20 +292,33 @@ class SessionRecord:
     arrival_ns: float
     admit_ns: float = -1.0          # admission time (-1: never admitted)
     done_ns: float = -1.0           # end of the session's last booking
-    rejected: bool = False          # bounced off the full admission backlog
+    state: SessionState = SessionState.PENDING
     measured: bool = False
 
     @property
     def completed(self) -> bool:
-        return self.done_ns >= 0.0
+        return self.state is SessionState.COMPLETED
+
+    @property
+    def rejected(self) -> bool:
+        """Back-compat view of the admission-rejection terminal state."""
+        return self.state is SessionState.REJECTED
+
+    @property
+    def failed(self) -> bool:
+        return self.state is SessionState.FAILED
+
+    @property
+    def timed_out(self) -> bool:
+        return self.state is SessionState.TIMED_OUT
 
     @property
     def latency_ns(self) -> float:
         """Arrival-to-completion, including admission-queue wait."""
-        if self.done_ns < 0.0:
+        if self.state is not SessionState.COMPLETED or self.done_ns < 0.0:
             raise ValueError(
                 f"session {self.sid} never completed "
-                f"(rejected={self.rejected}): latency_ns is undefined — "
+                f"(state={self.state.value}): latency_ns is undefined — "
                 "filter on .completed before reading latencies")
         return self.done_ns - self.arrival_ns
 
@@ -277,7 +329,7 @@ class SessionRecord:
         if self.admit_ns < 0.0:
             raise ValueError(
                 f"session {self.sid} was never admitted "
-                f"(rejected={self.rejected}): queue_wait_ns is undefined")
+                f"(state={self.state.value}): queue_wait_ns is undefined")
         return self.admit_ns - self.arrival_ns
 
 
@@ -308,14 +360,43 @@ class ServingResult:
     ftl: Optional[FTLStats] = None   # present when an FTL was configured
     # FlightRecorder when the run was invoked with telemetry=...
     telemetry: Optional[object] = None
+    n_failed: int = 0                # unrecoverable fault inside the session
+    n_timed_out: int = 0             # exceeded the session timeout
+    # FaultStats when the run was invoked with faults=...
+    faults: Optional[object] = None
 
     # -- conservation ---------------------------------------------------------
 
     @property
     def n_inflight(self) -> int:
-        """Sessions neither completed nor rejected (0 after a drained run);
-        offered == completed + rejected + inflight is the conservation law."""
-        return self.n_offered - self.n_completed - self.n_rejected
+        """Sessions with no terminal state (0 after a drained run);
+        offered == completed + rejected + failed + timed-out + inflight
+        is the conservation law."""
+        return (self.n_offered - self.n_completed - self.n_rejected
+                - self.n_failed - self.n_timed_out)
+
+    # -- robustness -----------------------------------------------------------
+
+    @property
+    def availability(self) -> float:
+        """Fraction of *admitted, terminal* sessions that completed
+        successfully: ``completed / (completed + failed + timed-out)``.
+        Rejections are admission control, not failures, and stay out of
+        the denominator (they gate saturation separately).  1.0 on a run
+        where nothing was admitted."""
+        den = self.n_completed + self.n_failed + self.n_timed_out
+        if den == 0:
+            return 1.0
+        return self.n_completed / den
+
+    @property
+    def goodput_per_sec(self) -> float:
+        """*Successful* sessions per second inside the measurement
+        window — what a degraded drive actually delivers.  Identical to
+        :attr:`completed_rate_per_sec` (which only ever counts
+        successfully completed sessions), named for the
+        availability-aware saturation search."""
+        return self.completed_rate_per_sec
 
     # -- steady-state window --------------------------------------------------
 
@@ -387,6 +468,9 @@ class ServingResult:
             "offered": self.n_offered,
             "completed": self.n_completed,
             "rejected": self.n_rejected,
+            "failed": self.n_failed,
+            "timed_out": self.n_timed_out,
+            "availability": round(self.availability, 4),
             "offered_per_sec": round(self.offered_rate_per_sec, 1),
             "completed_per_sec": round(self.completed_rate_per_sec, 1),
             "session_p50_us": self.p(50) / 1e3,
@@ -431,6 +515,8 @@ class MixResult:
     ftl: Optional["FTLStats"] = None  # present when an FTL was configured
     # FlightRecorder when the run was invoked with telemetry=...
     telemetry: Optional[object] = None
+    # FaultStats snapshot when the run was invoked with faults=...
+    faults: Optional[object] = None
 
     def tenant(self, name: str) -> SimResult:
         for r in self.tenants:

@@ -97,6 +97,7 @@ PID_FTL = 2         # one thread per die: GC cycle / copy / erase spans
 PID_SESSIONS = 3    # async b/e per session (arrival -> done/reject)
 PID_HOST_IO = 4     # async b/e per host request (arrival -> complete)
 PID_METRICS = 5     # "C" counter tracks fed by the interval sampler
+PID_RELIABILITY = 6  # per-die recovery/rebuild spans, retirement events
 
 _NS_TO_US = 1e-3    # Chrome-trace ts/dur are microseconds
 
@@ -150,6 +151,10 @@ class OffloadAudit:
     chosen_total_ns: float
     candidates: Tuple[CandidateCost, ...]
     replayed: bool = False
+    # fault injection: the decision sent work to a die whose recovery
+    # ladder (retry/soft-decode/rebuild) was still draining at decide
+    # time — the queue features the policy saw included recovery work
+    mid_recovery: bool = False
 
     def explain(self) -> str:
         """Render the decision as a table: features -> costs -> choice."""
@@ -171,7 +176,8 @@ class OffloadAudit:
         lines.append(
             f"  chosen: {self.chosen}"
             f" (total {self.chosen_total_ns:.0f} ns"
-            f"{', replayed on fault' if self.replayed else ''})")
+            f"{', replayed on fault' if self.replayed else ''}"
+            f"{', landed mid-recovery' if self.mid_recovery else ''})")
         return "\n".join(lines)
 
     def as_dict(self) -> Dict[str, object]:
@@ -179,7 +185,7 @@ class OffloadAudit:
             "tenant": self.tenant, "iid": self.iid, "op": self.op,
             "policy": self.policy, "t_decide_ns": self.t_decide_ns,
             "chosen": self.chosen, "chosen_total_ns": self.chosen_total_ns,
-            "replayed": self.replayed,
+            "replayed": self.replayed, "mid_recovery": self.mid_recovery,
             "candidates": [c.as_dict() for c in self.candidates],
         }
 
@@ -295,6 +301,7 @@ class FlightRecorder:
         self.event_counts: Dict[str, int] = {}
         self._engine: Optional[EventEngine] = None
         self._fabric = None
+        self._faults = None
         self._prev_busy: Dict[str, float] = {}
         self._prev_t = 0.0
         self._sampler_on = False
@@ -327,6 +334,16 @@ class FlightRecorder:
     def attach_host_io(self, io_model) -> None:
         """Register the host I/O model for request-lifecycle spans."""
         io_model.telemetry = self
+
+    def attach_faults(self, fault_model) -> None:
+        """Register the fault subsystem: recovery/retirement spans, die
+        failure / read-only instants, and the mid-recovery flag on the
+        offload audit.  The ECC pool is created after :meth:`attach` has
+        already set the pool tracers, so it is wired here."""
+        fault_model.telemetry = self
+        self._faults = fault_model
+        if self.cfg.spans:
+            fault_model.ecc.tracer = self._on_booking
 
     def attach_serving(self, driver) -> None:
         """Register the serving driver: session-lifecycle spans plus the
@@ -402,14 +419,18 @@ class FlightRecorder:
                     feats, t_decide: float, decide_end: float,
                     ready: float, move_end: float, start: float,
                     end: float, dm_ns: float,
-                    replayed: bool = False) -> None:
+                    replayed: bool = False,
+                    unit: Optional[int] = None) -> None:
         """Called once per dispatched instruction, after all bookings.
 
         ``feats`` is the per-candidate :class:`~repro.core.cost.Features`
         dict (None when the audit product is off) — computed by the
         policy's own read-only ``_feats`` derivation right after the
         selection, before any booking mutated pool state, so it is the
-        exact decision-time view."""
+        exact decision-time view.  ``unit`` is the die an IFP decision
+        executed on (None otherwise): under fault injection the audit
+        flags decisions that landed on a die whose recovery ladder was
+        still draining at decide time."""
         lat = end - t_decide
         self._latwin.append(lat)
         rname = resource.value
@@ -433,12 +454,16 @@ class FlightRecorder:
                           f.latency_dm, f.delay_dd, f.delay_queue, f.total)
             for r, f in feats.items())
         chosen = feats.get(resource)
+        fm = self._faults
+        mid_recovery = (fm is not None and unit is not None
+                        and fm.recovery_until[unit] > t_decide)
         self.audit.append(OffloadAudit(
             tenant=tenant, iid=instr.iid, op=instr.op, policy=policy,
             t_decide_ns=t_decide, chosen=rname,
             chosen_total_ns=(chosen.total if chosen is not None
                              else float("nan")),
-            candidates=cands, replayed=replayed))
+            candidates=cands, replayed=replayed,
+            mid_recovery=mid_recovery))
 
     # -- GC hooks (product 1) -------------------------------------------------
 
@@ -459,6 +484,49 @@ class FlightRecorder:
                 "ph": "i", "pid": PID_FTL,
                 "tid": self._tid(PID_FTL, f"die{die}"),
                 "name": "gc-suspend", "ts": t * _NS_TO_US, "s": "t"})
+
+    # -- reliability hooks (product 1, fault injection) -----------------------
+
+    def _rel_span(self, die: int, name: str, t0: float, t1: float,
+                  args: Optional[dict] = None) -> None:
+        if len(self.spans) >= self.cfg.max_spans:
+            self.dropped_spans += 1
+            return
+        ev = {"ph": "X", "pid": PID_RELIABILITY,
+              "tid": self._tid(PID_RELIABILITY, f"die{die}"),
+              "name": name, "ts": t0 * _NS_TO_US,
+              "dur": (t1 - t0) * _NS_TO_US}
+        if args:
+            ev["args"] = args
+        self.spans.append(ev)
+
+    def on_recovery(self, die: int, stage: str, t0: float,
+                    t1: float) -> None:
+        """One recovery-ladder stage on a die: read-retry, soft-decode,
+        uncorrectable, rebuild or read-failed — span on the die's track."""
+        if self.cfg.spans:
+            self._rel_span(die, f"recovery:{stage}", t0, t1)
+
+    def on_retirement(self, die: int, blk: int, t0: float, t1: float,
+                      relocated: int) -> None:
+        """Bad-block retirement: the survivor-relocation span."""
+        if self.cfg.spans:
+            self._rel_span(die, f"retire b{blk}", t0, t1,
+                           {"pages_relocated": relocated})
+
+    def on_die_failure(self, die: int, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "i", "pid": PID_RELIABILITY,
+                "tid": self._tid(PID_RELIABILITY, f"die{die}"),
+                "name": "die-failure", "ts": t * _NS_TO_US, "s": "t"})
+
+    def on_read_only(self, die: int, t: float) -> None:
+        if self.cfg.spans:
+            self.async_events.append({
+                "ph": "i", "pid": PID_RELIABILITY,
+                "tid": self._tid(PID_RELIABILITY, f"die{die}"),
+                "name": "read-only", "ts": t * _NS_TO_US, "s": "t"})
 
     # -- session hooks (product 1) --------------------------------------------
 
@@ -481,6 +549,20 @@ class FlightRecorder:
                 "ph": "e", "cat": "session", "id": sid,
                 "pid": PID_SESSIONS, "tid": 0,
                 "name": f"session:{kind}", "ts": t * _NS_TO_US})
+
+    def on_session_timeout(self, sid: int, kind: str, t: float) -> None:
+        # close the async span at abandonment time (the in-flight work
+        # drains unobserved) and mark the deadline miss
+        if self.cfg.spans:
+            ts = t * _NS_TO_US
+            self.async_events.append({
+                "ph": "e", "cat": "session", "id": sid,
+                "pid": PID_SESSIONS, "tid": 0,
+                "name": f"session:{kind}", "ts": ts,
+                "args": {"timed_out": True}})
+            self.async_events.append({
+                "ph": "i", "pid": PID_SESSIONS, "tid": 0,
+                "name": f"timeout s{sid}", "ts": ts, "s": "t"})
 
     def on_session_reject(self, sid: int, kind: str, t: float) -> None:
         # close the async span so b/e stay balanced, and mark the bounce
@@ -599,6 +681,8 @@ class FlightRecorder:
              "args": {"name": "host-io"}},
             {"ph": "M", "name": "process_name", "pid": PID_METRICS,
              "args": {"name": "metrics"}},
+            {"ph": "M", "name": "process_name", "pid": PID_RELIABILITY,
+             "args": {"name": "reliability"}},
         ]
         events += self._meta
         events += self.spans
@@ -756,6 +840,11 @@ def main(argv: Optional[List[str]] = None,
                       ("validate", "structurally validate a trace")):
         p = sub.add_parser(name, help=hlp)
         p.add_argument("trace", help="path to an exported trace JSON")
+        if name == "summarize":
+            p.add_argument("--json", action="store_true",
+                           help="emit one compact machine-readable JSON "
+                                "line (sorted keys) instead of the "
+                                "pretty-printed summary")
     args = ap.parse_args(argv)
     try:
         with open(args.trace) as f:
@@ -775,7 +864,12 @@ def main(argv: Optional[List[str]] = None,
     if errors:
         print(f"error: invalid trace ({errors[0]})", file=out)
         return 1
-    print(json.dumps(summarize(obj), indent=2), file=out)
+    s = summarize(obj)
+    if getattr(args, "json", False):
+        print(json.dumps(s, sort_keys=True, separators=(",", ":")),
+              file=out)
+    else:
+        print(json.dumps(s, indent=2), file=out)
     return 0
 
 

@@ -57,7 +57,7 @@ from repro.core.policies import Policy, make_policy
 from repro.core.vectorize import Trace
 from repro.hw.ssd_spec import DEFAULT_SSD, SSDSpec
 from repro.sim.events import EventEngine, EventKind
-from repro.sim.ftl import FTLConfig, FTLModel
+from repro.sim.ftl import FTLConfig, FTLModel, OutOfPhysicalBlocks
 from repro.sim.machine import SimConfig, Simulation, _hash01, simulate
 from repro.sim.servers import Fabric
 from repro.sim.stats import HostIOStats, MixResult
@@ -205,6 +205,13 @@ class _HostIOModel:
         self.outstanding = 0
         self.pending: Deque[Tuple[int, float]] = deque()
         self.last_complete_ns = 0.0
+        # fault subsystem (None when inactive — the common case); the
+        # FaultModel is constructed before the host I/O model, so the
+        # fabric slot is already populated here
+        self.faults = fabric.faults
+        self.failed_reqs: set = set()       # ops surfaced as failed
+        self.attempts: Dict[int, int] = {}  # req id -> timeout re-issues
+        self.n_failed = 0
         # optional flight recorder (repro.sim.telemetry): request spans
         self.telemetry = None
         # hoisted per-request constants (the issue path runs per event)
@@ -278,24 +285,52 @@ class _HostIOModel:
             tele.ctx = f"io#{i}:{'r' if is_read else 'w'}"
         xfer = self._xfer_ns
         link = self._link_ns
-        if is_read:
-            self.n_reads += 1
+        fm = self.faults
+        retry = i in self.attempts     # timeout re-issue: counters already
+        if is_read:                    # advanced on the first attempt
+            if not retry:
+                self.n_reads += 1
             if self.ftl is not None:
                 die = self.ftl.read_die(lpn, die)   # L2P-resolved placement
             chan = die % f.channels
             t = self.fabric.dies.acquire_end(now, f.t_read_ns, unit=die)
+            if fm is not None:
+                blk = pg = -1
+                if self.ftl is not None:
+                    ppn = self.ftl.read_ppn(lpn)
+                    if ppn is not None:
+                        blk, pg = ppn[1], ppn[2]
+                t, ok = fm.check_read(t, die, blk, pg)
+                if not ok:
+                    # unrecoverable read: the command completes with an
+                    # error status — surfaced, never silently dropped
+                    self.failed_reqs.add(i)
             t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
             t = self.fabric.pcie.acquire_end(t, link)
         else:
-            self.n_writes += 1
-            if self.ftl is not None:
-                self.ftl.host_write(lpn, die)       # map + invalidate old PPN
+            if not retry:
+                self.n_writes += 1
             chan = die % f.channels
-            t = self.fabric.pcie.acquire_end(now, link)
-            t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
-            t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
-            if self.ftl is not None:
-                self.ftl.maybe_start_gc(die)        # watermark check
+            rejected = fm is not None and not fm.write_ok(die, now)
+            if not rejected and self.ftl is not None:
+                try:
+                    self.ftl.host_write(lpn, die)   # map + invalidate old PPN
+                except OutOfPhysicalBlocks:
+                    # retirement drained the die's pool: degrade loudly
+                    fm.mark_read_only(die)
+                    rejected = True
+            if rejected:
+                fm.note_failed_write(die)
+                self.failed_reqs.add(i)
+                # the rejected command still crosses the link (error
+                # completion); the flash program never happens
+                t = self.fabric.pcie.acquire_end(now, link)
+            else:
+                t = self.fabric.pcie.acquire_end(now, link)
+                t = self.fabric.channels.acquire_end(t, xfer, unit=chan)
+                t = self.fabric.dies.acquire_end(t, f.t_prog_ns, unit=die)
+                if self.ftl is not None:
+                    self.ftl.maybe_start_gc(die)    # watermark check
         if tele is not None:
             tele.on_io_issue(i, arrival_ns, is_read, die)
         self.engine.schedule(t, EventKind.IO_COMPLETE, self._on_complete,
@@ -303,25 +338,59 @@ class _HostIOModel:
 
     def _on_complete(self, payload: Tuple[int, float, bool]) -> None:
         i, arrival, during_gc = payload
-        lat = self.engine.now - arrival
-        self.latency_by_req[i] = lat
+        now = self.engine.now
+        lat = now - arrival
+        fm = self.faults
+        failed = i in self.failed_reqs
+        if fm is not None and not failed and fm.op_deadline_exceeded(lat):
+            st = fm.stats_
+            st.n_op_timeouts += 1
+            attempt = self.attempts.get(i, 0)
+            if attempt < fm.cfg.max_op_retries:
+                # the host aborts and re-issues after exponential backoff;
+                # the recorded latency spans first arrival -> final done
+                self.attempts[i] = attempt + 1
+                st.n_op_retries += 1
+                self.outstanding -= 1
+                self.engine.schedule(now + fm.op_backoff_ns(attempt),
+                                     EventKind.IO_ARRIVAL, self._on_retry,
+                                     payload=(i, arrival))
+                if self.pending:
+                    j, arr = self.pending.popleft()
+                    self._issue(j, arr)             # aborted slot freed
+                return
+            st.n_failed_ops += 1                    # retry budget spent
+            self.failed_reqs.add(i)
+            failed = True
+        if failed:
+            self.n_failed += 1      # excluded from the latency population
+        else:
+            self.latency_by_req[i] = lat
         if during_gc:
             self.ftl.note_host_latency_during_gc(lat)
-        self.last_complete_ns = max(self.last_complete_ns, self.engine.now)
+        self.last_complete_ns = max(self.last_complete_ns, now)
         if self.telemetry is not None:
-            self.telemetry.on_io_complete(i, self.plan[i][2],
-                                          self.engine.now)
+            self.telemetry.on_io_complete(i, self.plan[i][2], now)
         self.outstanding -= 1
         if self.pending:
             j, arr = self.pending.popleft()
             self._issue(j, arr)                     # QD slot freed
+
+    def _on_retry(self, payload: Tuple[int, float]) -> None:
+        """Re-issue a timed-out op after its backoff; the retry respects
+        the NVMe queue-depth cap exactly like a fresh arrival."""
+        i, arrival = payload
+        if self._qd is not None and self.outstanding >= self._qd:
+            self.pending.append((i, arrival))
+        else:
+            self._issue(i, arrival)
 
     def stats(self) -> HostIOStats:
         # latencies indexed by request id (not completion order), so two
         # runs of the same stream compare request-for-request
         lats = [self.latency_by_req[i] for i in sorted(self.latency_by_req)]
         return HostIOStats(n_reads=self.n_reads, n_writes=self.n_writes,
-                           latencies_ns=lats)
+                           latencies_ns=lats, n_failed=self.n_failed)
 
 
 def clone_trace(tr: Trace) -> Trace:
@@ -358,7 +427,8 @@ def simulate_mix(traces: Sequence[Trace],
                  ftl: Optional[FTLConfig] = None,
                  start_ns: Optional[Sequence[float]] = None,
                  record_decisions: Optional[bool] = None,
-                 telemetry: TelemetryLike = None) -> MixResult:
+                 telemetry: TelemetryLike = None,
+                 faults=None) -> MixResult:
     """Run several traces concurrently on one SSD, plus optional host I/O.
 
     ``policies`` is one policy (applied to every trace) or one per trace;
@@ -376,7 +446,12 @@ def simulate_mix(traces: Sequence[Trace],
     available) — overrides the same flag on ``config``.  ``telemetry``
     attaches a :class:`~repro.sim.telemetry.FlightRecorder` to the shared
     engine/fabric/FTL/I-O model (solo reference runs stay unobserved);
-    the recorder comes back on ``result.telemetry``.
+    the recorder comes back on ``result.telemetry``.  ``faults`` takes a
+    :class:`~repro.sim.faults.FaultConfig`: an active config arms the
+    RBER error model, the read-recovery ladder, bad-block retirement and
+    the host op-timeout machinery on the shared fabric (solo reference
+    runs stay fault-free); ``None`` or an all-off config is bit-identical
+    to a build without the fault subsystem.
     """
     traces = list(traces)
     if not traces:
@@ -412,11 +487,19 @@ def simulate_mix(traces: Sequence[Trace],
 
     engine = engine or EventEngine()
     fabric = Fabric(spec, pud_units=cfg.pud_units)
+    fm = None
+    if faults is not None and faults.active:
+        from repro.sim.faults import FaultModel
+        fm = FaultModel(faults, spec, fabric, engine)
     tele = as_recorder(telemetry)
     if tele is not None:
         tele.attach(fabric=fabric, engine=engine)
+        if fm is not None:
+            tele.attach_faults(fm)
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
                  if ftl is not None else None)
+    if ftl_model is not None and fm is not None:
+        ftl_model.attach_faults(fm)
     if tele is not None and ftl_model is not None:
         tele.attach_ftl(ftl_model)
     sims = [Simulation(tr, pol, spec, cfg, fabric=fabric, tenant=name,
@@ -442,4 +525,5 @@ def simulate_mix(traces: Sequence[Trace],
                      fabric_busy_ns=fabric.busy_ns(),
                      makespan_ns=makespan,
                      ftl=ftl_model.stats() if ftl_model is not None else None,
-                     telemetry=tele)
+                     telemetry=tele,
+                     faults=fm.stats() if fm is not None else None)

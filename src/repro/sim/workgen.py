@@ -269,16 +269,23 @@ class CatalogEntry:
     The trace is a *template*: the serving driver clones it per admitted
     session (a Trace owns mutable PageTable residency state, so concurrent
     sessions must never share one).  ``policy`` optionally overrides the
-    run-wide offloading policy for sessions of this kind."""
+    run-wide offloading policy for sessions of this kind; ``timeout_ns``
+    optionally overrides ``ServingConfig.session_timeout_ns`` — the
+    host-side deadline after which an admitted session of this kind is
+    abandoned (marked timed-out, slot freed)."""
 
     name: str
     trace: Trace
     weight: float = 1.0
     policy: Optional[str] = None
+    timeout_ns: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.weight <= 0.0:
             raise ValueError(f"catalog entry {self.name!r}: weight must be > 0")
+        if self.timeout_ns is not None and self.timeout_ns <= 0.0:
+            raise ValueError(f"catalog entry {self.name!r}: timeout_ns must "
+                             f"be > 0 (or None), got {self.timeout_ns}")
 
 
 class SessionCatalog:

@@ -73,33 +73,34 @@ def digest_mix(m) -> str:
 
 # -- scenarios -----------------------------------------------------------------
 
-def scenario_single(policy: str, telemetry=None) -> str:
+def scenario_single(policy: str, telemetry=None, faults=None) -> str:
     """simulate() on the synthetic mixed-op trace."""
     return digest_sim(simulate(synth_trace(MIXED), policy,
-                               telemetry=telemetry))
+                               telemetry=telemetry, faults=faults))
 
 
-def scenario_pressure(telemetry=None) -> str:
+def scenario_pressure(telemetry=None, faults=None) -> str:
     """Capacity pressure + transient faults: evictions, coherence syncs
     and the replay path all fire."""
     tr = synth_trace(MIXED, n_arrays=6, pages_per_array=4)
     cfg = SimConfig(dram_capacity_pages=32, host_capacity_pages=48,
                     fail_rate=0.05)
     return digest_sim(simulate(tr, "conduit", config=cfg,
-                               telemetry=telemetry))
+                               telemetry=telemetry, faults=faults))
 
 
-def scenario_mix(telemetry=None) -> str:
+def scenario_mix(telemetry=None, faults=None) -> str:
     """Two tenants + host I/O on one shared fabric."""
     a = synth_trace(RAMP, name="A")
     b = synth_trace(MIXED, name="B")
     io = HostIOStream(rate_iops=80_000, n_requests=64, seed=7,
                       queue_depth=16)
     return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
-                                   compute_solo=False, telemetry=telemetry))
+                                   compute_solo=False, telemetry=telemetry,
+                                   faults=faults))
 
 
-def scenario_gc(telemetry=None) -> str:
+def scenario_gc(telemetry=None, faults=None) -> str:
     """GC-enabled FTL run: write-heavy Zipf host I/O on a preconditioned
     drive, collector contending on the shared die/channel pools."""
     a = synth_trace(RAMP, name="A")
@@ -110,15 +111,17 @@ def scenario_gc(telemetry=None) -> str:
                       zipf_theta=0.95, n_logical_pages=ftl.logical_pages())
     return digest_mix(simulate_mix([a, b], "conduit", io_stream=io,
                                    ftl=ftl, compute_solo=False,
-                                   telemetry=telemetry))
+                                   telemetry=telemetry, faults=faults))
 
 
-def all_digests(telemetry=None) -> Dict[str, str]:
-    out = {f"single/{p}": scenario_single(p, telemetry=telemetry)
+def all_digests(telemetry=None, faults=None) -> Dict[str, str]:
+    out = {f"single/{p}": scenario_single(p, telemetry=telemetry,
+                                          faults=faults)
            for p in GOLDEN_POLICIES}
-    out["pressure_fault"] = scenario_pressure(telemetry=telemetry)
-    out["mix_2tenant_io"] = scenario_mix(telemetry=telemetry)
-    out["gc_ftl"] = scenario_gc(telemetry=telemetry)
+    out["pressure_fault"] = scenario_pressure(telemetry=telemetry,
+                                              faults=faults)
+    out["mix_2tenant_io"] = scenario_mix(telemetry=telemetry, faults=faults)
+    out["gc_ftl"] = scenario_gc(telemetry=telemetry, faults=faults)
     return out
 
 

@@ -1,0 +1,434 @@
+"""Fault injection & error recovery (:mod:`repro.sim.faults`).
+
+The subsystem's acceptance properties:
+
+(a) invariance — the all-off default ``FaultConfig()`` is treated
+    exactly like ``faults=None``: every golden digest suite reproduces
+    bit-identically with the subsystem wired but disabled;
+(b) determinism — a seeded fault run replays bit-identically (same
+    digests, same FaultStats) across repeated invocations;
+(c) accounting — recovery-ladder work is booked into the recorded op
+    latency exactly (retry re-senses, soft decodes, parity rebuilds),
+    and the ladder counters balance (every hard fail recovers at some
+    rung or is counted uncorrectable; every uncorrectable rebuilds or
+    surfaces as a failed op — nothing is silently dropped);
+(d) conservation — retirement relocates every surviving page (FTL and
+    fault counters agree), a drained reserve degrades the die to
+    read-only where every write fails loudly, and the host-I/O latency
+    population plus failed ops equals the offered ops;
+(e) robustness — serving windows where every session times out stay
+    analyzable: states are explicit, availability is 0, and the
+    saturation bisection reports unsustainable instead of raising.
+
+Plus loud validation for every config surface the subsystem touches.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.hw.ssd_spec import DEFAULT_SSD, ReliabilitySpec
+from repro.sim import (CatalogEntry, FaultConfig, FTLConfig, HostIOStream,
+                       ServingConfig, SessionCatalog, SessionState,
+                       TraceReplayArrivals, find_saturation, simulate,
+                       simulate_mix, simulate_serving)
+
+import _golden
+from _synth import synth_trace
+from test_golden_equivalence import GOLDEN
+
+pytestmark = pytest.mark.filterwarnings("ignore:little_law_ratio")
+
+REL = DEFAULT_SSD.reliability
+FLASH = DEFAULT_SSD.flash
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+
+#: RBER right at the hard-decode limit: every checked read enters the
+#: ladder (p_fail == 1) but recovers within it (retry/soft rungs shrink
+#: the effective RBER well below the limit)
+LADDER_RBER = REL.ecc_hard_rber
+#: RBER so far past the limit that every rung fails too: every checked
+#: read is uncorrectable (rebuild with parity, a failed op without)
+UNCORRECTABLE_RBER = 0.05
+
+
+def io_catalog():
+    return SessionCatalog([CatalogEntry("A", synth_trace([2, 4, 6] * 3,
+                                                         name="A"))])
+
+
+# -- (a) faults-off invariance -------------------------------------------------
+
+def test_all_off_config_is_bit_identical_to_no_faults():
+    """The acceptance law: FaultConfig() (inactive) threaded through
+    every golden scenario reproduces the pinned digests exactly —
+    wiring the subsystem in cost nothing when it is off."""
+    cfg = FaultConfig()
+    assert not cfg.active
+    assert _golden.all_digests(faults=cfg) == GOLDEN
+
+
+# -- (b) determinism -----------------------------------------------------------
+
+def _faulty_gc_mix(faults):
+    a = synth_trace(MIXED, name="A")
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, prefill=0.9,
+                    op_ratio=0.28, gc_reserve_blocks=1)
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.5, n_requests=160,
+                      zipf_theta=0.95, n_logical_pages=ftl.logical_pages())
+    return simulate_mix([a], "conduit", io_stream=io, ftl=ftl,
+                        compute_solo=False, faults=faults)
+
+
+def test_same_seed_fault_run_is_deterministic():
+    cfg = FaultConfig(rber_base=5e-4, rber_per_pe=2e-4, rber_retention=1e-4,
+                      retire_after=1)
+    m1 = _faulty_gc_mix(cfg)
+    m2 = _faulty_gc_mix(cfg)
+    assert _golden.digest_mix(m1) == _golden.digest_mix(m2)
+    assert m1.faults == m2.faults
+    assert m1.faults.n_reads_checked > 0
+
+
+def test_different_seed_changes_the_error_pattern():
+    base = FaultConfig(rber_base=8e-4)
+    m1 = _faulty_gc_mix(base)
+    m2 = _faulty_gc_mix(dataclasses.replace(base, seed=base.seed + 1))
+    assert m1.faults.n_reads_checked == m2.faults.n_reads_checked
+    assert m1.faults.n_hard_fails != m2.faults.n_hard_fails
+
+
+# -- (c) ladder accounting -----------------------------------------------------
+
+def _single_read_latency(faults):
+    """One host read, empty compute trace, empty fabric: the recorded
+    latency is exactly the booked path (no queueing anywhere)."""
+    io = HostIOStream(rate_iops=10_000, read_fraction=1.0, n_requests=1,
+                      seed=11)
+    m = simulate_mix([synth_trace([], outputs=False)], "conduit",
+                     io_stream=io, compute_solo=False, faults=faults)
+    return m
+
+
+def test_ladder_work_sums_into_the_recorded_latency():
+    """The booked recovery time is additive and exact: faulted latency
+    == clean latency + every ladder stage the counters say ran."""
+    clean = _single_read_latency(None)
+    fm = FaultConfig(rber_base=LADDER_RBER)
+    faulty = _single_read_latency(fm)
+    st = faulty.faults
+    assert st.n_reads_checked == 1 and st.n_hard_fails == 1
+    assert st.recovered == 1 and st.n_failed_reads == 0
+    xfer = FLASH.t_dma_ns + DEFAULT_SSD.page_size * FLASH.channel_ns_per_byte
+    added = 0.0
+    for k in range(st.n_retry_reads):          # re-senses, escalating
+        added += FLASH.t_read_ns + REL.read_retry_ns * (k + 1) + xfer
+    added += st.n_soft_decodes * REL.soft_decode_ns
+    if st.n_rebuilds:                          # parallel sibling senses
+        added += (FLASH.t_read_ns + xfer
+                  + REL.rebuild_xor_ns_per_page * st.n_rebuild_reads)
+    assert added > 0.0
+    got = faulty.host_io.latencies_ns[0]
+    want = clean.host_io.latencies_ns[0] + added
+    assert got == pytest.approx(want)
+
+
+def test_ladder_counters_balance():
+    """Every hard fail recovers at some rung or is uncorrectable; every
+    uncorrectable rebuilds or surfaces as a failed read."""
+    m = _faulty_gc_mix(FaultConfig(rber_base=2e-3, retire_after=2))
+    st = m.faults
+    assert st.n_hard_fails > 0
+    assert st.n_hard_fails == (st.n_retry_recovered + st.n_soft_recovered
+                               + st.n_uncorrectable)
+    assert st.n_uncorrectable == st.n_rebuilds + st.n_failed_reads
+
+
+def test_uncorrectable_without_parity_is_a_failed_op_not_a_hang():
+    m = _single_read_latency(FaultConfig(rber_base=UNCORRECTABLE_RBER,
+                                         parity=False))
+    st = m.faults
+    assert st.n_failed_reads == 1 and st.n_rebuilds == 0
+    assert m.host_io.n_failed == 1
+    assert m.host_io.latencies_ns == []        # excluded, not poisoned
+    # conservation: offered == measured latencies + failed
+    assert (len(m.host_io.latencies_ns) + m.host_io.n_failed
+            == m.host_io.n_reads + m.host_io.n_writes)
+
+
+def test_operand_sense_failure_surfaces_on_the_sim_result():
+    """A tenant whose flash operand senses are unrecoverable finishes
+    with failed=True — the error status reaches the compute result.
+    The host policy stages every operand through the explicit read
+    path, so each sense rolls the error model; true in-array IFP
+    compute never issues a discrete sense and is out of scope."""
+    cfg = FaultConfig(rber_base=UNCORRECTABLE_RBER, parity=False)
+    r = simulate(synth_trace(MIXED), "cpu", faults=cfg)
+    assert r.failed
+    assert r.faults.n_failed_reads > 0
+    clean = simulate(synth_trace(MIXED), "cpu")
+    assert not clean.failed and clean.faults is None
+
+
+# -- (d) retirement / read-only conservation -----------------------------------
+
+def test_retirement_relocates_every_survivor_and_counters_agree():
+    cfg = FaultConfig(rber_base=UNCORRECTABLE_RBER, retire_after=1)
+    m = _faulty_gc_mix(cfg)
+    st = m.faults
+    assert st.n_blocks_retired > 0
+    assert m.ftl.blocks_retired == st.n_blocks_retired
+    assert m.ftl.pages_relocated == st.n_pages_relocated
+    # parity on, no dead dies: every uncorrectable read was rebuilt
+    assert st.n_rebuilds > 0 and st.n_failed_reads == 0
+
+
+def test_reserve_exhaustion_degrades_to_read_only_and_writes_fail_loudly():
+    """retire_after=1 + a tiny drive: retirement drains the physical
+    pool, dies go read-only, and every subsequent write is surfaced as
+    a failed op (counted, never silently dropped)."""
+    a = synth_trace([], outputs=False)
+    ftl = FTLConfig(blocks_per_die=3, pages_per_block=4, prefill=0.9,
+                    op_ratio=0.34, gc_enabled=False)
+    io = HostIOStream(rate_iops=400_000, read_fraction=0.5, n_requests=400,
+                      zipf_theta=0.9, n_logical_pages=ftl.logical_pages())
+    m = simulate_mix([a], "conduit", io_stream=io, ftl=ftl,
+                     compute_solo=False,
+                     faults=FaultConfig(rber_base=UNCORRECTABLE_RBER,
+                                        retire_after=1))
+    st = m.faults
+    assert st.n_read_only_dies > 0
+    assert st.n_failed_writes > 0
+    assert m.host_io.n_failed >= st.n_failed_writes
+    assert (len(m.host_io.latencies_ns) + m.host_io.n_failed
+            == m.host_io.n_reads + m.host_io.n_writes)
+
+
+def test_whole_die_failure_rejects_writes_and_rebuilds_reads():
+    a = synth_trace([], outputs=False)
+    io = HostIOStream(rate_iops=100_000, read_fraction=0.5, n_requests=600,
+                      seed=3)
+    m = simulate_mix([a], "conduit", io_stream=io, compute_solo=False,
+                     faults=FaultConfig(die_failures=((0, 0.0),)))
+    st = m.faults
+    assert st.n_dies_failed == 1
+    assert st.n_failed_writes > 0              # writes to the dead die
+    assert st.n_rebuilds > 0                   # its reads rebuilt via parity
+    assert st.n_failed_reads == 0
+    assert (len(m.host_io.latencies_ns) + m.host_io.n_failed
+            == m.host_io.n_reads + m.host_io.n_writes)
+
+
+def test_host_op_timeout_retries_then_fails_with_bounded_budget():
+    """op_timeout_ns below the floor latency: every attempt times out,
+    the op is retried exactly max_op_retries times, then failed."""
+    cfg = FaultConfig(op_timeout_ns=1.0, max_op_retries=2,
+                      op_retry_backoff_ns=10_000.0)
+    assert cfg.active                          # timeout alone arms it
+    m = _single_read_latency(cfg)
+    st = m.faults
+    assert st.n_op_retries == 2
+    assert st.n_op_timeouts == 3               # initial + both retries
+    assert st.n_failed_ops == 1
+    assert m.host_io.n_failed == 1
+    assert m.host_io.n_reads == 1              # retries don't double-count
+    assert m.host_io.latencies_ns == []
+
+
+# -- (e) serving-layer timeouts ------------------------------------------------
+
+def test_window_where_every_session_times_out_stays_analyzable():
+    """Regression for the completed-bool era: a 100%-timeout window used
+    to leave dangling records; now every state is explicit and the
+    result's conservation law still closes."""
+    res = simulate_serving(
+        io_catalog(), TraceReplayArrivals(times_ns=(0.0, 1.0, 2.0, 3.0)),
+        "conduit", serving=ServingConfig(session_timeout_ns=10.0))
+    assert res.n_offered == 4
+    assert res.n_timed_out == 4
+    assert res.n_completed == 0 and res.n_rejected == 0 and res.n_failed == 0
+    assert res.availability == 0.0
+    assert res.session_latencies_ns == []
+    for s in res.sessions:
+        assert s.state is SessionState.TIMED_OUT
+        assert s.timed_out and not s.completed and not s.rejected
+        with pytest.raises(ValueError, match="never completed"):
+            s.latency_ns
+
+
+def test_per_entry_timeout_overrides_the_serving_default():
+    cat = SessionCatalog([CatalogEntry("A", synth_trace([2, 4, 6] * 3,
+                                                        name="A"),
+                                       timeout_ns=10.0)])
+    res = simulate_serving(cat, TraceReplayArrivals(times_ns=(0.0,)),
+                           "conduit", serving=ServingConfig())
+    assert res.n_timed_out == 1
+
+
+def test_completed_sessions_under_a_generous_timeout_are_unaffected():
+    res = simulate_serving(
+        io_catalog(), TraceReplayArrivals(times_ns=(0.0,)), "conduit",
+        serving=ServingConfig(session_timeout_ns=1e15))
+    base = simulate_serving(io_catalog(),
+                            TraceReplayArrivals(times_ns=(0.0,)), "conduit")
+    assert res.n_completed == 1 and res.availability == 1.0
+    assert (res.sessions[0].latency_ns
+            == pytest.approx(base.sessions[0].latency_ns))
+
+
+def test_saturation_probe_reports_total_timeout_as_unsustainable():
+    """find_saturation over an all-timeout window must bisect to 0, not
+    raise on an empty latency population (the old NaN-p99 path)."""
+    sat = find_saturation(io_catalog(), "conduit", slo_p99_ns=1e9,
+                          rate_lo=10.0, rate_hi=100.0, iters=2,
+                          n_sessions=8,
+                          serving=ServingConfig(session_timeout_ns=10.0))
+    assert sat.rate_per_sec == 0.0
+    assert sat.probes and all(not p.sustainable for p in sat.probes)
+    assert all(p.availability == 0.0 for p in sat.probes)
+    assert all(math.isnan(p.p99_ns) for p in sat.probes)
+
+
+def test_min_availability_gates_saturation_under_faults():
+    """An error-free drive saturates somewhere; the same drive whose
+    every op fails (no parity, hopeless RBER) has availability 0 and
+    must bisect to 0 under any availability floor."""
+    kw = dict(slo_p99_ns=1e9, rate_lo=5.0, rate_hi=50.0, iters=2,
+              n_sessions=6)
+    clean = find_saturation(io_catalog(), "conduit", **kw)
+    assert clean.rate_per_sec > 0.0
+    broken = find_saturation(
+        io_catalog(), "conduit",
+        faults=FaultConfig(rber_base=UNCORRECTABLE_RBER, parity=False),
+        min_availability=0.99, **kw)
+    assert broken.rate_per_sec == 0.0
+
+
+# -- validation ----------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(rber_base=-0.1), dict(rber_base=1.0), dict(rber_per_pe=-1e-9),
+    dict(rber_retention=2.0), dict(retention_scale_ns=0.0),
+    dict(retire_after=0), dict(die_failures=((-1, 0.0),)),
+    dict(die_failures=((0, -5.0),)), dict(die_failures=((1.5, 0.0),)),
+    dict(op_timeout_ns=0.0), dict(op_timeout_ns=-1.0),
+    dict(max_op_retries=-1), dict(op_retry_backoff_ns=-1.0),
+])
+def test_fault_config_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        FaultConfig(**kw)
+
+
+def test_die_failures_must_name_a_real_die():
+    with pytest.raises(ValueError, match="die_failures"):
+        simulate(synth_trace([2]), "conduit",
+                 faults=FaultConfig(die_failures=((10_000, 0.0),)))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(op_ratio=0.0), dict(op_ratio=-0.1),
+    dict(gc_low_watermark=0.5, gc_high_watermark=0.4),
+    dict(gc_low_watermark=-0.1), dict(gc_high_watermark=1.5),
+    dict(hot_threshold=1), dict(wear_alpha=-1.0),
+])
+def test_ftl_spec_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        dataclasses.replace(DEFAULT_SSD.ftl, **kw)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(ecc_hard_rber=0.0), dict(ecc_steepness=0.0),
+    dict(read_retry_ns=-1.0), dict(max_read_retries=-1),
+    dict(retry_rber_factor=0.0), dict(soft_decode_ns=-1.0),
+    dict(soft_rber_factor=0.0), dict(ecc_engines=0),
+    dict(rebuild_xor_ns_per_page=-1.0),
+])
+def test_reliability_spec_rejects_bad_knobs(kw):
+    with pytest.raises(ValueError):
+        ReliabilitySpec(**kw)
+
+
+def test_faults_on_a_gc_ftl_without_reserve_blocks_is_rejected():
+    """Retirement shrinks the physical pool; a GC'd drive with no
+    reserve would wedge on the first retired block — rejected loudly
+    at wiring time, not discovered mid-run."""
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8,
+                    gc_reserve_blocks=0)
+    io = HostIOStream(rate_iops=100_000, n_requests=8,
+                      n_logical_pages=ftl.logical_pages())
+    with pytest.raises(ValueError, match="gc_reserve_blocks"):
+        simulate_mix([synth_trace([], outputs=False)], "conduit",
+                     io_stream=io, ftl=ftl, compute_solo=False,
+                     faults=FaultConfig(rber_base=1e-4))
+
+
+def test_serving_config_rejects_bad_session_timeout():
+    with pytest.raises(ValueError, match="session_timeout_ns"):
+        ServingConfig(session_timeout_ns=0.0)
+
+
+def test_catalog_entry_rejects_bad_timeout():
+    with pytest.raises(ValueError, match="timeout_ns"):
+        CatalogEntry("A", synth_trace([2]), timeout_ns=-1.0)
+
+
+def test_inactive_fault_model_construction_is_rejected():
+    from repro.sim import EventEngine, Fabric, FaultModel
+    eng = EventEngine()
+    with pytest.raises(ValueError, match="active"):
+        FaultModel(FaultConfig(), DEFAULT_SSD, Fabric(DEFAULT_SSD), eng)
+
+
+# -- wear preconditioning (the substrate for wear-dependent errors) ----------
+
+def _prewear_model(writes: int, key=None, **kw):
+    from repro.sim import EventEngine, Fabric
+    from repro.sim.ftl import FTLModel
+    cfg = FTLConfig(blocks_per_die=4, pages_per_block=8, prefill=0.9,
+                    op_ratio=0.28, gc_reserve_blocks=1,
+                    prewear_writes=writes, **kw)
+    return FTLModel(cfg, DEFAULT_SSD, Fabric(DEFAULT_SSD), EventEngine(),
+                    lambda lpn: lpn % DEFAULT_SSD.flash.total_dies,
+                    prefill_key=key)
+
+
+def test_prewear_builds_a_policy_shaped_wear_histogram():
+    worn = _prewear_model(4000)
+    fresh = _prewear_model(0)
+    assert max(max(d.erase_count) for d in worn.dies) > \
+        max(max(d.erase_count) for d in fresh.dies) + 5
+    worn.check_invariants()
+
+
+def test_prewear_replays_bit_identically_and_cache_is_isolated():
+    a = _prewear_model(2000, key=("t", 1))
+    b = _prewear_model(2000, key=("t", 1))      # memoized path
+    c = _prewear_model(2000, key=None)          # uncached path
+    for m in (b, c):
+        assert [d.erase_count for d in a.dies] == [d.erase_count for d in m.dies]
+        assert a.l2p == m.l2p
+    # the cache hands out clones: churning one model must not leak into
+    # a sibling built from the same snapshot
+    die = a.dies[0]
+    before = list(b.dies[0].erase_count)
+    for lpn, _ in list(a.l2p.items())[:64]:
+        a.host_write(lpn, 0)
+        a.maybe_start_gc(0)
+        a.engine.run()
+    assert b.dies[0].erase_count == before
+
+
+def test_prewear_respects_the_victim_policy():
+    greedy = _prewear_model(4000, key=None)
+    aware = _prewear_model(4000, key=None, victim_policy="wear_aware")
+    g = sorted(e for d in greedy.dies for e in d.erase_count)
+    w = sorted(e for d in aware.dies for e in d.erase_count)
+    assert g != w, "policies must shape the histogram differently"
+
+
+@pytest.mark.parametrize("kw", [dict(prewear_writes=-1),
+                                dict(prewear_theta=0.0),
+                                dict(prewear_theta=-1.0)])
+def test_prewear_knob_validation(kw):
+    with pytest.raises(ValueError):
+        FTLConfig(blocks_per_die=4, pages_per_block=8, **kw)

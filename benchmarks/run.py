@@ -32,6 +32,7 @@ import argparse
 import contextlib
 import functools
 import io
+import json
 import sys
 import time
 from typing import Dict, List, Optional, Tuple
@@ -142,6 +143,61 @@ def run_suites(wanted: List[str], smoke: bool = False, jobs: int = 1,
     return csv_rows, failed
 
 
+def write_run_report(path: str, csv_rows: List[str],
+                     failed: List[str], smoke: bool) -> None:
+    """Structured run report: the CSV metrics plus a tail-latency blame
+    summary from one telemetry-on serving run, stamped with the git SHA
+    and hardware-spec hash so reports join across commits and refuse
+    joins across spec changes (``repro.sim.analysis diff``)."""
+    import hashlib
+
+    from repro.hw.ssd_spec import DEFAULT_SSD
+    from repro.sim import (CatalogEntry, FTLConfig, HostIOStream,
+                           PoissonArrivals, ServingConfig, SessionCatalog,
+                           TelemetryConfig, simulate_serving)
+    from repro.sim.analysis import _git_sha, build_report
+    from repro.workloads import get_trace
+
+    # one small serving-under-GC run with the recorder on: post-hoc
+    # analysis only, so the benchmark numbers above are never perturbed
+    catalog = SessionCatalog(
+        [CatalogEntry("jacobi1d", get_trace("jacobi1d", "tiny"))], seed=7)
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                    prefill=0.9, gc_reserve_blocks=1)
+    res = simulate_serving(
+        catalog,
+        PoissonArrivals(rate_per_sec=4000,
+                        n_sessions=12 if smoke else 32, seed=11),
+        "conduit",
+        serving=ServingConfig(keep_session_results=False,
+                              little_law_warn_tol=float("inf")),
+        io_stream=HostIOStream(rate_iops=40_000, read_fraction=0.7,
+                               n_requests=64 if smoke else 256,
+                               n_logical_pages=ftl.logical_pages()),
+        ftl=ftl,
+        telemetry=TelemetryConfig(spans=True, audit=True,
+                                  interval_ns=20_000.0))
+    metrics = {}
+    for row in csv_rows[1:]:
+        parts = row.split(",")
+        if len(parts) >= 2:
+            metrics[parts[0]] = {"value": parts[1],
+                                 "derived": ",".join(parts[2:])}
+    report = {
+        "schema": "conduit-bench-report/v1",
+        "git_sha": _git_sha(),
+        "spec_sha": hashlib.sha256(
+            repr(DEFAULT_SSD).encode()).hexdigest()[:16],
+        "smoke": smoke,
+        "failed_suites": failed,
+        "metrics": metrics,
+        "analysis": res.analysis(),
+    }
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"[benchmarks] run report written to {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -162,6 +218,10 @@ def main() -> None:
     ap.add_argument("--profile-out", default=None, metavar="PATH",
                     help="write the full pstats dump to PATH for offline "
                          "analysis (implies --profile)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write a structured JSON run report: the CSV "
+                         "metrics plus a tail-latency blame summary, git "
+                         "SHA and spec hash (conduit-bench-report/v1)")
     args = ap.parse_args()
 
     wanted = (args.only.split(",") if args.only else list(_suite_table()))
@@ -173,6 +233,8 @@ def main() -> None:
     print("\n===== CSV =====")
     for row in csv_rows:
         print(row)
+    if args.report is not None:
+        write_run_report(args.report, csv_rows, failed, args.smoke)
     if failed:  # nonzero exit so the CI bench-smoke step actually gates
         sys.exit(f"[benchmarks] failing suites: {', '.join(failed)}")
 

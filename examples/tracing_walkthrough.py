@@ -159,6 +159,23 @@ def main():
           f"active={busiest.active_sessions}, "
           f"window p99={busiest.p99_op_ns/1e3:.1f}us")
 
+    print("\n== tail-latency blame: the analysis layer names the tail")
+    # no more eyeballing Perfetto: the attribution sweep decomposes every
+    # session's wall time and the p99-vs-mean comparison names the
+    # component the tail is built from (repro.sim.analysis)
+    from repro.sim import blame_story
+    report = res.analysis()
+    print(blame_story(report))
+    cp = report["critical_path"]
+    if cp["n_hops"]:
+        worst = max(cp["hops"],
+                    key=lambda h: h["queue_ns"] + h["dep_wait_ns"])
+        print(f"  critical path of the worst session ({cp['tenant']}): "
+              f"{cp['n_hops']} hops; the longest wait sits at "
+              f"#{worst['iid']} {worst['op']}@{worst['resource']} "
+              f"({(worst['queue_ns'] + worst['dep_wait_ns'])/1e3:.1f} us "
+              f"queued)")
+
 
 if __name__ == "__main__":
     main()

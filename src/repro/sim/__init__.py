@@ -10,6 +10,8 @@ Batched sweeps: :func:`batched_find_saturation` runs many saturation
 searches in lockstep (policy grids, seed fans) on a vectorized driver.
 All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
+from repro.sim.analysis import (blame_story, build_report, critical_path,
+                                diff_reports, pool_rankings, session_blame)
 from repro.sim.events import EventEngine, EventKind
 from repro.sim.faults import FaultConfig, FaultModel, FaultStats
 from repro.sim.ftl import (VICTIM_POLICIES, CostBenefitVictim, FTLConfig,
@@ -59,4 +61,6 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "batched_poisson_arrival_times_ns", "array_backend",
            "TelemetryConfig", "FlightRecorder", "OffloadAudit",
            "CandidateCost", "IntervalSample", "validate_trace",
-           "summarize_trace"]
+           "summarize_trace",
+           "build_report", "session_blame", "critical_path",
+           "pool_rankings", "diff_reports", "blame_story"]

@@ -926,6 +926,7 @@ class FTLModel:
         tele = self.telemetry
         if tele is not None:
             tele.ctx = f"gc:die{die}"
+            tele.ctx_args = {"gc_die": die}
         t0 = t
         pages0 = self.gc_pages_copied
         dies_pool = self.fabric.dies
@@ -1024,6 +1025,7 @@ class FTLModel:
             lpn = d.page_lpn[victim][pg]
             if tele is not None:
                 tele.ctx = f"gc:die{die}"
+                tele.ctx_args = {"gc_die": die}
             t = self.fabric.dies.acquire_end(engine.now, f.t_read_ns,
                                              unit=die)
             fm = self.faults
@@ -1067,6 +1069,7 @@ class FTLModel:
             return
         if tele is not None:
             tele.ctx = f"gc:die{die}"
+            tele.ctx_args = {"gc_die": die}
         t = self.fabric.dies.acquire_end(engine.now, f.t_erase_ns, unit=die)
         d.erase(victim)
         if self.faults is not None:

@@ -602,8 +602,11 @@ class Simulation:
         deps_ready = self._deps_ready(instr)
         tele = self._tele
         if tele is not None:
-            # attribution for every pool booking this dispatch performs
+            # attribution for every pool booking this dispatch performs;
+            # ctx_args carries the structured join key (the span name
+            # alone would need parsing in the analysis layer)
             tele.ctx = f"{self.tenant}:{instr.op}#{instr.iid}"
+            tele.ctx_args = {"tenant": self.tenant, "iid": instr.iid}
 
         if self._ignores_contention:
             # Ideal (§5.3): zero data-movement latency, zero decision
@@ -792,6 +795,7 @@ class Simulation:
         """End of trace: results become visible to the host (§4.4 ii)."""
         if self._tele is not None:
             self._tele.ctx = f"{self.tenant}:epilogue"
+            self._tele.ctx_args = {"tenant": self.tenant, "epilogue": True}
         makespan = self._makespan
         for pl in self.trace.output_pages:
             for pid in pl:
@@ -867,6 +871,9 @@ def simulate(trace: Trace, policy: str | Policy,
         tele.attach(fabric=sim.fabric, engine=engine)
         if sim.fabric.faults is not None:
             tele.attach_faults(sim.fabric.faults)
+        tele.run_meta.setdefault("entry", "simulate")
+        tele.run_meta.setdefault("policy", policy.name)
+        tele.run_meta.setdefault("workload", trace.name)
     sim.bind(engine)
     engine.run()
     res = sim.result()

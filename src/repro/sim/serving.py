@@ -411,6 +411,10 @@ def simulate_serving(catalog: SessionCatalog,
         tele.attach(fabric=fabric, engine=engine)
         if fm is not None:
             tele.attach_faults(fm)
+        tele.run_meta.setdefault("entry", "simulate_serving")
+        tele.run_meta.setdefault(
+            "policy", policy if isinstance(policy, str) else policy.name)
+        tele.run_meta.setdefault("seed", catalog.seed)
     driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
                             scfg, fabric, engine)
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)

@@ -417,6 +417,18 @@ class ServingResult:
         """Per-session latency percentile over the measured window."""
         return percentile(self.session_latencies_ns, pct)
 
+    def analysis(self, git_sha: Optional[str] = None) -> Dict[str, object]:
+        """The ``conduit-analysis/v1`` run report for this run's trace
+        (:func:`repro.sim.analysis.build_report`): tail-latency blame,
+        critical path, pool bottlenecks.  Requires the run to have been
+        invoked with ``telemetry=``."""
+        if self.telemetry is None:
+            raise ValueError(
+                "no flight recorder on this result: rerun with "
+                "telemetry=TelemetryConfig(...) to enable analysis")
+        from repro.sim.analysis import build_report
+        return build_report(self.telemetry, git_sha=git_sha)
+
     def op_p(self, pct: float) -> float:
         """Per-op latency percentile over the measured window."""
         return percentile(self.op_latencies_ns, pct)
@@ -523,6 +535,17 @@ class MixResult:
             if r.tenant == name:
                 return r
         raise KeyError(name)
+
+    def analysis(self, git_sha: Optional[str] = None) -> Dict[str, object]:
+        """The ``conduit-analysis/v1`` run report for this run's trace
+        (:func:`repro.sim.analysis.build_report`).  Requires the run to
+        have been invoked with ``telemetry=``."""
+        if self.telemetry is None:
+            raise ValueError(
+                "no flight recorder on this result: rerun with "
+                "telemetry=TelemetryConfig(...) to enable analysis")
+        from repro.sim.analysis import build_report
+        return build_report(self.telemetry, git_sha=git_sha)
 
     @property
     def slowdowns(self) -> Dict[str, float]:

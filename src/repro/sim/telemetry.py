@@ -53,9 +53,24 @@ The export is standard Chrome Trace Event JSON (object form)::
                         active_sessions, p99_op_ns} ],
         "breakdown": [ {op, resource, count, decide_ns, dm_ns,
                         queue_ns, compute_ns, total_ns} ],   # sums
-        "dropped_spans": n, "dropped_audit": n   # loud truncation counts
+        "ops": [ {tenant, iid, op, resource, unit, deps, t_decide_ns,
+                  decide_end_ns, ready_ns, move_end_ns, start_ns,
+                  end_ns, dm_ns, replayed} ],   # per-dispatch phase record
+        "meta": {spec_sha, policy, seed, entry, telemetry: {...}},
+        "dropped_spans": n, "dropped_audit": n,  # loud truncation counts
+        "dropped_ops": n
       }
     }
+
+The ``ops`` stream (one record per dispatched instruction, with the
+exact phase boundaries ``t_decide <= decide_end <= ready <= move_end <=
+start <= end`` and the instruction's dependency iids) is what
+:mod:`repro.sim.analysis` joins against the session/GC/reliability spans
+for tail-latency blame and critical-path extraction; ``meta`` carries
+the reproducibility fingerprint (spec hash, policy, seed, telemetry
+config) that lets ``analysis diff`` refuse apples-to-oranges
+comparisons.  Both are additive to schema v1: traces without them stay
+valid, and consumers degrade gracefully.
 
 ``traceEvents`` uses five phases: ``"X"`` complete spans (pool bookings
 on pid 1 "fabric", GC activity on pid 2 "ftl-gc"), ``"b"``/``"e"`` async
@@ -79,6 +94,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import hashlib
 import json
 import math
 import sys
@@ -278,6 +294,10 @@ class FlightRecorder:
         self.cfg = config or TelemetryConfig()
         #: attribution label for the next pool booking (set by handlers)
         self.ctx: Optional[str] = None
+        #: structured attribution for the next pool booking — a dict the
+        #: handler shares across every booking of one dispatch/GC step
+        #: (lossless join key: the span name alone would need parsing)
+        self.ctx_args: Optional[dict] = None
 
         # product 1: spans
         self.spans: List[dict] = []          # "X" on fabric/ftl pids
@@ -292,6 +312,14 @@ class FlightRecorder:
         self.dropped_audit = 0
         # (op, resource) -> [count, decide, dm, queue, compute, total] sums
         self.breakdown: Dict[Tuple[str, str], List[float]] = {}
+
+        # per-dispatch phase records for post-hoc analysis (blame /
+        # critical path): plain dicts, exported under otherData["ops"]
+        self.ops: List[dict] = []
+        self.dropped_ops = 0
+        # reproducibility fingerprint, filled by the simulate entry
+        # points (policy, seed, entry) and at export time (spec hash)
+        self.run_meta: Dict[str, object] = {}
 
         # product 3: interval samples
         self.intervals: List[IntervalSample] = []
@@ -393,12 +421,17 @@ class FlightRecorder:
         if len(self.spans) >= self.cfg.max_spans:
             self.dropped_spans += 1
             return
-        self.spans.append({
+        ev = {
             "ph": "X", "pid": PID_FABRIC,
             "tid": self._tid(PID_FABRIC, f"{pool_name}/{unit}"),
             "name": self.ctx or "?",
             "ts": start * _NS_TO_US, "dur": (end - start) * _NS_TO_US,
-        })
+        }
+        if self.ctx_args is not None:
+            # shared by reference across one dispatch's bookings — the
+            # handlers build one dict per dispatch, not per booking
+            ev["args"] = self.ctx_args
+        self.spans.append(ev)
 
     def _gc_span(self, die: int, name: str, t0: float, t1: float,
                  args: Optional[dict] = None) -> None:
@@ -444,6 +477,21 @@ class FlightRecorder:
         row[3] += start - move_end           # queue wait at the exec pool
         row[4] += end - start                # compute occupancy
         row[5] += lat
+        if self.cfg.spans:
+            # per-dispatch phase record for the analysis layer (blame /
+            # critical path) — the aggregated breakdown above cannot be
+            # joined back to a session or a dependency chain
+            if len(self.ops) >= self.cfg.max_spans:
+                self.dropped_ops += 1
+            else:
+                self.ops.append({
+                    "tenant": tenant, "iid": instr.iid, "op": instr.op,
+                    "resource": rname, "unit": unit,
+                    "deps": list(instr.deps),
+                    "t_decide_ns": t_decide, "decide_end_ns": decide_end,
+                    "ready_ns": ready, "move_end_ns": move_end,
+                    "start_ns": start, "end_ns": end, "dm_ns": dm_ns,
+                    "replayed": replayed})
         if feats is None:
             return
         if len(self.audit) >= self.cfg.max_audit:
@@ -471,12 +519,13 @@ class FlightRecorder:
                     pages_copied: int) -> None:
         if self.cfg.spans:
             self._gc_span(die, f"gc-cycle b{victim}", t0, t1,
-                          {"pages_copied": pages_copied})
+                          {"die": die, "victim": victim,
+                           "pages_copied": pages_copied})
 
     def on_gc_copy(self, die: int, t0: float, t1: float,
                    kind: str = "copy") -> None:
         if self.cfg.spans:
-            self._gc_span(die, f"gc-{kind}", t0, t1)
+            self._gc_span(die, f"gc-{kind}", t0, t1, {"die": die})
 
     def on_gc_suspend(self, die: int, t: float) -> None:
         if self.cfg.spans:
@@ -505,14 +554,15 @@ class FlightRecorder:
         """One recovery-ladder stage on a die: read-retry, soft-decode,
         uncorrectable, rebuild or read-failed — span on the die's track."""
         if self.cfg.spans:
-            self._rel_span(die, f"recovery:{stage}", t0, t1)
+            self._rel_span(die, f"recovery:{stage}", t0, t1,
+                           {"die": die, "stage": stage})
 
     def on_retirement(self, die: int, blk: int, t0: float, t1: float,
                       relocated: int) -> None:
         """Bad-block retirement: the survivor-relocation span."""
         if self.cfg.spans:
             self._rel_span(die, f"retire b{blk}", t0, t1,
-                           {"pages_relocated": relocated})
+                           {"die": die, "pages_relocated": relocated})
 
     def on_die_failure(self, die: int, t: float) -> None:
         if self.cfg.spans:
@@ -595,6 +645,20 @@ class FlightRecorder:
                 "pid": PID_HOST_IO, "tid": 0,
                 "name": f"io:{'read' if is_read else 'write'}",
                 "ts": t * _NS_TO_US})
+
+    def on_io_timeout(self, req: int, is_read: bool, t: float) -> None:
+        """Op-timeout detected: close the attempt's async span (the retry
+        re-issues a fresh ``b`` for the same id) and mark the deadline."""
+        if self.cfg.spans:
+            ts = t * _NS_TO_US
+            self.async_events.append({
+                "ph": "e", "cat": "host_io", "id": req,
+                "pid": PID_HOST_IO, "tid": 0,
+                "name": f"io:{'read' if is_read else 'write'}",
+                "ts": ts, "args": {"timed_out": True}})
+            self.async_events.append({
+                "ph": "i", "pid": PID_HOST_IO, "tid": 0,
+                "name": f"io-timeout r{req}", "ts": ts, "s": "t"})
 
     # -- interval sampler (product 3) -----------------------------------------
 
@@ -688,6 +752,15 @@ class FlightRecorder:
         events += self.spans
         events += self.async_events
         events += self.counters
+        # reproducibility fingerprint: entry-point facts (policy, seed,
+        # entry) stamped into run_meta by the simulate_* wrappers, plus a
+        # hash of the hardware spec and the telemetry knobs — computed at
+        # export time only, never on the hot path
+        meta: Dict[str, object] = dict(self.run_meta)
+        if self._fabric is not None:
+            meta["spec_sha"] = hashlib.sha256(
+                repr(self._fabric.spec).encode()).hexdigest()[:16]
+        meta["telemetry"] = dataclasses.asdict(self.cfg)
         return {
             "traceEvents": events,
             "displayTimeUnit": "ns",
@@ -697,8 +770,11 @@ class FlightRecorder:
                 "audit": [a.as_dict() for a in self.audit],
                 "intervals": [s.as_dict() for s in self.intervals],
                 "breakdown": self.breakdown_rows(),
+                "ops": self.ops,
+                "meta": meta,
                 "dropped_spans": self.dropped_spans,
                 "dropped_audit": self.dropped_audit,
+                "dropped_ops": self.dropped_ops,
             },
         }
 
@@ -711,12 +787,13 @@ class FlightRecorder:
 
 
 def _p99(values) -> float:
-    """Nearest-rank p99 over the sliding window (0.0 when empty)."""
-    if not values:
-        return 0.0
-    s = sorted(values)
-    k = max(0, min(len(s) - 1, math.ceil(0.99 * len(s)) - 1))
-    return s[k]
+    """Nearest-rank p99 over the sliding window (0.0 when empty).
+
+    Thin delegate to :func:`repro.sim.stats.percentile` — one validated
+    percentile implementation everywhere (the import is deferred because
+    ``stats`` imports :class:`DecisionRecord` from this module)."""
+    from repro.sim.stats import percentile
+    return percentile(list(values), 99.0)
 
 
 # -- validation / summary ------------------------------------------------------
@@ -727,8 +804,10 @@ _LEGAL_PH = frozenset("XMbeiC")
 def validate_trace(obj: Any) -> List[str]:
     """Structural validation of an exported trace; returns error strings
     (empty = valid).  Checks the envelope, the schema tag, every event's
-    phase/timestamps, non-negative span durations, and b/e balance per
-    (cat, id) — everything :func:`summarize` relies on."""
+    phase/timestamps, non-negative span durations, b/e balance per
+    (cat, id), per-track counter monotonicity and non-negative counter
+    values, and the reliability process's span/instant vocabulary —
+    everything :func:`summarize` and :mod:`repro.sim.analysis` rely on."""
     errors: List[str] = []
     if not isinstance(obj, dict):
         return [f"trace must be a JSON object, got {type(obj).__name__}"]
@@ -743,7 +822,17 @@ def validate_trace(obj: Any) -> List[str]:
     schema = other.get("schema")
     if schema != SCHEMA:
         errors.append(f"otherData.schema is {schema!r}, expected {SCHEMA!r}")
+    # pid -> process name, so the reliability checks below don't depend on
+    # metadata/event ordering in the list
+    pname: Dict[Any, str] = {}
+    for ev in events:
+        if isinstance(ev, dict) and ev.get("ph") == "M" \
+                and ev.get("name") == "process_name":
+            args = ev.get("args")
+            if isinstance(args, dict):
+                pname[ev.get("pid")] = args.get("name")
     open_async: Dict[Tuple[str, Any], int] = {}
+    last_counter_ts: Dict[Tuple[Any, Any, Any], float] = {}
     for n, ev in enumerate(events):
         if not isinstance(ev, dict):
             errors.append(f"event #{n}: not an object")
@@ -758,6 +847,33 @@ def validate_trace(obj: Any) -> List[str]:
                 errors.append(f"event #{n} ({ph}): non-numeric ts {ts!r}")
             if "pid" not in ev:
                 errors.append(f"event #{n} ({ph}): missing pid")
+        proc = pname.get(ev.get("pid"))
+        if proc == "reliability":
+            name = ev.get("name", "")
+            if ph == "X" and not (name.startswith("recovery:")
+                                  or name.startswith("retire b")):
+                errors.append(f"event #{n}: unknown reliability span "
+                              f"{name!r}")
+            elif ph == "i" and name not in ("die-failure", "read-only"):
+                errors.append(f"event #{n}: unknown reliability instant "
+                              f"{name!r}")
+        if ph == "C":
+            key = (ev.get("pid"), ev.get("tid"), ev.get("name"))
+            ts = ev.get("ts")
+            if isinstance(ts, (int, float)):
+                prev = last_counter_ts.get(key)
+                if prev is not None and ts < prev:
+                    errors.append(
+                        f"event #{n} (C): non-monotonic counter track "
+                        f"{key[2]!r} (ts {ts} < {prev})")
+                else:
+                    last_counter_ts[key] = ts
+            args = ev.get("args")
+            if isinstance(args, dict):
+                for k, v in args.items():
+                    if isinstance(v, (int, float)) and v < 0:
+                        errors.append(f"event #{n} (C): negative counter "
+                                      f"value {k}={v}")
         if ph == "X":
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
@@ -778,7 +894,7 @@ def validate_trace(obj: Any) -> List[str]:
     for key, cnt in open_async.items():
         if cnt != 0:
             errors.append(f"async span {key}: {cnt} unmatched begin(s)")
-    for field in ("audit", "intervals", "breakdown"):
+    for field in ("audit", "intervals", "breakdown", "ops"):
         val = other.get(field)
         if val is not None and not isinstance(val, list):
             errors.append(f"otherData.{field} must be a list")
@@ -787,6 +903,14 @@ def validate_trace(obj: Any) -> List[str]:
                 or "candidates" not in a:
             errors.append(f"audit #{i}: missing chosen/candidates")
             break
+    ops = other.get("ops")
+    if isinstance(ops, list):
+        required = ("tenant", "iid", "t_decide_ns", "end_ns")
+        for i, o in enumerate(ops):
+            if not isinstance(o, dict) \
+                    or any(k not in o for k in required):
+                errors.append(f"ops #{i}: missing one of {required}")
+                break
     return errors
 
 
@@ -822,8 +946,10 @@ def summarize(obj: Any) -> Dict[str, object]:
         "engine_event_counts": other.get("event_counts", {}),
         "n_audit": len(other.get("audit") or []),
         "n_intervals": len(other.get("intervals") or []),
+        "n_ops": len(other.get("ops") or []),
         "dropped_spans": other.get("dropped_spans", 0),
         "dropped_audit": other.get("dropped_audit", 0),
+        "dropped_ops": other.get("dropped_ops", 0),
         "top_breakdown": rows[:5],
     }
 

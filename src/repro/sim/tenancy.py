@@ -283,6 +283,8 @@ class _HostIOModel:
         tele = self.telemetry
         if tele is not None:
             tele.ctx = f"io#{i}:{'r' if is_read else 'w'}"
+            tele.ctx_args = {"io": i, "die": die,
+                             "rw": "r" if is_read else "w"}
         xfer = self._xfer_ns
         link = self._link_ns
         fm = self.faults
@@ -352,6 +354,12 @@ class _HostIOModel:
                 self.attempts[i] = attempt + 1
                 st.n_op_retries += 1
                 self.outstanding -= 1
+                if self.telemetry is not None:
+                    # close this attempt's async span — the retry's
+                    # _issue emits a fresh "b" for the same request id,
+                    # so without this the b/e balance check would reject
+                    # every trace from an op-timeout run
+                    self.telemetry.on_io_timeout(i, self.plan[i][2], now)
                 self.engine.schedule(now + fm.op_backoff_ns(attempt),
                                      EventKind.IO_ARRIVAL, self._on_retry,
                                      payload=(i, arrival))
@@ -496,6 +504,9 @@ def simulate_mix(traces: Sequence[Trace],
         tele.attach(fabric=fabric, engine=engine)
         if fm is not None:
             tele.attach_faults(fm)
+        tele.run_meta.setdefault("entry", "simulate_mix")
+        tele.run_meta.setdefault(
+            "policy", ",".join(sorted({p.name for p in pols})))
     ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
                  if ftl is not None else None)
     if ftl_model is not None and fm is not None:

@@ -1,0 +1,365 @@
+"""Attribution-layer laws (:mod:`repro.sim.analysis`).
+
+The acceptance properties:
+
+(a) accounting identity — every session's blame components sum to its
+    recorded wall time within 1e-6 relative tolerance (float telescoping
+    is the only slack; the sweep is exact by construction), on serving,
+    GC-heavy and fault-injected traces alike — property-tested over
+    every session of every scenario, not spot-checked;
+(b) round trip — every trace ``validate_trace`` accepts is analyzable
+    (``build_report`` raises only on invalid traces), and the report
+    survives JSON serialization;
+(c) critical paths are causal — hops are time-ordered, phase breakdowns
+    non-negative, dependency hops only where the op actually waited;
+(d) diff refuses apples-to-oranges comparisons (hardware spec / policy /
+    entry mismatches) loudly, and the CLI exit codes pin the CI gate:
+    0 ok, 1 invalid-or-breach, 2 unreadable-or-refused;
+(e) one percentile implementation — ``telemetry._p99`` is
+    ``stats.percentile`` at p=99, pinned on empty/small windows;
+(f) fault coverage — ``mid_recovery`` decisions render in ``explain()``
+    and the breakdown stays sane with the error model armed.
+"""
+import io
+import json
+import types
+
+import pytest
+
+from repro.sim import (CatalogEntry, FaultConfig, FTLConfig,
+                       FlightRecorder, HostIOStream, PoissonArrivals,
+                       ServingConfig, SessionCatalog, TelemetryConfig,
+                       build_report, critical_path, diff_reports,
+                       pool_rankings, session_blame, simulate,
+                       simulate_mix, simulate_serving, validate_trace)
+from repro.core.isa import Resource
+from repro.sim.analysis import (COMPONENTS, REPORT_SCHEMA, blame_story,
+                                main as analysis_main)
+from repro.sim.stats import percentile
+from repro.sim.telemetry import _p99
+
+from _synth import synth_trace
+
+FULL = TelemetryConfig(spans=True, audit=True, interval_ns=20_000.0)
+
+RAMP = list(range(40))
+MIXED = [8, 0, 5, 5, 2, 7, 1, 4, 6, 3] * 4
+
+#: serving-drive geometry that keeps every die's collector busy
+GC_FTL = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                   prefill=0.9, gc_reserve_blocks=1)
+
+
+def _serving_run(faults=None):
+    catalog = SessionCatalog(
+        [CatalogEntry("A", synth_trace(RAMP, name="A"), weight=3.0),
+         CatalogEntry("B", synth_trace(MIXED, name="B"), weight=1.0)],
+        seed=5)
+    io = HostIOStream(rate_iops=60_000, read_fraction=0.7, n_requests=64,
+                      zipf_theta=0.95,
+                      n_logical_pages=GC_FTL.logical_pages())
+    return simulate_serving(
+        catalog,
+        PoissonArrivals(rate_per_sec=6000, n_sessions=12, seed=9),
+        "conduit",
+        serving=ServingConfig(keep_session_results=False,
+                              warmup_ns=1e5, cooldown_ns=1e5,
+                              little_law_warn_tol=float("inf")),
+        io_stream=io, ftl=GC_FTL, faults=faults, telemetry=FULL)
+
+
+@pytest.fixture(scope="module")
+def serving_trace():
+    """Serving under GC: sessions, host I/O, GC spans, sampler on."""
+    return _serving_run().telemetry.chrome_trace()
+
+
+@pytest.fixture(scope="module")
+def mix_trace():
+    """Multi-tenant GC run without a session stream (pseudo-sessions)."""
+    a = synth_trace(RAMP, name="A")
+    b = synth_trace(MIXED, name="B")
+    io = HostIOStream(rate_iops=250_000, read_fraction=0.3,
+                      n_requests=160, zipf_theta=0.95,
+                      n_logical_pages=GC_FTL.logical_pages())
+    m = simulate_mix([a, b], "conduit", io_stream=io, ftl=GC_FTL,
+                     compute_solo=False, telemetry=FULL)
+    return m.telemetry.chrome_trace()
+
+
+@pytest.fixture(scope="module")
+def faulted_result():
+    """Serving with the recovery ladder climbing (examples recipe)."""
+    return _serving_run(
+        faults=FaultConfig(rber_base=1.2e-3, die_failures=((3, 2.0e5),)))
+
+
+@pytest.fixture(scope="module")
+def faulted_trace(faulted_result):
+    return faulted_result.telemetry.chrome_trace()
+
+
+# -- (a) the accounting identity, property-tested ------------------------------
+
+@pytest.mark.parametrize("which", ["serving", "mix", "faulted"])
+def test_blame_components_sum_to_session_latency(which, request):
+    trace = request.getfixturevalue(f"{which}_trace")
+    rows = session_blame(trace)
+    assert rows, f"no analyzable sessions in the {which} trace"
+    for r in rows:
+        total = sum(r["components"].values())
+        assert total == pytest.approx(r["latency_ns"], rel=1e-6), \
+            (which, r["tenant"])
+        for comp, v in r["components"].items():
+            assert v >= -1e-9, (which, r["tenant"], comp)
+        assert set(r["components"]) == set(COMPONENTS)
+        # the per-pool split never exceeds the queue component
+        assert sum(r["queue_by_pool_ns"].values()) \
+            <= r["components"]["queue"] + 1e-6
+
+
+def test_gc_interference_is_attributed(serving_trace):
+    """Serving under constant GC: the gc component must show up — the
+    walkthrough's 'the tail is gc-built' claim rests on it."""
+    rows = session_blame(serving_trace)
+    assert sum(r["components"]["gc"] for r in rows) > 0.0
+
+
+def test_recovery_is_attributed_on_faulted_traces(faulted_trace):
+    """The reliability process's ladder spans reach the blame sweep."""
+    rel = [e for e in faulted_trace["traceEvents"]
+           if e.get("ph") == "X" and e.get("pid") == 6]
+    assert rel, "fault recipe produced no recovery spans"
+    rows = session_blame(faulted_trace)
+    assert all(r["components"]["recovery"] >= 0.0 for r in rows)
+
+
+# -- (b) report round trip -----------------------------------------------------
+
+@pytest.mark.parametrize("which", ["serving", "mix", "faulted"])
+def test_every_valid_trace_is_analyzable(which, request):
+    trace = request.getfixturevalue(f"{which}_trace")
+    assert validate_trace(trace) == []
+    rep = build_report(trace, git_sha="pinned")
+    assert rep["schema"] == REPORT_SCHEMA
+    assert rep["meta"]["git_sha"] == "pinned"
+    assert rep["sessions"]["n"] > 0
+    # survives JSON (the CLI writes it; diff reads it back)
+    again = json.loads(json.dumps(rep))
+    assert again["blame"]["share"] == rep["blame"]["share"]
+
+
+def test_empty_recorder_yields_empty_report():
+    """A trace with no spans (audit-only config) still analyzes."""
+    res = simulate(synth_trace(MIXED), "conduit",
+                   telemetry=TelemetryConfig(spans=False, audit=True))
+    trace = res.telemetry.chrome_trace()
+    assert validate_trace(trace) == []
+    rep = build_report(trace, git_sha="x")
+    assert rep["sessions"]["n"] == 0
+    assert rep["critical_path"]["n_hops"] == 0
+    assert rep["decisions"]["n"] > 0           # the audit stream is there
+
+
+def test_build_report_rejects_invalid_traces(serving_trace):
+    bad = json.loads(json.dumps(serving_trace))
+    del bad["otherData"]["schema"]
+    with pytest.raises(ValueError, match="invalid trace"):
+        build_report(bad)
+
+
+def test_report_names_the_gc_tail(serving_trace):
+    rep = build_report(serving_trace, git_sha="x")
+    story = blame_story(rep)
+    assert "gc" in story
+    p99 = rep["blame"]["p99_cohort"]
+    assert 0 < p99["n"] <= rep["sessions"]["n"]
+    assert rep["sessions"]["p99_ns"] == p99["threshold_ns"]
+
+
+def test_pool_rankings_degrade_without_sampler():
+    res = simulate(synth_trace(MIXED), "conduit",
+                   telemetry=TelemetryConfig(spans=True, audit=False,
+                                             interval_ns=0.0))
+    assert pool_rankings(res.telemetry) == []
+
+
+def test_pool_rankings_are_sorted_by_queue_depth(serving_trace):
+    rows = pool_rankings(serving_trace)
+    assert rows
+    depths = [r["queue_depth_ns_tw"] for r in rows]
+    assert depths == sorted(depths, reverse=True)
+    for r in rows:
+        assert r["util_mean"] >= 0.0 and r["util_at_p99"] >= 0.0
+
+
+# -- (c) critical paths --------------------------------------------------------
+
+@pytest.mark.parametrize("which", ["serving", "mix"])
+def test_critical_path_is_causal(which, request):
+    trace = request.getfixturevalue(f"{which}_trace")
+    cp = critical_path(trace)
+    assert cp["n_hops"] > 0
+    iids = [h["iid"] for h in cp["hops"]]
+    assert iids == sorted(iids)                # walked back, reported fwd
+    for h in cp["hops"]:
+        for ph in ("decide_ns", "dep_wait_ns", "dm_ns", "queue_ns",
+                   "compute_ns"):
+            assert h[ph] >= -1e-9, (h["iid"], ph)
+        if h["dep_gated"]:
+            assert h["dep_wait_ns"] > 0.0
+    # the path's wall span covers at least its own hops' busy time
+    busy = sum(h["compute_ns"] for h in cp["hops"])
+    assert cp["latency_ns"] + 1e-6 >= busy
+
+
+def test_critical_path_unknown_tenant_is_empty(serving_trace):
+    cp = critical_path(serving_trace, tenant="s999:nope")
+    assert cp["n_hops"] == 0 and cp["hops"] == []
+
+
+# -- (d) diff + CLI exit codes -------------------------------------------------
+
+@pytest.fixture()
+def report_file(serving_trace, tmp_path):
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(serving_trace))
+    out = tmp_path / "report.json"
+    assert analysis_main(["report", str(p), "--out", str(out)],
+                         out=io.StringIO()) == 0
+    return out
+
+
+def test_self_diff_is_comparable_and_breach_free(report_file):
+    buf = io.StringIO()
+    code = analysis_main(["diff", str(report_file), str(report_file),
+                          "--tol-rel", "0.01"], out=buf)
+    assert code == 0, buf.getvalue()
+
+
+def test_diff_accepts_raw_traces(serving_trace, tmp_path, report_file):
+    p = tmp_path / "trace2.json"
+    p.write_text(json.dumps(serving_trace))
+    assert analysis_main(["diff", str(report_file), str(p),
+                          "--tol-rel", "0.01"], out=io.StringIO()) == 0
+
+
+def test_diff_refuses_apples_to_oranges(report_file, tmp_path):
+    """Reproducibility metadata gates the comparison — a different
+    policy (or spec hash, or entry point) is refused with exit 2."""
+    other = json.loads(report_file.read_text())
+    other["meta"]["policy"] = "bw"
+    p = tmp_path / "other.json"
+    p.write_text(json.dumps(other))
+    buf = io.StringIO()
+    assert analysis_main(["diff", str(report_file), str(p)], out=buf) == 2
+    assert "meta.policy differs" in buf.getvalue()
+    assert "refusing apples-to-oranges" in buf.getvalue()
+    # --force downgrades the refusal and compares anyway
+    assert analysis_main(["diff", str(report_file), str(p), "--force"],
+                         out=io.StringIO()) == 0
+    d = diff_reports(json.loads(report_file.read_text()), other)
+    assert not d["comparable"] and d["refusals"]
+
+
+def test_diff_breach_gates_with_exit_1(report_file, tmp_path):
+    moved = json.loads(report_file.read_text())
+    moved["sessions"]["p99_ns"] *= 1.5
+    p = tmp_path / "moved.json"
+    p.write_text(json.dumps(moved))
+    buf = io.StringIO()
+    assert analysis_main(["diff", str(report_file), str(p),
+                          "--tol-rel", "0.1"], out=buf) == 1
+    assert "BREACH" in buf.getvalue()
+    # report-only mode (no --tol-rel) never gates
+    assert analysis_main(["diff", str(report_file), str(p)],
+                         out=io.StringIO()) == 0
+
+
+def test_report_cli_exit_codes(tmp_path, serving_trace):
+    assert analysis_main(["report", str(tmp_path / "missing.json")],
+                         out=io.StringIO()) == 2
+    bad = json.loads(json.dumps(serving_trace))
+    del bad["otherData"]["schema"]
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps(bad))
+    assert analysis_main(["report", str(p)], out=io.StringIO()) == 1
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    assert analysis_main(["diff", str(garbage), str(garbage)],
+                         out=io.StringIO()) == 2
+
+
+def test_serving_result_analysis_entry_point():
+    res = _serving_run()
+    rep = res.analysis(git_sha="x")
+    assert rep["schema"] == REPORT_SCHEMA
+    assert rep["sessions"]["n"] > 0
+    bare = simulate_serving(
+        SessionCatalog([CatalogEntry("A", synth_trace(RAMP, name="A"))]),
+        PoissonArrivals(rate_per_sec=2000, n_sessions=4, seed=1),
+        "conduit",
+        serving=ServingConfig(little_law_warn_tol=float("inf")))
+    with pytest.raises(ValueError, match="no flight recorder"):
+        bare.analysis()
+
+
+# -- (e) one percentile implementation -----------------------------------------
+
+@pytest.mark.parametrize("window", [
+    [], [5.0], [3.0, 1.0], [3.0, 1.0, 2.0], list(map(float, range(10))),
+    [7.0] * 512,
+])
+def test_p99_is_stats_percentile(window):
+    assert _p99(window) == percentile(list(window), 99.0)
+    from collections import deque
+    assert _p99(deque(window)) == percentile(list(window), 99.0)
+
+
+def test_percentile_edge_behavior_is_pinned():
+    assert percentile([], 99.0) == 0.0
+    assert percentile([42.0], 99.0) == 42.0
+    assert percentile([1.0, 2.0], 50.0) == 1.0
+    with pytest.raises(ValueError, match="out of range"):
+        percentile([1.0], 990.0)
+
+
+# -- (f) audit + breakdown under active faults ---------------------------------
+
+class _Feat:
+    supported = True
+    latency_comp = 1.0
+    latency_dm = 2.0
+    delay_dd = 0.0
+    delay_queue = 3.0
+    total = 6.0
+
+
+def test_mid_recovery_decisions_render_in_explain():
+    """A decision landing on a die whose recovery ladder is still busy
+    carries mid_recovery=True and says so in explain()."""
+    rec = FlightRecorder(TelemetryConfig(spans=False, audit=True))
+    rec._faults = types.SimpleNamespace(recovery_until=[0.0, 5_000.0])
+    instr = types.SimpleNamespace(iid=0, op="add", deps=())
+    feats = {Resource.IFP: _Feat()}
+    args = ("t0", "conduit", instr, Resource.IFP, feats,
+            1_000.0, 1_100.0, 1_100.0, 1_200.0, 1_300.0, 2_000.0, 50.0)
+    rec.on_dispatch(*args, unit=1)             # ladder drains at t=5000
+    rec.on_dispatch(*args, unit=0)             # die 0 was never recovering
+    mid, clear = rec.audit
+    assert mid.mid_recovery and not clear.mid_recovery
+    assert "landed mid-recovery" in mid.explain()
+    assert "landed mid-recovery" not in clear.explain()
+
+
+def test_faulted_run_audit_and_breakdown_stay_sane(faulted_result):
+    rec = faulted_result.telemetry
+    rows = rec.breakdown_rows()
+    assert rows and sum(r["count"] for r in rows) > 0
+    for r in rows:
+        for field in ("decide_ns", "dm_ns", "queue_ns", "compute_ns",
+                      "total_ns"):
+            assert r[field] >= -1e-9, (r["op"], r["resource"], field)
+    for a in rec.audit:
+        text = a.explain()
+        assert ("landed mid-recovery" in text) == a.mid_recovery

@@ -290,6 +290,27 @@ def test_export_json_round_trips(gc_recorder, tmp_path):
         {"ph": "X", "pid": 1, "tid": 1, "name": "x", "ts": 0.0,
          "dur": -1.0}), "bad dur"),
     (lambda t: t.__setitem__("traceEvents", {}), "traceEvents"),
+    # a counter track running backwards in time
+    (lambda t: t["traceEvents"].extend(
+        [{"ph": "C", "pid": 5, "tid": 0, "name": "zz", "ts": 2.0,
+          "args": {"x": 1}},
+         {"ph": "C", "pid": 5, "tid": 0, "name": "zz", "ts": 1.0,
+          "args": {"x": 1}}]), "non-monotonic counter"),
+    # a counter sample going negative (busy deltas/queue depths cannot)
+    (lambda t: t["traceEvents"].append(
+        {"ph": "C", "pid": 5, "tid": 0, "name": "drive", "ts": 1e12,
+         "args": {"backlog": -3}}), "negative counter"),
+    # the reliability process only carries recovery/retire spans ...
+    (lambda t: t["traceEvents"].append(
+        {"ph": "X", "pid": 6, "tid": 1, "name": "bogus-span", "ts": 0.0,
+         "dur": 1.0}), "unknown reliability span"),
+    # ... and die-failure / read-only instants
+    (lambda t: t["traceEvents"].append(
+        {"ph": "i", "pid": 6, "tid": 1, "name": "weird", "ts": 0.0,
+         "s": "t"}), "unknown reliability instant"),
+    # the per-dispatch ops stream: list of records with the join keys
+    (lambda t: t["otherData"].__setitem__("ops", 5), "must be a list"),
+    (lambda t: t["otherData"]["ops"].append({"nope": 1}), "ops #"),
 ])
 def test_corrupt_traces_are_rejected(gc_recorder, corrupt, expect):
     """The round-trip law: whatever validate rejects, summarize raises."""
@@ -380,6 +401,59 @@ def test_little_law_warns_on_an_edge_dominated_window():
             "conduit")
     assert abs(res.little_law_ratio() - 1.0) \
         > ServingConfig().little_law_warn_tol
+
+
+# -- ops stream + run meta (the analysis layer's raw material) -----------------
+
+def test_ops_stream_carries_ordered_phase_boundaries(gc_trace):
+    ops = gc_trace["otherData"]["ops"]
+    assert len(ops) > 0
+    for o in ops:
+        assert o["t_decide_ns"] <= o["decide_end_ns"] <= o["ready_ns"] \
+            <= o["move_end_ns"] <= o["start_ns"] <= o["end_ns"], o
+        assert isinstance(o["deps"], list)
+    # joinable against the fabric spans: structured args on bookings
+    args = [e.get("args") for e in gc_trace["traceEvents"]
+            if e.get("ph") == "X" and e.get("pid") == PID_FABRIC]
+    assert any(a and "iid" in a for a in args), \
+        "no structured dispatch attribution on fabric spans"
+    assert any(a and "gc_die" in a for a in args), \
+        "no structured GC attribution on fabric spans"
+
+
+def test_ops_cap_truncates_loudly():
+    cfg = TelemetryConfig(spans=True, audit=False, max_spans=10)
+    res = simulate(synth_trace(MIXED), "conduit", telemetry=cfg)
+    rec = res.telemetry
+    assert len(rec.ops) == 10 and rec.dropped_ops > 0
+    assert rec.chrome_trace()["otherData"]["dropped_ops"] == rec.dropped_ops
+
+
+def test_run_meta_fingerprints_the_run(gc_trace):
+    meta = gc_trace["otherData"]["meta"]
+    assert meta["entry"] == "simulate_mix"
+    assert meta["policy"] == "conduit"
+    assert len(meta["spec_sha"]) == 16
+    assert meta["telemetry"]["spans"] is True
+
+
+def test_op_timeout_retry_trace_keeps_io_spans_balanced():
+    """Every timed-out attempt closes its async span before the retry
+    opens a fresh one for the same request id — the exported trace from
+    an op-timeout run stays b/e balanced and validate-clean."""
+    from repro.sim import FaultConfig, simulate_mix as smix
+    io = HostIOStream(rate_iops=10_000, read_fraction=1.0, n_requests=1,
+                      seed=11)
+    m = smix([synth_trace([], outputs=False)], "conduit", io_stream=io,
+             compute_solo=False, telemetry=FULL,
+             faults=FaultConfig(op_timeout_ns=1.0, max_op_retries=2,
+                                op_retry_backoff_ns=10_000.0))
+    assert m.faults.n_op_retries == 2          # the recipe really retried
+    trace = m.telemetry.chrome_trace()
+    assert validate_trace(trace) == []
+    timeouts = [e for e in trace["traceEvents"] if e.get("ph") == "i"
+                and e.get("name", "").startswith("io-timeout")]
+    assert len(timeouts) == 2                  # one instant per re-issue
 
 
 def test_little_law_tolerance_is_configurable():

@@ -1,0 +1,169 @@
+"""Fleet serving benchmark: placement, hedging and steering at rack scale.
+
+Three studies of :mod:`repro.sim.fleet`, all hashed-seed deterministic
+(byte-identical across ``benchmarks/run.py --jobs`` values):
+
+1. **fleet saturation vs N with a straggler** — the headline scaling
+   curve: :func:`~repro.sim.fleet.find_fleet_saturation` bisects fleet
+   sessions/sec at a *fleet* p99 SLO (sample-merged across drives, never
+   averaged) while drive 0 carries a write-heavy host stream on a tight
+   FTL — it is mid-GC for the whole run, and a collecting drive cannot
+   meet the SLO at *any* rate (every session it serves lands in the
+   merged p99's tail).  With replication 2 and read steering on, the
+   fleet routes around it: saturation scales like N-1 clean drives.
+2. **placement x hedging grid** — one batched lockstep sweep
+   (:func:`~repro.sim.sweep.batched_find_fleet_saturation`) over
+   {hash, consistent, heat} x {hedging off, on} with replication 2 on
+   the straggler fleet: what each routing mechanism buys in sustainable
+   fleet sessions/sec at the same SLO.
+3. **hedging vs steering vs neither** — fixed offered rate on the
+   straggler fleet, replication 2: read steering sinks the collecting
+   drive to the back of every preference order and recovers part of the
+   fleet tail; hedging races the two best replicas and cancels the
+   loser's queued twin.  The study reports fleet p99, the straggler's
+   p99 and the mechanism counters side by side.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from benchmarks.common import csv_row
+from repro.sim import (CatalogEntry, DriveProfile, FleetConfig,
+                       FleetSweepLane, FTLConfig, HostIOStream,
+                       PoissonArrivals, ServingConfig, SessionCatalog,
+                       batched_find_fleet_saturation, find_fleet_saturation,
+                       simulate_fleet)
+from repro.workloads import get_trace
+
+#: fleet p99 session-latency SLO for the saturation finder (ns) — the
+#: serving_bench calibration (a few x the uncontended single-drive p99)
+SLO_P99_NS = 1.5e6
+TRIM_FRACTION = 0.1
+
+
+def _catalog() -> SessionCatalog:
+    return SessionCatalog(
+        [CatalogEntry("jacobi1d", get_trace("jacobi1d", "tiny"), weight=3.0),
+         CatalogEntry("xor_filter", get_trace("xor_filter", "tiny"),
+                      weight=1.0)],
+        seed=5)
+
+
+def _scfg(rate_per_sec: float, n_sessions: int) -> ServingConfig:
+    trim = TRIM_FRACTION * n_sessions / rate_per_sec * 1e9
+    return ServingConfig(warmup_ns=trim, cooldown_ns=trim,
+                         keep_session_results=False,
+                         little_law_warn_tol=float("inf"))
+
+
+def _straggler(smoke: bool) -> DriveProfile:
+    """Drive-0 override: write-heavy churn on a tight FTL — the drive
+    collects garbage for the whole serving window."""
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                    prefill=0.9, gc_suspend=True, gc_reserve_blocks=1)
+    io = HostIOStream(rate_iops=150_000, read_fraction=0.1,
+                      n_requests=600 if smoke else 2400,
+                      zipf_theta=0.9, n_logical_pages=ftl.logical_pages(),
+                      seed=11)
+    return DriveProfile(io_stream=io, ftl=ftl)
+
+
+def _fleet(n: int, prof: DriveProfile, placement: object = "hash",
+           replication: int = 1, steering: bool = False,
+           hedging: bool = False,
+           max_inflight: Optional[int] = None) -> FleetConfig:
+    return FleetConfig(n_drives=n, placement=placement,
+                       replication=replication, steering=steering,
+                       hedging=hedging, max_inflight=max_inflight,
+                       profiles=((0, prof),))
+
+
+def fleet_serving(policy: str = "conduit", smoke: bool = False) -> List[str]:
+    """Fleet saturation vs N + placement x hedging grid + hedging vs
+    steering vs neither, all with a mid-GC straggler on drive 0."""
+    rows: List[str] = []
+    catalog = _catalog()
+    prof = _straggler(smoke)
+    n_sessions = 32 if smoke else 96
+    sat_iters = 2 if smoke else 5
+
+    # -- study 1: fleet saturation vs N (drive 0 mid-GC, steered) -------------
+    ns = (2, 3) if smoke else (2, 4, 8)
+    print(f"\n== fleet saturation vs N ({policy} policy, hash placement, "
+          f"replication=2 + read steering, drive 0 mid-GC straggler, "
+          f"fleet p99 SLO {SLO_P99_NS / 1e3:.0f} us)")
+    for n in ns:
+        rate_hi = 18_000.0 * n
+        # the offered burst must be long enough to saturate N-1 drives
+        n_sess1 = n_sessions if smoke else max(n_sessions, 24 * n)
+        scfg = _scfg(rate_hi, n_sess1)
+        base = PoissonArrivals(rate_per_sec=100.0, n_sessions=n_sess1,
+                               seed=9)
+        sat = find_fleet_saturation(
+            catalog, base, policy, slo_p99_ns=SLO_P99_NS, rate_lo=500.0,
+            rate_hi=rate_hi, iters=sat_iters, serving=scfg,
+            fleet=_fleet(n, prof, replication=2, steering=True))
+        last = sat.probes[-1]
+        print(f"  N={n}  saturation={sat.rate_per_sec:8.1f}/s  "
+              f"per_survivor={sat.rate_per_sec / max(n - 1, 1):7.1f}/s  "
+              f"avail={last.availability:5.3f} ({len(sat.probes)} probes)")
+        rows.append(csv_row(f"fleet/saturation/n{n}",
+                            f"{sat.rate_per_sec:.1f}",
+                            f"per_sec,slo_p99_us={SLO_P99_NS / 1e3:.0f}"))
+
+    # -- study 2: placement x hedging grid at the fleet p99 SLO ---------------
+    n = 3 if smoke else 4
+    rate_hi = 18_000.0 * n
+    scfg = _scfg(rate_hi, n_sessions)
+    placements = ("hash", "consistent", "heat")
+    lanes = [FleetSweepLane(policy,
+                            fleet=_fleet(n, prof, placement=pl,
+                                         replication=2, hedging=hedge),
+                            seed=9, n_sessions=n_sessions)
+             for pl in placements for hedge in (False, True)]
+    sats = batched_find_fleet_saturation(
+        catalog, lanes, slo_p99_ns=SLO_P99_NS, rate_lo=500.0,
+        rate_hi=rate_hi, iters=sat_iters, serving=scfg)
+    print(f"\n== placement x hedging grid (N={n}, replication=2, drive 0 "
+          f"mid-GC) — fleet sessions/sec at fleet p99 SLO")
+    print(f"  {'placement':>12s} {'hedging':>7s} {'saturation':>12s}")
+    for (pl, hedge), sat in zip(
+            [(pl, h) for pl in placements for h in (False, True)], sats):
+        tag = "on" if hedge else "off"
+        print(f"  {pl:>12s} {tag:>7s} {sat.rate_per_sec:10.1f}/s")
+        rows.append(csv_row(f"fleet/grid/{pl}/hedge_{tag}",
+                            f"{sat.rate_per_sec:.1f}",
+                            f"per_sec,n={n},replication=2"))
+
+    # -- study 3: hedging vs steering vs neither at a fixed rate --------------
+    rate = 2_000.0 * n
+    arrivals = PoissonArrivals(rate_per_sec=rate, n_sessions=n_sessions,
+                               seed=9)
+    scfg3 = _scfg(rate, n_sessions)
+    modes = (("neither", dict()),
+             ("steering", dict(steering=True)),
+             ("hedging", dict(hedging=True)))
+    print(f"\n== hedging vs steering vs neither (N={n}, replication=2, "
+          f"{rate:.0f}/s offered, drive 0 mid-GC)")
+    print(f"  {'mode':>9s} {'fleet_p99_us':>12s} {'straggler_p99_us':>16s} "
+          f"{'d0_done':>7s} {'steered':>7s} {'hedged':>6s} "
+          f"{'cancelled':>9s}")
+    p99_by_mode = {}
+    for mode, kw in modes:
+        res = simulate_fleet(catalog, arrivals, policy, serving=scfg3,
+                             fleet=_fleet(n, prof, replication=2, **kw))
+        p99 = res.p(99)
+        d0_p99 = res.per_drive_p(99)[0]
+        p99_by_mode[mode] = p99
+        print(f"  {mode:>9s} {p99 / 1e3:12.1f} {d0_p99 / 1e3:16.1f} "
+              f"{res.drives[0].n_completed:7d} {res.n_steered:7d} "
+              f"{res.n_hedged:6d} {res.n_cancelled:9d}")
+        rows.append(csv_row(f"fleet/straggler/{mode}/fleet_p99",
+                            f"{p99 / 1e3:.1f}",
+                            f"us,straggler_p99_us={d0_p99 / 1e3:.1f}"))
+    if p99_by_mode["neither"] > 0:
+        rec = 1.0 - p99_by_mode["steering"] / p99_by_mode["neither"]
+        print(f"  steering recovers {rec:.1%} of the unsteered fleet p99")
+        rows.append(csv_row("fleet/straggler/steering_recovery",
+                            f"{rec:.4f}", "fraction_of_neither_p99"))
+    return rows

@@ -38,13 +38,13 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 #: suites whose signature takes a ``smoke`` kwarg (CI-sized shrink)
-SMOKE_AWARE = {"mix", "gc", "gc_policies", "serving", "faults"}
+SMOKE_AWARE = {"mix", "gc", "gc_policies", "serving", "faults", "fleet"}
 
 
 def _suite_table() -> Dict:
-    from benchmarks import (faults_bench, kernel_bench, paper_figures,
-                            perf_bench, pressure_bench, roofline_bench,
-                            serving_bench)
+    from benchmarks import (faults_bench, fleet_bench, kernel_bench,
+                            paper_figures, perf_bench, pressure_bench,
+                            roofline_bench, serving_bench)
 
     return {
         "table3": paper_figures.table3_characterize,
@@ -63,6 +63,7 @@ def _suite_table() -> Dict:
         "gc_policies": pressure_bench.gc_policies,
         "serving": serving_bench.serving_curve,
         "faults": faults_bench.fault_injection,
+        "fleet": fleet_bench.fleet_serving,
         "roofline": roofline_bench.roofline_table,
         "dryrun": roofline_bench.multi_pod_check,
         "perf": roofline_bench.perf_deltas,
@@ -203,7 +204,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7a,fig7b,fig8,fig9,fig10,table3,"
                          "overhead,roofline,pressure,fault,mix,gc,"
-                         "gc_policies,serving,kernels,simperf")
+                         "gc_policies,serving,faults,fleet,kernels,simperf")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized configurations for smoke-aware suites "
                          "(mix, gc, gc_policies, serving): tiny sweeps "

@@ -8,31 +8,45 @@ from a weighted catalog keep arriving mid-run; steady-state throughput /
 tail latency, plus :func:`find_saturation` for the max sustainable rate).
 Batched sweeps: :func:`batched_find_saturation` runs many saturation
 searches in lockstep (policy grids, seed fans) on a vectorized driver.
+Fleet entry point: :func:`simulate_fleet` (N :class:`DriveActor` drives
+behind a placement layer — replication, read steering, hedging, fleet
+admission — plus :func:`find_fleet_saturation` for fleet sessions/sec
+at a fleet p99 SLO).
 All run on the time-ordered event heap in :mod:`repro.sim.events`.
 """
 from repro.sim.analysis import (blame_story, build_report, critical_path,
-                                diff_reports, pool_rankings, session_blame)
+                                diff_reports, fleet_blame, pool_rankings,
+                                session_blame, split_fleet_trace)
+from repro.sim.drive import DriveActor, DriveHealth, DrivePoll
 from repro.sim.events import EventEngine, EventKind
 from repro.sim.faults import FaultConfig, FaultModel, FaultStats
 from repro.sim.ftl import (VICTIM_POLICIES, CostBenefitVictim, FTLConfig,
                            FTLModel, GreedyVictim, OutOfPhysicalBlocks,
                            VictimPolicy, WearAwareVictim,
                            drive_zipf_overwrites, make_victim_policy)
+from repro.sim.fleet import (DriveProfile, FleetConfig,
+                             find_fleet_saturation, simulate_fleet)
 from repro.sim.machine import SimConfig, Simulation, simulate
+from repro.sim.placement import (ConsistentHashPlacement, HashPlacement,
+                                 HeatAwarePlacement, PlacementPolicy,
+                                 derive_drive_seed, make_placement)
 from repro.sim.servers import Fabric, ServerPool
 from repro.sim.serving import (SaturationProbe, SaturationResult,
                                ServingConfig, find_saturation,
                                simulate_serving)
-from repro.sim.sweep import (SweepLane, array_backend,
+from repro.sim.sweep import (FleetSweepLane, SweepLane, array_backend,
+                             batched_find_fleet_saturation,
                              batched_find_saturation,
                              batched_poisson_arrival_times_ns)
-from repro.sim.stats import (DecisionRecord, FTLStats, HostIOStats,
+from repro.sim.stats import (DecisionRecord, FleetResult,
+                             FleetSessionRecord, FTLStats, HostIOStats,
                              MixResult, ServingResult, SessionRecord,
                              SessionState, SimResult, jain_fairness,
-                             percentile)
+                             merged_percentile, percentile)
 from repro.sim.telemetry import (CandidateCost, FlightRecorder,
                                  IntervalSample, OffloadAudit,
-                                 TelemetryConfig, summarize as
+                                 TelemetryConfig, export_fleet_trace,
+                                 merge_fleet_trace, summarize as
                                  summarize_trace, validate_trace)
 from repro.sim.tenancy import HostIOStream, clone_trace, simulate_mix
 from repro.sim.workgen import (ArrivalProcess, CatalogEntry,
@@ -58,9 +72,18 @@ __all__ = ["SimConfig", "Simulation", "simulate", "ServerPool", "Fabric",
            "OutOfPhysicalBlocks",
            "SaturationProbe", "SaturationResult",
            "SweepLane", "batched_find_saturation",
+           "FleetSweepLane", "batched_find_fleet_saturation",
            "batched_poisson_arrival_times_ns", "array_backend",
            "TelemetryConfig", "FlightRecorder", "OffloadAudit",
            "CandidateCost", "IntervalSample", "validate_trace",
            "summarize_trace",
            "build_report", "session_blame", "critical_path",
-           "pool_rankings", "diff_reports", "blame_story"]
+           "pool_rankings", "diff_reports", "blame_story",
+           "DriveActor", "DriveHealth", "DrivePoll",
+           "DriveProfile", "FleetConfig", "simulate_fleet",
+           "find_fleet_saturation",
+           "PlacementPolicy", "HashPlacement", "ConsistentHashPlacement",
+           "HeatAwarePlacement", "make_placement", "derive_drive_seed",
+           "FleetResult", "FleetSessionRecord", "merged_percentile",
+           "merge_fleet_trace", "export_fleet_trace",
+           "split_fleet_trace", "fleet_blame"]

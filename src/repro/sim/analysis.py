@@ -121,7 +121,7 @@ class _Session:
     """One session lifecycle parsed from the async span stream."""
 
     __slots__ = ("sid", "kind", "arrival_ns", "admit_ns", "done_ns",
-                 "timed_out", "rejected")
+                 "timed_out", "rejected", "cancelled")
 
     def __init__(self, sid, kind):
         self.sid = sid
@@ -131,6 +131,7 @@ class _Session:
         self.done_ns: Optional[float] = None
         self.timed_out = False
         self.rejected = False
+        self.cancelled = False
 
     @property
     def tenant(self) -> str:
@@ -189,6 +190,7 @@ class _Parsed:
                         args = ev.get("args") or {}
                         s.timed_out = bool(args.get("timed_out"))
                         s.rejected = bool(args.get("rejected"))
+                        s.cancelled = bool(args.get("cancelled"))
                 elif ph == "i" and ev.get("name", "").startswith("admit s"):
                     sid = int(ev["name"][len("admit s"):])
                     s = by_sid.get(sid)
@@ -222,7 +224,8 @@ class _Parsed:
             return [(s.tenant, s.arrival_ns,
                      s.admit_ns if s.admit_ns is not None else s.arrival_ns,
                      s.done_ns, s.timed_out)
-                    for s in self.sessions if not s.rejected
+                    for s in self.sessions
+                    if not s.rejected and not s.cancelled
                     and s.done_ns > s.arrival_ns]
         out = []
         for tenant, ops in sorted(self.ops_by_tenant.items()):
@@ -429,6 +432,127 @@ def pool_rankings(trace_or_recorder: Any,
                            if n_util.get(k) else 0.0),
              "util_at_p99": at_p99.get(k, 0.0)}
             for k in pools]
+
+
+# -- fleet analysis: split merged traces, blame the fleet tail ------------------
+
+def split_fleet_trace(trace_or_obj: Any) -> Dict[int, Dict[str, Any]]:
+    """Invert :func:`repro.sim.telemetry.merge_fleet_trace`: one merged
+    fleet trace → ``{drive_id: per-drive trace}`` with base pids
+    restored, ``d{k}:`` process prefixes and ``d{k}/`` async-id prefixes
+    stripped, and the tagged ``otherData`` record streams filtered back
+    to their drives.  Each returned trace is a normal single-drive trace
+    every analysis in this module accepts."""
+    trace = _as_trace(trace_or_obj)
+    other = trace.get("otherData") or {}
+    meta = other.get("meta") or {}
+    drive_metas = meta.get("drives") or []
+    per: Dict[int, Dict[str, Any]] = {}
+
+    def bucket(k: int) -> Dict[str, Any]:
+        if k not in per:
+            dm = drive_metas[k] if k < len(drive_metas) else {}
+            per[k] = {
+                "traceEvents": [],
+                "displayTimeUnit": "ns",
+                "otherData": {
+                    "schema": other.get("schema"),
+                    # engine event counts are summed fleet-wide by the
+                    # merge and not recoverable per drive
+                    "event_counts": {},
+                    "audit": [], "intervals": [], "breakdown": [],
+                    "ops": [], "meta": dict(dm),
+                    "dropped_spans": 0, "dropped_audit": 0,
+                    "dropped_ops": 0,
+                }}
+        return per[k]
+
+    for ev in trace.get("traceEvents") or []:
+        pid = ev.get("pid")
+        if not isinstance(pid, int):
+            continue
+        k, base = divmod(pid, 10)
+        ev = dict(ev)
+        ev["pid"] = base
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            name = (ev.get("args") or {}).get("name", "")
+            if isinstance(name, str) and name.startswith("d") \
+                    and ":" in name:
+                ev["args"] = {"name": name.split(":", 1)[1]}
+        if ev.get("ph") in ("b", "e"):
+            i = ev.get("id")
+            prefix = f"d{k}/"
+            if isinstance(i, str) and i.startswith(prefix):
+                raw = i[len(prefix):]
+                # sids / request ids were ints before the merge
+                ev["id"] = (int(raw) if raw.lstrip("-").isdigit()
+                            else raw)
+        bucket(k)["traceEvents"].append(ev)
+    for name in ("audit", "intervals", "breakdown", "ops"):
+        for rec in other.get(name) or []:
+            k = rec.get("drive", 0)
+            rec = dict(rec)
+            rec.pop("drive", None)
+            bucket(k)["otherData"][name].append(rec)
+    return per
+
+
+def fleet_blame(fleet_trace: Any) -> Dict[str, Any]:
+    """Which drive — and which component on it — built the fleet tail.
+
+    Accepts a merged fleet trace (dict or path-loaded object) or the
+    ``FleetResult.telemetry`` list of per-drive recorders.  The fleet
+    p99 is *sample-merged* across drives
+    (:func:`repro.sim.stats.merged_percentile`); each drive is then
+    scored by its share of the fleet's tail sessions (latency ≥ fleet
+    p99), and its tail sessions' blame components
+    (:func:`session_blame`) name the mechanism.  The ``straggler`` entry
+    is the drive with the largest tail share — ties broken by p99."""
+    if isinstance(fleet_trace, (list, tuple)):
+        from repro.sim.telemetry import merge_fleet_trace
+        fleet_trace = merge_fleet_trace(list(fleet_trace))
+    from repro.sim.stats import merged_percentile, percentile
+    per = split_fleet_trace(fleet_trace)
+    rows_by_drive: Dict[int, List[dict]] = {}
+    for k, t in sorted(per.items()):
+        rows_by_drive[k] = [r for r in session_blame(t)
+                            if not r["timed_out"]]
+    fleet_p99 = merged_percentile(
+        [[r["latency_ns"] for r in rows] for rows in
+         rows_by_drive.values()], 99)
+    per_drive: List[Dict[str, Any]] = []
+    for k in sorted(rows_by_drive):
+        rows = rows_by_drive[k]
+        lats = [r["latency_ns"] for r in rows]
+        tail = [r for r in rows if r["latency_ns"] >= fleet_p99]
+        comp: Dict[str, float] = {}
+        for r in tail:
+            for c, v in r["components"].items():
+                comp[c] = comp.get(c, 0.0) + v
+        per_drive.append({
+            "drive": k,
+            "n_sessions": len(lats),
+            "p50_ns": percentile(lats, 50),
+            "p99_ns": percentile(lats, 99),
+            "tail_sessions": len(tail),
+            "dominant_component": (max(sorted(comp), key=comp.get)
+                                   if comp else None),
+            "tail_components_ns": {c: round(v, 1)
+                                   for c, v in sorted(comp.items())},
+        })
+    n_tail = sum(d["tail_sessions"] for d in per_drive)
+    for d in per_drive:
+        d["tail_share"] = (d["tail_sessions"] / n_tail) if n_tail else 0.0
+    straggler = (max(per_drive,
+                     key=lambda d: (d["tail_share"], d["p99_ns"]))
+                 if per_drive else None)
+    return {
+        "schema": "conduit-fleet-analysis/v1",
+        "n_drives": len(per_drive),
+        "fleet_p99_ns": fleet_p99,
+        "per_drive": per_drive,
+        "straggler": straggler,
+    }
 
 
 # -- product 3: structured report + cross-run diff -----------------------------

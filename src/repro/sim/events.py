@@ -88,6 +88,12 @@ class EventEngine:
         # optional pure-observer flight recorder (repro.sim.telemetry);
         # attach before run() — the loop hoists it once
         self.telemetry = None
+        # clock bound of the innermost run()/run_before() call, or None
+        # when running to quiescence.  Event sources that batch work
+        # inline past the heap (see tenancy._HostIOModel._on_arrival)
+        # must not advance ``now`` to or beyond the horizon: the caller
+        # may inject new events there (the fleet's advance-to-time seam).
+        self.horizon: Optional[float] = None
 
     def schedule(self, time: float, kind: EventKind,
                  handler: Callable[[Any], None],
@@ -120,17 +126,52 @@ class EventEngine:
         record = self.record
         tele = self.telemetry
         pop = heappop
-        while heap:
-            time = heap[0][0]
-            if until is not None and time > until:
-                break
-            ev = pop(heap)
-            if time > self.now:
-                self.now = time
-            self.processed += 1
-            if record:
-                self.log.append((self.now, ev[2]))
-            if tele is not None:
-                tele.on_event(self.now, ev[2])
-            ev[3](ev[4])
+        prev_horizon = self.horizon
+        self.horizon = until
+        try:
+            while heap:
+                time = heap[0][0]
+                if until is not None and time > until:
+                    break
+                ev = pop(heap)
+                if time > self.now:
+                    self.now = time
+                self.processed += 1
+                if record:
+                    self.log.append((self.now, ev[2]))
+                if tele is not None:
+                    tele.on_event(self.now, ev[2])
+                ev[3](ev[4])
+        finally:
+            self.horizon = prev_horizon
+        return self.now
+
+    def run_before(self, t: float) -> float:
+        """Process events strictly before ``t``; returns the clock.
+
+        The advance-to-time seam of a :class:`~repro.sim.drive.DriveActor`:
+        ``run(until=t)`` would also pop events at exactly ``t``, but a
+        fleet front-end that is about to inject a session *at* ``t`` must
+        leave same-instant events pending so their relative order against
+        the injected arrival is decided by the heap's ``(time, seq)`` key,
+        not by who called ``run`` first.  Bookkeeping mirrors :meth:`run`."""
+        heap = self._heap
+        record = self.record
+        tele = self.telemetry
+        pop = heappop
+        prev_horizon = self.horizon
+        self.horizon = t
+        try:
+            while heap and heap[0][0] < t:
+                ev = pop(heap)
+                if ev[0] > self.now:
+                    self.now = ev[0]
+                self.processed += 1
+                if record:
+                    self.log.append((self.now, ev[2]))
+                if tele is not None:
+                    tele.on_event(self.now, ev[2])
+                ev[3](ev[4])
+        finally:
+            self.horizon = prev_horizon
         return self.now

@@ -58,9 +58,8 @@ from repro.sim.ftl import FTLConfig, FTLModel
 from repro.sim.machine import SimConfig, Simulation
 from repro.sim.servers import Fabric
 from repro.sim.stats import ServingResult, SessionRecord, SessionState
-from repro.sim.telemetry import TelemetryLike, as_recorder
-from repro.sim.tenancy import (HostIOStream, _HostIOModel, build_ftl_model,
-                               clone_trace)
+from repro.sim.telemetry import TelemetryLike
+from repro.sim.tenancy import HostIOStream, _HostIOModel, clone_trace
 from repro.sim.workgen import ArrivalProcess, PoissonArrivals, SessionCatalog
 
 PolicyLike = Union[str, Policy]
@@ -125,11 +124,22 @@ class ServingConfig:
 
 
 class _ServingDriver:
-    """Binds catalog + arrivals to one engine/fabric and tracks sessions."""
+    """Binds catalog + arrivals to one engine/fabric and tracks sessions.
+
+    This is the *drive-local* half of the serving loop: admission
+    control, the backlog, session records, the occupancy integral and
+    the window snapshots.  Who decides which sessions arrive is the
+    *driver loop's* business — either the pre-scheduled arrival list of
+    :func:`simulate_serving` (``plan=None``) or a fleet front-end
+    (:mod:`repro.sim.fleet`) injecting routed sessions one at a time
+    through :meth:`submit`.  Both paths share every line below, which is
+    what keeps the N=1 fleet equivalence law bit-exact."""
 
     def __init__(self, catalog: SessionCatalog, arrival_times: List[float],
                  policy: PolicyLike, spec: SSDSpec, cfg: SimConfig,
-                 scfg: ServingConfig, fabric: Fabric, engine: EventEngine):
+                 scfg: ServingConfig, fabric: Fabric, engine: EventEngine,
+                 window: Optional[Tuple[float, float]] = None,
+                 plan: Optional[List[tuple]] = None):
         self.catalog = catalog
         self.spec = spec
         self.cfg = cfg
@@ -148,13 +158,22 @@ class _ServingDriver:
         self.n_completed = 0
         self.n_failed = 0
         self.n_timed_out = 0
+        self.n_cancelled = 0
+        # fleet seam: called (local_index, record) whenever a session
+        # reaches a terminal state — None (the default) costs one branch
+        self.on_terminal = None
         self.results: List = []
         self.op_latencies: List[float] = []
 
-        # steady-state window over the arrival span
-        lo = scfg.warmup_ns
-        hi = max(lo, (arrival_times[-1] - scfg.cooldown_ns)
-                 if arrival_times else lo)
+        # steady-state window over the arrival span; a fleet passes the
+        # fleet-global window explicitly so every drive measures the same
+        # steady-state span regardless of which sessions it was routed
+        if window is None:
+            lo = scfg.warmup_ns
+            hi = max(lo, (arrival_times[-1] - scfg.cooldown_ns)
+                     if arrival_times else lo)
+        else:
+            lo, hi = window
         self.window = (lo, hi)
         # time-averaged in-system occupancy (arrival-accepted .. done):
         # Little's L, integrated over the window only
@@ -177,17 +196,26 @@ class _ServingDriver:
         # per-run state (the dominant admission cost at high churn)
         self._sim_pool: Dict[str, List[Simulation]] = {}
 
-        # one catalog draw per session, shared by the record and the
-        # admission path (drawing again at admit time would double the
-        # draw count and let the two diverge if a catalog were stateful)
-        self.entries = [catalog.draw(i) for i in range(len(arrival_times))]
-        self.records = [
-            SessionRecord(sid=i, kind=e.name, arrival_ns=t,
-                          measured=lo <= t <= hi)
-            for i, (t, e) in enumerate(zip(arrival_times, self.entries))]
-        for i, t in enumerate(arrival_times):
-            engine.schedule(t, EventKind.SESSION_ARRIVAL, self._on_arrival,
-                            payload=i)
+        if plan is None:
+            # one catalog draw per session, shared by the record and the
+            # admission path (drawing again at admit time would double the
+            # draw count and let the two diverge if a catalog were stateful)
+            self.entries = [catalog.draw(i) for i in range(len(arrival_times))]
+            self.records = [
+                SessionRecord(sid=i, kind=e.name, arrival_ns=t,
+                              measured=lo <= t <= hi)
+                for i, (t, e) in enumerate(zip(arrival_times, self.entries))]
+            for i, t in enumerate(arrival_times):
+                engine.schedule(t, EventKind.SESSION_ARRIVAL,
+                                self._on_arrival, payload=i)
+        else:
+            # fleet path: the placement layer drew the catalog fleet-wide
+            # and routed this drive a subset — same scheduling order as
+            # the default path (window snapshots first, then arrivals)
+            self.entries = []
+            self.records = []
+            for t, entry, sid, measured in plan:
+                self.submit(t, entry, sid, measured)
 
     # -- Little's-law occupancy integral --------------------------------------
 
@@ -203,26 +231,70 @@ class _ServingDriver:
 
     # -- session lifecycle ----------------------------------------------------
 
-    def _on_arrival(self, sid: int) -> None:
+    def submit(self, t_ns: float, entry, sid: int, measured: bool) -> int:
+        """Fleet submit seam: enqueue one routed session arriving at
+        ``t_ns``.  ``sid`` is the caller's (fleet-global) session id;
+        the returned local index is what :meth:`cancel` takes.  Callable
+        both at construction (the ``plan`` path) and mid-run from a
+        lockstep fleet loop — the only requirement is ``t_ns >= now``."""
+        i = len(self.records)
+        self.entries.append(entry)
+        self.records.append(SessionRecord(sid=sid, kind=entry.name,
+                                          arrival_ns=t_ns,
+                                          measured=measured))
+        self.engine.schedule(t_ns, EventKind.SESSION_ARRIVAL,
+                             self._on_arrival, payload=i)
+        return i
+
+    def cancel(self, i: int) -> bool:
+        """Fleet hedging seam (cancel-on-first-win): cancel the copy at
+        local index ``i`` if it is still *queued*.  Work already
+        dispatched cannot be revoked — it drains on the fabric, exactly
+        the session-timeout semantics — so an executing copy returns
+        False and simply completes (the fleet deduplicates at its own
+        record level)."""
+        rec = self.records[i]
+        if rec.state is not SessionState.PENDING or rec.admit_ns >= 0.0:
+            return False
+        try:
+            self.backlog.remove(i)
+        except ValueError:
+            return False        # arrival not processed yet / not queued
+        rec.state = SessionState.CANCELLED
+        self.n_cancelled += 1
         now = self.engine.now
+        self._mark(now, -1)     # a queued session was in-system
+        if self.telemetry is not None:
+            self.telemetry.on_session_cancel(rec.sid, rec.kind, now)
+        self._terminal(i, rec)
+        return True
+
+    def _terminal(self, i: int, rec: SessionRecord) -> None:
+        if self.on_terminal is not None:
+            self.on_terminal(i, rec)
+
+    def _on_arrival(self, i: int) -> None:
+        now = self.engine.now
+        rec = self.records[i]
         tele = self.telemetry
         if tele is not None:
-            tele.on_session_arrival(sid, self.entries[sid].name, now)
+            tele.on_session_arrival(rec.sid, self.entries[i].name, now)
         if self.active < self.scfg.max_active_sessions:
             self._mark(now, +1)
-            self._admit(sid)
+            self._admit(i)
         elif len(self.backlog) < self.scfg.max_backlog:
             self._mark(now, +1)             # queued sessions are in-system
-            self.backlog.append(sid)
+            self.backlog.append(i)
         else:
-            self.records[sid].state = SessionState.REJECTED
+            rec.state = SessionState.REJECTED
             self.n_rejected += 1
             if tele is not None:
-                tele.on_session_reject(sid, self.entries[sid].name, now)
+                tele.on_session_reject(rec.sid, self.entries[i].name, now)
+            self._terminal(i, rec)
 
-    def _admit(self, sid: int) -> None:
-        rec = self.records[sid]
-        entry = self.entries[sid]
+    def _admit(self, i: int) -> None:
+        rec = self.records[i]
+        entry = self.entries[i]
         pol = (shared_policy(entry.policy, self.spec)
                if entry.policy is not None else self.default_policy)
         now = self.engine.now
@@ -230,29 +302,29 @@ class _ServingDriver:
         self.active += 1
         self.n_admitted += 1
         if self.telemetry is not None:
-            self.telemetry.on_session_admit(sid, now)
+            self.telemetry.on_session_admit(rec.sid, now)
         pooled = self._sim_pool.get(entry.name)
         if pooled:
             sim = pooled.pop()
-            sim.reset(f"s{sid}:{entry.name}", now)
+            sim.reset(f"s{rec.sid}:{entry.name}", now)
         else:
             sim = Simulation(clone_trace(entry.trace), pol, self.spec,
                              self.cfg, fabric=self.fabric,
-                             tenant=f"s{sid}:{entry.name}", start_ns=now)
-        sim.on_done = lambda s, sid=sid: self._on_done(s, sid)
+                             tenant=f"s{rec.sid}:{entry.name}", start_ns=now)
+        sim.on_done = lambda s, i=i: self._on_done(s, i)
         sim.bind(self.engine)
         timeout = (entry.timeout_ns if entry.timeout_ns is not None
                    else self.scfg.session_timeout_ns)
         if timeout is not None:
             self.engine.schedule(now + timeout, EventKind.TIMER,
-                                 self._on_timeout, payload=sid)
+                                 self._on_timeout, payload=i)
 
-    def _on_timeout(self, sid: int) -> None:
+    def _on_timeout(self, i: int) -> None:
         """Host-side session deadline fired: if the session is still
         running, the host stops waiting — the slot frees and the backlog
         drains, while the in-flight work drains on the fabric (its
         completion is then a bookkeeping no-op)."""
-        rec = self.records[sid]
+        rec = self.records[i]
         if rec.state is not SessionState.PENDING:
             return                      # already done / failed / rejected
         rec.state = SessionState.TIMED_OUT
@@ -261,19 +333,20 @@ class _ServingDriver:
         now = self.engine.now
         self._mark(now, -1)
         if self.telemetry is not None:
-            self.telemetry.on_session_timeout(sid, rec.kind, now)
+            self.telemetry.on_session_timeout(rec.sid, rec.kind, now)
+        self._terminal(i, rec)
         if self.backlog:
             self._admit(self.backlog.popleft())
 
-    def _on_done(self, sim: Simulation, sid: int) -> None:
-        rec = self.records[sid]
+    def _on_done(self, sim: Simulation, i: int) -> None:
+        rec = self.records[i]
         rec.done_ns = sim._makespan
         if rec.state is SessionState.TIMED_OUT:
             # the host already gave up on this session: the drained work
             # only gets repooled — slot/occupancy freed at timeout time
             if self.scfg.pool_sessions:
                 self._sim_pool.setdefault(
-                    self.entries[sid].name, []).append(sim)
+                    self.entries[i].name, []).append(sim)
             return
         if sim.failed:
             # an operand read came back unrecoverable mid-run: the
@@ -284,17 +357,18 @@ class _ServingDriver:
             rec.state = SessionState.COMPLETED
             self.n_completed += 1
         if self.telemetry is not None:
-            self.telemetry.on_session_done(sid, rec.kind, rec.done_ns)
+            self.telemetry.on_session_done(rec.sid, rec.kind, rec.done_ns)
         self.active -= 1
         self._mark(self.engine.now, -1)
         if rec.measured and rec.state is SessionState.COMPLETED:
             self.op_latencies.extend(sim.op_latencies)
         if self.scfg.keep_session_results:
             self.results.append(sim.result())
+        self._terminal(i, rec)
         # repool AFTER every read above: reset() replaces the mutable
         # lists, so retained SimResults keep their own references
         if self.scfg.pool_sessions:
-            self._sim_pool.setdefault(self.entries[sid].name, []).append(sim)
+            self._sim_pool.setdefault(self.entries[i].name, []).append(sim)
         if self.backlog:
             self._admit(self.backlog.popleft())  # FIFO admission
 
@@ -340,7 +414,8 @@ class _ServingDriver:
             ftl=ftl_model.stats() if ftl_model is not None else None,
             n_failed=self.n_failed,
             n_timed_out=self.n_timed_out,
-            faults=fm.stats() if fm is not None else None)
+            faults=fm.stats() if fm is not None else None,
+            n_cancelled=self.n_cancelled)
 
 
 def simulate_serving(catalog: SessionCatalog,
@@ -400,39 +475,19 @@ def simulate_serving(catalog: SessionCatalog,
                 f"(last arrival at {arrival_times[-1]:g} ns) — every "
                 "steady-state metric would silently read zero")
 
-    engine = engine or EventEngine()
-    fabric = Fabric(spec, pud_units=cfg.pud_units)
-    fm = None
-    if faults is not None and faults.active:
-        from repro.sim.faults import FaultModel
-        fm = FaultModel(faults, spec, fabric, engine)
-    tele = as_recorder(telemetry)
-    if tele is not None:
-        tele.attach(fabric=fabric, engine=engine)
-        if fm is not None:
-            tele.attach_faults(fm)
-        tele.run_meta.setdefault("entry", "simulate_serving")
-        tele.run_meta.setdefault(
-            "policy", policy if isinstance(policy, str) else policy.name)
-        tele.run_meta.setdefault("seed", catalog.seed)
-    driver = _ServingDriver(catalog, arrival_times, policy, spec, cfg,
-                            scfg, fabric, engine)
-    ftl_model = (build_ftl_model(ftl, spec, fabric, engine, io_stream)
-                 if ftl is not None else None)
-    if ftl_model is not None and fm is not None:
-        ftl_model.attach_faults(fm)
-    io = (_HostIOModel(io_stream, fabric, spec, engine, ftl=ftl_model)
-          if io_stream is not None else None)
-    if tele is not None:
-        tele.attach_serving(driver)
-        if ftl_model is not None:
-            tele.attach_ftl(ftl_model)
-        if io is not None:
-            tele.attach_host_io(io)
-    engine.run()
-    name = policy if isinstance(policy, str) else policy.name
-    res = driver.result(name, io, ftl_model)
-    res.telemetry = tele
+    # the whole one-drive wiring (engine, fabric, fault model, telemetry,
+    # driver, FTL, host I/O) lives in DriveActor: simulate_serving IS a
+    # one-actor run driven to quiescence, which is what makes the N=1
+    # fleet equivalence law hold by construction rather than by parallel
+    # maintenance of two wiring orders.  Lazy import: drive.py imports
+    # this module for the driver/config types.
+    from repro.sim.drive import DriveActor
+    actor = DriveActor(catalog, policy, spec, cfg, scfg,
+                       arrival_times=arrival_times, io_stream=io_stream,
+                       ftl=ftl, faults=faults, engine=engine,
+                       telemetry=telemetry)
+    actor.drain()
+    res = actor.result()
     if res.session_latencies_ns:
         ratio = res.little_law_ratio()
         tol = scfg.little_law_warn_tol

@@ -35,6 +35,24 @@ def percentile(values: List[float], p: float) -> float:
     return s[k]
 
 
+def merged_percentile(sample_groups: List[List[float]], p: float) -> float:
+    """Percentile over the *union* of per-group samples.
+
+    This is the only correct way to aggregate latency percentiles across
+    drives: the fleet p99 is the 99th percentile of every session the
+    fleet served, pooled.  Averaging per-drive p99s is a classic
+    aggregation bug — it weights a 10-session straggler drive equally
+    with a 10 000-session healthy one and *understates* the fleet tail
+    whenever the tail is concentrated on few drives (the straggler
+    scenario this repo exists to study).  ``FleetResult`` routes every
+    percentile through here; ``tests/test_fleet.py`` pins the
+    merged-vs-averaged gap on an asymmetric fixture."""
+    merged: List[float] = []
+    for g in sample_groups:
+        merged.extend(g)
+    return percentile(merged, p)
+
+
 @dataclasses.dataclass
 class SimResult:
     policy: str
@@ -272,6 +290,7 @@ class SessionState(enum.Enum):
     REJECTED = "rejected"            # bounced off the full admission backlog
     FAILED = "failed"                # an unrecoverable fault inside the run
     TIMED_OUT = "timed_out"          # exceeded the session timeout
+    CANCELLED = "cancelled"          # revoked while queued (hedging twin lost)
 
 
 @dataclasses.dataclass
@@ -364,16 +383,19 @@ class ServingResult:
     n_timed_out: int = 0             # exceeded the session timeout
     # FaultStats when the run was invoked with faults=...
     faults: Optional[object] = None
+    # hedged twins revoked while still queued (fleet runs only; always 0
+    # for single-drive simulate_serving, which never cancels)
+    n_cancelled: int = 0
 
     # -- conservation ---------------------------------------------------------
 
     @property
     def n_inflight(self) -> int:
         """Sessions with no terminal state (0 after a drained run);
-        offered == completed + rejected + failed + timed-out + inflight
-        is the conservation law."""
+        offered == completed + rejected + failed + timed-out + cancelled
+        + inflight is the conservation law."""
         return (self.n_offered - self.n_completed - self.n_rejected
-                - self.n_failed - self.n_timed_out)
+                - self.n_failed - self.n_timed_out - self.n_cancelled)
 
     # -- robustness -----------------------------------------------------------
 
@@ -492,10 +514,201 @@ class ServingResult:
             "little_ratio": round(self.little_law_ratio(), 3),
             "max_util": round(max(self.utilization.values(), default=0.0), 3),
         }
+        if self.n_cancelled:
+            out["cancelled"] = self.n_cancelled
         if self.host_io is not None:
             out.update(self.host_io.summary())
         if self.ftl is not None:
             out.update(self.ftl.summary())
+        return out
+
+
+@dataclasses.dataclass
+class FleetSessionRecord:
+    """One session's lifecycle as the *fleet* front-end saw it
+    (:func:`repro.sim.fleet.simulate_fleet`).
+
+    ``drives`` is the replica set the session was routed to (one entry
+    unless replicated/hedged), ``winner`` the drive whose copy reached a
+    terminal state first.  ``latency_ns`` is fleet-arrival to first
+    completion — under hedging that is the min over the dispatched
+    copies, which is the whole point of hedging."""
+
+    sid: int
+    kind: str
+    arrival_ns: float
+    drives: Tuple[int, ...]
+    state: SessionState = SessionState.PENDING
+    done_ns: float = -1.0
+    winner: int = -1                # drive that finished first (-1: none)
+    measured: bool = False
+    hedged: bool = False            # a duplicate copy was dispatched
+    steered: bool = False           # routed away from a degraded primary
+
+    @property
+    def completed(self) -> bool:
+        return self.state is SessionState.COMPLETED
+
+    @property
+    def rejected(self) -> bool:
+        return self.state is SessionState.REJECTED
+
+    @property
+    def latency_ns(self) -> float:
+        if self.state is not SessionState.COMPLETED or self.done_ns < 0.0:
+            raise ValueError(
+                f"fleet session {self.sid} never completed "
+                f"(state={self.state.value}): latency_ns is undefined")
+        return self.done_ns - self.arrival_ns
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Result of a fleet serving run (:func:`repro.sim.fleet.simulate_fleet`).
+
+    ``drives`` holds one full :class:`ServingResult` per drive — the
+    per-drive breakdown — while ``sessions`` carries the fleet-level
+    view (one record per offered session, deduplicated across hedged
+    copies).  Every fleet percentile is *sample-merged* via
+    :func:`merged_percentile`: per-drive p99s are never averaged."""
+
+    placement: str                   # placement policy name
+    policy: str                      # offloading policy (run-wide)
+    n_drives: int
+    drives: List[ServingResult]
+    sessions: List[FleetSessionRecord]
+    n_offered: int
+    n_fleet_rejected: int            # bounced at the fleet front door
+    window_ns: Tuple[float, float]
+    makespan_ns: float
+    replication: int = 1
+    n_hedged: int = 0                # sessions that dispatched a twin
+    n_steered: int = 0               # sessions routed off a degraded primary
+    n_cancelled: int = 0             # hedge twins revoked while queued
+    # list of per-drive FlightRecorders (index = drive id) when the run
+    # was invoked with telemetry=...; merge with
+    # repro.sim.telemetry.merge_fleet_trace for one Perfetto timeline
+    telemetry: Optional[List[object]] = None
+
+    # -- conservation ---------------------------------------------------------
+
+    @property
+    def n_completed(self) -> int:
+        return sum(1 for s in self.sessions if s.completed)
+
+    @property
+    def n_rejected(self) -> int:
+        """Sessions that terminated REJECTED — at the fleet front door
+        or bounced by every replica's admission control."""
+        return sum(1 for s in self.sessions if s.rejected)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for s in self.sessions
+                   if s.state is SessionState.FAILED)
+
+    @property
+    def n_timed_out(self) -> int:
+        return sum(1 for s in self.sessions
+                   if s.state is SessionState.TIMED_OUT)
+
+    @property
+    def n_inflight(self) -> int:
+        """0 after a drained run: offered == completed + rejected +
+        failed + timed-out at the fleet record level (cancels happen to
+        *copies*, never to the fleet record itself)."""
+        return (self.n_offered - self.n_completed - self.n_rejected
+                - self.n_failed - self.n_timed_out)
+
+    @property
+    def availability(self) -> float:
+        den = self.n_completed + self.n_failed + self.n_timed_out
+        if den == 0:
+            return 1.0
+        return self.n_completed / den
+
+    # -- sample-merged fleet percentiles --------------------------------------
+
+    @property
+    def window_span_ns(self) -> float:
+        lo, hi = self.window_ns
+        return max(0.0, hi - lo)
+
+    @property
+    def measured_sessions(self) -> List[FleetSessionRecord]:
+        return [s for s in self.sessions if s.measured and s.completed]
+
+    def latency_groups(self) -> List[List[float]]:
+        """Measured fleet latencies grouped by winning drive — the
+        per-drive sample groups the merged percentile pools.  Group
+        sizes are wildly uneven under heat-aware routing or a straggler,
+        which is exactly when averaging per-group p99s goes wrong."""
+        groups: List[List[float]] = [[] for _ in range(self.n_drives)]
+        for s in self.measured_sessions:
+            groups[s.winner].append(s.latency_ns)
+        return groups
+
+    @property
+    def session_latencies_ns(self) -> List[float]:
+        return [s.latency_ns for s in self.measured_sessions]
+
+    def p(self, pct: float) -> float:
+        """Fleet session-latency percentile, sample-merged across
+        drives (never an average of per-drive percentiles)."""
+        return merged_percentile(self.latency_groups(), pct)
+
+    def per_drive_p(self, pct: float) -> List[float]:
+        """Per-drive percentile breakdown (by winning drive) — for
+        straggler hunting, not for re-aggregation."""
+        return [percentile(g, pct) for g in self.latency_groups()]
+
+    @property
+    def offered_rate_per_sec(self) -> float:
+        span = self.window_span_ns
+        if span <= 0.0:
+            return 0.0
+        lo, hi = self.window_ns
+        n = sum(1 for s in self.sessions if lo <= s.arrival_ns <= hi)
+        return n / (span / 1e9)
+
+    @property
+    def completed_rate_per_sec(self) -> float:
+        """Fleet completion throughput inside the window — the fleet
+        sessions/sec that the saturation search maximises."""
+        span = self.window_span_ns
+        if span <= 0.0:
+            return 0.0
+        lo, hi = self.window_ns
+        n = sum(1 for s in self.sessions
+                if s.completed and lo <= s.done_ns <= hi)
+        return n / (span / 1e9)
+
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "placement": self.placement,
+            "policy": self.policy,
+            "drives": self.n_drives,
+            "replication": self.replication,
+            "offered": self.n_offered,
+            "completed": self.n_completed,
+            "rejected": self.n_rejected,
+            "fleet_rejected": self.n_fleet_rejected,
+            "failed": self.n_failed,
+            "timed_out": self.n_timed_out,
+            "availability": round(self.availability, 4),
+            "offered_per_sec": round(self.offered_rate_per_sec, 1),
+            "completed_per_sec": round(self.completed_rate_per_sec, 1),
+            "fleet_p50_us": self.p(50) / 1e3,
+            "fleet_p99_us": self.p(99) / 1e3,
+            "per_drive_p99_us": [round(v / 1e3, 3)
+                                 for v in self.per_drive_p(99)],
+            "per_drive_completed": [d.n_completed for d in self.drives],
+        }
+        if self.n_hedged:
+            out["hedged"] = self.n_hedged
+            out["cancelled"] = self.n_cancelled
+        if self.n_steered:
+            out["steered"] = self.n_steered
         return out
 
 

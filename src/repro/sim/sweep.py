@@ -198,3 +198,105 @@ def batched_find_saturation(catalog: SessionCatalog,
                                           (float(lo[k]), float(hi[k])),
                                           probes[i])
     return results  # type: ignore[return-value]
+
+
+# -- lockstep fleet saturation search ------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetSweepLane:
+    """One lane of a batched *fleet* saturation sweep: a (policy, fleet
+    topology, arrivals) configuration — e.g. one placement x hedging
+    cell of the fleet bench grid.  ``fleet=None`` uses the caller's
+    shared default."""
+
+    policy: PolicyLike
+    fleet: Optional[object] = None       # FleetConfig override
+    seed: int = 0xA117
+    n_sessions: int = 64
+    base: Optional[ArrivalProcess] = None
+
+    def base_process(self, rate_lo: float) -> ArrivalProcess:
+        return self.base or PoissonArrivals(rate_per_sec=rate_lo,
+                                            n_sessions=self.n_sessions,
+                                            seed=self.seed)
+
+
+def batched_find_fleet_saturation(catalog: SessionCatalog,
+                                  lanes: Sequence[FleetSweepLane],
+                                  slo_p99_ns: float,
+                                  rate_lo: float,
+                                  rate_hi: float,
+                                  iters: int = 6,
+                                  spec: SSDSpec = DEFAULT_SSD,
+                                  config: Optional[SimConfig] = None,
+                                  serving: Optional[ServingConfig] = None,
+                                  fleet=None,
+                                  io_stream: Optional[HostIOStream] = None,
+                                  ftl: Optional[FTLConfig] = None,
+                                  faults=None,
+                                  min_availability: float = 1.0,
+                                  xp=None) -> List[SaturationResult]:
+    """Fleet saturation searches in lockstep, one per lane.
+
+    The fleet analogue of :func:`batched_find_saturation`, with the same
+    bit-identity law against the scalar search: the probe body is shared
+    verbatim (:func:`repro.sim.fleet._fleet_saturation_probe`) and every
+    round's midpoints are one float64 array op.  Lanes carry their own
+    :class:`~repro.sim.fleet.FleetConfig` so a placement x hedging grid
+    is one call."""
+    from repro.sim.fleet import FleetConfig, _fleet_saturation_probe
+    from repro.sim.placement import make_placement
+    if rate_lo <= 0.0 or rate_hi <= rate_lo:
+        raise ValueError("need 0 < rate_lo < rate_hi")
+    if iters < 1:
+        raise ValueError("iters must be >= 1")
+    if not lanes:
+        raise ValueError("need at least one FleetSweepLane")
+    xp = xp or array_backend()
+    scfg = serving or ServingConfig(keep_session_results=False)
+    default_fleet = fleet or FleetConfig()
+
+    n = len(lanes)
+    bases = [lane.base_process(rate_lo) for lane in lanes]
+    fleets = [lane.fleet or default_fleet for lane in lanes]
+    names = []
+    for lane, fcfg in zip(lanes, fleets):
+        pol = (lane.policy if isinstance(lane.policy, str)
+               else lane.policy.name)
+        pl = make_placement(fcfg.placement, fcfg.n_drives).name
+        names.append(f"{pol}[{pl}x{fcfg.n_drives}]")
+    probes: List[List[SaturationProbe]] = [[] for _ in range(n)]
+    results: List[Optional[SaturationResult]] = [None] * n
+
+    def probe(i: int, rate: float) -> bool:
+        return _fleet_saturation_probe(
+            catalog, bases[i], lanes[i].policy, rate, slo_p99_ns, scfg,
+            fleets[i], spec, config, io_stream, ftl, probes[i],
+            faults=faults, min_availability=min_availability)
+
+    live: List[int] = []
+    for i in range(n):
+        if not probe(i, rate_lo):
+            results[i] = SaturationResult(names[i], slo_p99_ns, 0.0,
+                                          (0.0, rate_lo), probes[i])
+        elif probe(i, rate_hi):
+            results[i] = SaturationResult(names[i], slo_p99_ns, rate_hi,
+                                          (rate_hi, rate_hi), probes[i])
+        else:
+            live.append(i)
+
+    if live:
+        lo = xp.full(len(live), float(rate_lo), dtype=xp.float64)
+        hi = xp.full(len(live), float(rate_hi), dtype=xp.float64)
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            ok = xp.asarray([probe(i, float(m))
+                             for i, m in zip(live, mid)], dtype=bool)
+            lo = xp.where(ok, mid, lo)
+            hi = xp.where(ok, hi, mid)
+        for k, i in enumerate(live):
+            results[i] = SaturationResult(names[i], slo_p99_ns,
+                                          float(lo[k]),
+                                          (float(lo[k]), float(hi[k])),
+                                          probes[i])
+    return results  # type: ignore[return-value]

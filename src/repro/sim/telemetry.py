@@ -97,6 +97,7 @@ import dataclasses
 import hashlib
 import json
 import math
+import re
 import sys
 from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, TextIO,
@@ -614,6 +615,20 @@ class FlightRecorder:
                 "ph": "i", "pid": PID_SESSIONS, "tid": 0,
                 "name": f"timeout s{sid}", "ts": ts, "s": "t"})
 
+    def on_session_cancel(self, sid: int, kind: str, t: float) -> None:
+        # a hedged twin lost the race while still queued: close the
+        # async span (b/e balance) and mark the revocation
+        if self.cfg.spans:
+            ts = t * _NS_TO_US
+            self.async_events.append({
+                "ph": "e", "cat": "session", "id": sid,
+                "pid": PID_SESSIONS, "tid": 0,
+                "name": f"session:{kind}", "ts": ts,
+                "args": {"cancelled": True}})
+            self.async_events.append({
+                "ph": "i", "pid": PID_SESSIONS, "tid": 0,
+                "name": f"cancel s{sid}", "ts": ts, "s": "t"})
+
     def on_session_reject(self, sid: int, kind: str, t: float) -> None:
         # close the async span so b/e stay balanced, and mark the bounce
         if self.cfg.spans:
@@ -796,9 +811,89 @@ def _p99(values) -> float:
     return percentile(list(values), 99.0)
 
 
+# -- fleet trace merging -------------------------------------------------------
+
+def merge_fleet_trace(traces: List[Any]) -> Dict[str, object]:
+    """Merge per-drive traces into one fleet Chrome-trace timeline.
+
+    ``traces`` is the ``FleetResult.telemetry`` list (one
+    :class:`FlightRecorder` or exported trace dict per drive, index =
+    drive id; ``None`` entries are skipped).  Merge arithmetic, reversed
+    by :func:`repro.sim.analysis.split_fleet_trace`:
+
+    * pids: drive ``k``'s process ``p`` becomes ``10*k + p`` (the six
+      base pids stay < 10, so ``pid // 10`` recovers the drive and
+      ``pid % 10`` the base process);
+    * process names gain a ``d{k}:`` prefix (``d0:fabric``,
+      ``d3:reliability``, ...) — the vocabulary
+      :func:`validate_trace` checks;
+    * async span ids gain a ``d{k}/`` prefix so hedged twins of one
+      fleet session (same sid on two drives) stay distinct spans;
+    * ``otherData`` record streams (audit / intervals / breakdown /
+      ops) are concatenated with a ``"drive": k`` tag on every record;
+      ``meta`` keeps drive 0's keys plus ``n_drives`` and the per-drive
+      ``drives`` list."""
+    events: List[dict] = []
+    event_counts: Dict[str, int] = {}
+    streams: Dict[str, List[dict]] = {
+        "audit": [], "intervals": [], "breakdown": [], "ops": []}
+    metas: List[dict] = []
+    dropped = {"dropped_spans": 0, "dropped_audit": 0, "dropped_ops": 0}
+    for k, t in enumerate(traces):
+        if t is None:
+            continue
+        if hasattr(t, "chrome_trace"):
+            t = t.chrome_trace()
+        for ev in t.get("traceEvents", []):
+            ev = dict(ev)
+            pid = ev.get("pid")
+            if isinstance(pid, int):
+                ev["pid"] = 10 * k + pid
+            if ev.get("ph") == "M" and ev.get("name") == "process_name":
+                ev["args"] = {"name": f"d{k}:{ev['args']['name']}"}
+            if ev.get("ph") in ("b", "e") and "id" in ev:
+                ev["id"] = f"d{k}/{ev['id']}"
+            events.append(ev)
+        other = t.get("otherData", {})
+        for kind, cnt in (other.get("event_counts") or {}).items():
+            event_counts[kind] = event_counts.get(kind, 0) + cnt
+        for name, acc in streams.items():
+            for rec in other.get(name) or []:
+                rec = dict(rec)
+                rec["drive"] = k
+                acc.append(rec)
+        metas.append(dict(other.get("meta") or {}))
+        for dk in dropped:
+            dropped[dk] += other.get(dk, 0)
+    meta: Dict[str, object] = dict(metas[0]) if metas else {}
+    meta["entry"] = "simulate_fleet"
+    meta["n_drives"] = len(traces)
+    meta["drives"] = metas
+    out: Dict[str, object] = {
+        "traceEvents": events,
+        "displayTimeUnit": "ns",
+        "otherData": {"schema": SCHEMA, "event_counts": event_counts,
+                      "meta": meta, **streams, **dropped},
+    }
+    return out
+
+
+def export_fleet_trace(traces: List[Any], path: str) -> Dict[str, object]:
+    """Merge (:func:`merge_fleet_trace`) and write to ``path``."""
+    obj = merge_fleet_trace(traces)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
 # -- validation / summary ------------------------------------------------------
 
 _LEGAL_PH = frozenset("XMbeiC")
+
+#: legal drive-prefixed process names in a merged fleet trace — exactly
+#: the six base processes behind a ``d<number>:`` prefix
+_DRIVE_PROC_RE = re.compile(
+    r"^d\d+:(fabric|ftl-gc|sessions|host-io|metrics|reliability)$")
 
 
 def validate_trace(obj: Any) -> List[str]:
@@ -831,6 +926,16 @@ def validate_trace(obj: Any) -> List[str]:
             args = ev.get("args")
             if isinstance(args, dict):
                 pname[ev.get("pid")] = args.get("name")
+    # merged fleet traces prefix every process with "d<drive>:"; anything
+    # that *looks* drive-prefixed but doesn't resolve to a known base
+    # process is a malformed merge, not a new vocabulary
+    for pid, name in sorted(pname.items(), key=lambda kv: str(kv[0])):
+        if isinstance(name, str) and name.startswith("d") and ":" in name \
+                and not _DRIVE_PROC_RE.match(name):
+            errors.append(
+                f"process {pid}: malformed drive-prefixed process name "
+                f"{name!r} (expected d<drive>:<fabric|ftl-gc|sessions|"
+                f"host-io|metrics|reliability>)")
     open_async: Dict[Tuple[str, Any], int] = {}
     last_counter_ts: Dict[Tuple[Any, Any, Any], float] = {}
     for n, ev in enumerate(events):
@@ -848,6 +953,10 @@ def validate_trace(obj: Any) -> List[str]:
             if "pid" not in ev:
                 errors.append(f"event #{n} ({ph}): missing pid")
         proc = pname.get(ev.get("pid"))
+        if isinstance(proc, str) and _DRIVE_PROC_RE.match(proc):
+            # per-drive track of a merged fleet trace: the base
+            # process's vocabulary rules apply unchanged
+            proc = proc.split(":", 1)[1]
         if proc == "reliability":
             name = ev.get("name", "")
             if ph == "X" and not (name.startswith("recovery:")

@@ -254,7 +254,12 @@ class _HostIOModel:
         while True:
             t_j = plan[j][0]
             nt = engine.next_time()
-            if nt is not None and t_j >= nt:
+            horizon = engine.horizon
+            if (nt is not None and t_j >= nt) or \
+                    (horizon is not None and t_j >= horizon):
+                # an arrival at/after the run horizon must go back on the
+                # heap: the caller of run(until)/run_before() may inject
+                # events there (fleet advance-to-time seam)
                 engine.schedule(t_j, EventKind.IO_ARRIVAL, self._on_arrival,
                                 payload=j)
                 return

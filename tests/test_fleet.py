@@ -1,0 +1,475 @@
+"""Fleet serving laws (:mod:`repro.sim.fleet`, :mod:`repro.sim.placement`).
+
+The subsystem's acceptance properties:
+
+(a) N=1 equivalence — a 1-drive hash-placement fleet is *bit-identical*
+    to ``simulate_serving`` (same DriveActor code path), with or without
+    host-I/O churn, an FTL and the error model;
+(b) seed lineage — ``derive_drive_seed`` is the identity for drive 0,
+    distinct per drive/salt, and per-drive pure: adding drive k+1 to a
+    fleet never perturbs the streams (or results) of drives 0..k;
+(c) regime agreement — the lockstep driver reproduces the static
+    pre-partitioned driver exactly when health is uniform (this also
+    pins the advance-to-time seam against host-I/O burst batching);
+(d) percentile law — fleet percentiles are sample-merged across drives,
+    never averages of per-drive percentiles;
+(e) conservation + determinism — offered sessions are all accounted for
+    under steering, hedging, admission caps and retirement, and every
+    configuration replays identically;
+(f) mechanisms — steering and hedging recover a mid-GC straggler's
+    tail; hedged sessions resolve to the fastest copy and the loser's
+    queued twin is cancelled; retirement drains a drive and survivors
+    absorb the rebuild stream;
+(g) observability — merged fleet traces validate (including the
+    ``d<k>:`` process vocabulary), split back into valid per-drive
+    traces, and ``fleet_blame`` names the straggler.
+"""
+import copy
+import dataclasses
+import json
+
+import pytest
+
+from repro.sim import (CatalogEntry, ConsistentHashPlacement, DriveProfile,
+                       FaultConfig, FleetConfig, FleetSweepLane, FTLConfig,
+                       HashPlacement, HeatAwarePlacement, HostIOStream,
+                       PoissonArrivals, PlacementPolicy, ServingConfig,
+                       SessionCatalog, batched_find_fleet_saturation,
+                       derive_drive_seed, fleet_blame, find_fleet_saturation,
+                       make_placement, merge_fleet_trace, merged_percentile,
+                       percentile, simulate_fleet, simulate_serving,
+                       split_fleet_trace, validate_trace)
+from repro.sim.drive import DriveHealth
+
+from _synth import synth_trace
+
+pytestmark = pytest.mark.filterwarnings("ignore:little_law_ratio")
+
+RAMP = list(range(40))
+SHORT = [2, 4, 6] * 3
+
+
+def two_kind_catalog():
+    return SessionCatalog(
+        [CatalogEntry("A", synth_trace(RAMP, name="A"), weight=3.0),
+         CatalogEntry("B", synth_trace(SHORT, name="B"), weight=1.0)],
+        seed=5)
+
+
+def quiet():
+    return ServingConfig(little_law_warn_tol=float("inf"))
+
+
+def arrivals(rate=6000, n=24, seed=9):
+    return PoissonArrivals(rate_per_sec=rate, n_sessions=n, seed=seed)
+
+
+def straggler_profile(n_requests=300):
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                    prefill=0.9, gc_suspend=True, gc_reserve_blocks=1)
+    io = HostIOStream(rate_iops=150_000, read_fraction=0.1,
+                      n_requests=n_requests, zipf_theta=0.9,
+                      n_logical_pages=ftl.logical_pages(), seed=11)
+    return DriveProfile(io_stream=io, ftl=ftl)
+
+
+def serving_tuple(res):
+    return (res.makespan_ns, res.n_completed, res.n_rejected,
+            res.n_failed, res.n_timed_out,
+            tuple(res.session_latencies_ns))
+
+
+# -- (a) the N=1 equivalence law -----------------------------------------------
+
+def test_one_drive_fleet_reproduces_simulate_serving_exactly():
+    cat, arr = two_kind_catalog(), arrivals()
+    ser = simulate_serving(cat, arr, "conduit", serving=quiet())
+    flt = simulate_fleet(cat, arr, "conduit", serving=quiet(),
+                         fleet=FleetConfig(n_drives=1))
+    assert serving_tuple(flt.drives[0]) == serving_tuple(ser)   # bit-exact
+    assert flt.p(99) == ser.p(99)
+    assert flt.n_completed == ser.n_completed
+    assert [(r.state, r.done_ns) for r in flt.sessions] == \
+           [(r.state, r.done_ns) for r in ser.sessions]
+
+
+def test_one_drive_fleet_equivalence_with_ftl_io_and_faults():
+    cat, arr = two_kind_catalog(), arrivals(rate=4000, n=16)
+    ftl = FTLConfig(blocks_per_die=4, pages_per_block=8, op_ratio=0.28,
+                    prefill=0.9, gc_reserve_blocks=1)
+    io = HostIOStream(rate_iops=40_000, read_fraction=0.7, n_requests=200,
+                      n_logical_pages=ftl.logical_pages(), seed=7)
+    fc = FaultConfig(rber_base=5e-4)
+    kw = dict(serving=quiet(), io_stream=io, ftl=ftl, faults=fc)
+    ser = simulate_serving(cat, arr, "conduit", **kw)
+    flt = simulate_fleet(cat, arr, "conduit",
+                         fleet=FleetConfig(n_drives=1), **kw)
+    d0 = flt.drives[0]
+    assert serving_tuple(d0) == serving_tuple(ser)
+    assert d0.host_io.latencies_ns == ser.host_io.latencies_ns
+    assert d0.ftl.gc_pages_copied == ser.ftl.gc_pages_copied
+    assert d0.faults.summary() == ser.faults.summary()
+
+
+# -- (b) seed lineage ----------------------------------------------------------
+
+def test_derive_drive_seed_identity_and_distinctness():
+    assert derive_drive_seed(12345, 0) == 12345          # the N=1 anchor
+    seeds = [derive_drive_seed(12345, d) for d in range(16)]
+    assert len(set(seeds)) == 16
+    # salts separate stream kinds on one drive
+    assert derive_drive_seed(12345, 3, salt=0) != \
+        derive_drive_seed(12345, 3, salt=1)
+    # and drive 0 with a nonzero salt is NOT the raw seed (no cross-talk
+    # between the io stream and the fault stream of drive 0)
+    assert derive_drive_seed(12345, 0, salt=1) != 12345
+    # pure function of (seed, drive, salt)
+    assert derive_drive_seed(12345, 7, 1) == derive_drive_seed(12345, 7, 1)
+
+
+class _PinnedPlacement(PlacementPolicy):
+    """Routes sid -> sid % 2 regardless of fleet size, so growing the
+    fleet cannot re-route sessions — isolating the RNG-lineage law."""
+
+    name = "pinned"
+
+    def replicas(self, sid, r):
+        return (sid % 2,)
+
+
+def test_adding_a_drive_never_perturbs_existing_drives():
+    cat, arr = two_kind_catalog(), arrivals(rate=4000, n=20)
+    io = HostIOStream(rate_iops=30_000, read_fraction=0.6, n_requests=150,
+                      seed=21)
+    mk = lambda n: simulate_fleet(
+        cat, arr, "conduit", serving=quiet(), io_stream=io,
+        fleet=FleetConfig(n_drives=n, placement=_PinnedPlacement(n)))
+    small, big = mk(2), mk(3)
+    for d in range(2):
+        assert serving_tuple(big.drives[d]) == \
+            serving_tuple(small.drives[d])
+        assert big.drives[d].host_io.latencies_ns == \
+            small.drives[d].host_io.latencies_ns
+    # the new drive served nothing but still drew its own io stream
+    assert big.drives[2].n_completed == 0
+    assert big.drives[2].host_io.n_reads + big.drives[2].host_io.n_writes > 0
+
+
+# -- (c) regime agreement (lockstep == static when health is uniform) ---------
+
+def test_lockstep_driver_matches_static_partition():
+    """steering=True forces the lockstep loop (advance_before + health
+    reads per arrival) but with uniform health it must route exactly
+    like the static pre-partitioned driver — including under host-I/O
+    burst batching, which must stop at the advance horizon."""
+    cat, arr = two_kind_catalog(), arrivals(rate=6000, n=32)
+    io = HostIOStream(rate_iops=50_000, read_fraction=0.7, n_requests=300,
+                      seed=13)
+    static = simulate_fleet(cat, arr, "conduit", serving=quiet(),
+                            io_stream=io,
+                            fleet=FleetConfig(n_drives=3, replication=2))
+    lockstep = simulate_fleet(cat, arr, "conduit", serving=quiet(),
+                              io_stream=io,
+                              fleet=FleetConfig(n_drives=3, replication=2,
+                                                steering=True))
+    assert lockstep.n_steered == 0          # nothing to steer around
+    for d in range(3):
+        assert serving_tuple(lockstep.drives[d]) == \
+            serving_tuple(static.drives[d])
+    assert [(r.state, r.done_ns, r.winner) for r in lockstep.sessions] == \
+           [(r.state, r.done_ns, r.winner) for r in static.sessions]
+
+
+# -- (d) the percentile law ----------------------------------------------------
+
+def test_fleet_percentiles_are_sample_merged_not_averaged():
+    # asymmetric groups where averaging per-group p99s is wildly wrong:
+    # one drive holds ALL of the fleet's slow samples
+    groups = [[10_000.0] * 10, [100.0] * 90]
+    merged = merged_percentile(groups, 99)
+    flat = sorted(x for g in groups for x in g)
+    assert merged == percentile(flat, 99)                # the definition
+    assert merged == 10_000.0     # the tail survives the merge untouched
+    avg_of_p99s = sum(percentile(g, 99) for g in groups) / len(groups)
+    assert merged != avg_of_p99s                         # the bug to ban
+    assert avg_of_p99s < 0.6 * merged    # averaging halves the real tail
+
+
+def test_fleet_result_p99_equals_percentile_of_pooled_latencies():
+    res = simulate_fleet(two_kind_catalog(), arrivals(), "conduit",
+                         serving=quiet(), fleet=FleetConfig(n_drives=3))
+    lats = res.session_latencies_ns
+    assert lats
+    assert res.p(99) == percentile(sorted(lats), 99)
+    assert res.p(99) == merged_percentile(res.latency_groups(), 99)
+
+
+# -- (e) conservation + determinism --------------------------------------------
+
+@pytest.mark.parametrize("fcfg", [
+    FleetConfig(n_drives=3),
+    FleetConfig(n_drives=3, placement="consistent", replication=2),
+    FleetConfig(n_drives=3, placement="heat", replication=2),
+    FleetConfig(n_drives=3, replication=2, steering=True),
+    FleetConfig(n_drives=3, replication=2, hedging=True),
+    FleetConfig(n_drives=3, replication=2, max_inflight=2),
+    FleetConfig(n_drives=3, replication=2, retire=(1, 2.0e6)),
+], ids=["hash", "consistent", "heat", "steering", "hedging",
+        "max_inflight", "retire"])
+def test_fleet_conservation_and_determinism(fcfg):
+    mk = lambda: simulate_fleet(two_kind_catalog(),
+                                arrivals(rate=8000, n=30), "conduit",
+                                serving=quiet(), fleet=fcfg)
+    res, res2 = mk(), mk()
+    assert res.n_offered == (res.n_completed + res.n_rejected
+                             + res.n_failed + res.n_timed_out)
+    assert res.n_inflight == 0
+    # replay is exact
+    assert [(r.state, r.done_ns, r.winner, r.drives) for r in res.sessions] \
+        == [(r.state, r.done_ns, r.winner, r.drives) for r in res2.sessions]
+    assert res.summary() == res2.summary()
+
+
+def test_fleet_front_door_backpressure():
+    res = simulate_fleet(two_kind_catalog(),
+                         arrivals(rate=100_000, n=40), "conduit",
+                         serving=quiet(),
+                         fleet=FleetConfig(n_drives=2, replication=2,
+                                           max_inflight=1))
+    assert res.n_fleet_rejected > 0
+    assert res.n_rejected >= res.n_fleet_rejected
+    assert res.n_offered == (res.n_completed + res.n_rejected
+                             + res.n_failed + res.n_timed_out)
+    # rejected-at-the-door sessions never touched a drive
+    assert sum(d.n_offered for d in res.drives) < res.n_offered
+
+
+# -- (f) mechanisms ------------------------------------------------------------
+
+def test_steering_recovers_straggler_tail():
+    cat, arr = two_kind_catalog(), arrivals(rate=6000, n=24)
+    mk = lambda steer: simulate_fleet(
+        cat, arr, "conduit", serving=quiet(),
+        fleet=FleetConfig(n_drives=3, replication=2, steering=steer,
+                          profiles=((0, straggler_profile()),)))
+    plain, steered = mk(False), mk(True)
+    assert steered.n_steered > 0
+    assert steered.p(99) < plain.p(99)
+
+
+def test_hedging_takes_fastest_copy_and_cancels_the_twin():
+    cat, arr = two_kind_catalog(), arrivals(rate=6000, n=24)
+    res = simulate_fleet(
+        cat, arr, "conduit", serving=quiet(),
+        fleet=FleetConfig(n_drives=3, replication=2, hedging=True,
+                          profiles=((0, straggler_profile()),)))
+    assert res.n_hedged > 0
+    hedged_done = [r for r in res.sessions if r.hedged and r.completed]
+    assert hedged_done
+    for rec in hedged_done:
+        assert rec.winner in rec.drives
+    # every cancel is a revoked queued twin, visible in the drive counts
+    assert res.n_cancelled == sum(d.n_cancelled for d in res.drives)
+    # and hedging beats leaving the straggler in the route order
+    plain = simulate_fleet(
+        cat, arr, "conduit", serving=quiet(),
+        fleet=FleetConfig(n_drives=3, replication=2,
+                          profiles=((0, straggler_profile()),)))
+    assert res.p(99) < plain.p(99)
+
+
+def test_retirement_drains_drive_and_survivors_absorb_rebuild():
+    cat = two_kind_catalog()
+    arr = arrivals(rate=4000, n=30)
+    t_retire = 3.0e6
+    res = simulate_fleet(
+        cat, arr, "conduit", serving=quiet(),
+        fleet=FleetConfig(n_drives=3, replication=2, retire=(1, t_retire),
+                          rebuild_read_iops=4_000.0, rebuild_reads=128))
+    base = simulate_fleet(cat, arr, "conduit", serving=quiet(),
+                          fleet=FleetConfig(n_drives=3, replication=2))
+    # the retiree took no sessions after the retirement instant
+    for rec in res.sessions:
+        if rec.arrival_ns > t_retire:
+            assert 1 not in (rec.winner,)
+    # survivors served the rebuild reads as a background tenant: the
+    # reconstruction traffic keeps them busy past their last session
+    assert max(res.drives[d].makespan_ns for d in (0, 2)) > \
+        max(base.drives[d].makespan_ns for d in (0, 2))
+    assert res.n_offered == (res.n_completed + res.n_rejected
+                             + res.n_failed + res.n_timed_out)
+
+
+# -- placement unit laws -------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [HashPlacement, ConsistentHashPlacement,
+                                 HeatAwarePlacement])
+def test_replica_sets_are_distinct_and_stable(cls):
+    p = cls(5)
+    for sid in range(50):
+        reps = p.replicas(sid, 3)
+        assert len(reps) == len(set(reps)) == 3
+        assert all(0 <= d < 5 for d in reps)
+        assert reps == p.replicas(sid, 3)                # pure
+    assert len(p.replicas(7, 99)) == 5                   # r clamps to N
+
+
+def test_consistent_hash_minimizes_remapping():
+    small, big = ConsistentHashPlacement(4), ConsistentHashPlacement(5)
+    moved = sum(small.replicas(sid, 1)[0] != big.replicas(sid, 1)[0]
+                for sid in range(1000))
+    # ideal is ~1/5 of sessions; plain mod-hash remaps ~4/5
+    assert moved < 450
+
+
+def _health(d, **kw):
+    base = dict(drive_id=d, t_ns=0.0, active=0, backlog=0, gc_busy=False,
+                gc_active_dies=0, read_only_dies=0, failed_dies=0,
+                recovering=False, retired=False)
+    base.update(kw)
+    return DriveHealth(**base)
+
+
+def test_heat_aware_route_orders_by_load():
+    p = HeatAwarePlacement(3)
+    health = {0: _health(0, gc_busy=True, gc_active_dies=2),
+              1: _health(1), 2: _health(2, active=1)}
+    assert p.route(0, (0, 1, 2), health) == (1, 2, 0)
+    # ties preserve placement (primary-first) order
+    health = {0: _health(0), 1: _health(1), 2: _health(2)}
+    assert p.route(0, (2, 0, 1), health) == (2, 0, 1)
+    # retired drives sink below everything
+    health = {0: _health(0, retired=True), 1: _health(1, gc_busy=True),
+              2: _health(2, recovering=True)}
+    assert p.route(0, (0, 1, 2), health)[-1] == 0
+
+
+def test_make_placement_registry():
+    assert make_placement("hash", 4).name == "hash"
+    assert make_placement("consistent", 4).name == "consistent"
+    assert make_placement("heat", 4).name == "heat"
+    inst = HashPlacement(2)
+    assert make_placement(inst, 4) is inst
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_placement("roundrobin", 4)
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="hedging needs replication"):
+        FleetConfig(n_drives=3, hedging=True)
+    with pytest.raises(ValueError, match="steering needs replication"):
+        FleetConfig(n_drives=3, steering=True)
+    with pytest.raises(ValueError, match="replication"):
+        FleetConfig(n_drives=2, replication=3)
+    with pytest.raises(ValueError, match="retire"):
+        FleetConfig(n_drives=2, retire=(5, 1.0))
+    with pytest.raises(ValueError, match="only drive"):
+        FleetConfig(n_drives=1, retire=(0, 1.0))
+
+
+# -- saturation ----------------------------------------------------------------
+
+def test_find_fleet_saturation_deterministic_and_bracketed():
+    cat = two_kind_catalog()
+    base = arrivals(rate=100, n=24)
+    mk = lambda: find_fleet_saturation(
+        cat, base, "conduit", slo_p99_ns=2e6, rate_lo=500.0,
+        rate_hi=40_000.0, iters=2, serving=quiet(),
+        fleet=FleetConfig(n_drives=2))
+    s1, s2 = mk(), mk()
+    assert s1.rate_per_sec == s2.rate_per_sec
+    assert [p.rate_per_sec for p in s1.probes] == \
+           [p.rate_per_sec for p in s2.probes]
+    assert s1.bracket[0] <= s1.rate_per_sec <= s1.bracket[1]
+    assert s1.policy == "conduit[hashx2]"
+
+
+def test_batched_fleet_saturation_matches_scalar():
+    cat = two_kind_catalog()
+    fcfgs = [FleetConfig(n_drives=2),
+             FleetConfig(n_drives=2, placement="heat", replication=2)]
+    lanes = [FleetSweepLane("conduit", fleet=f, seed=9, n_sessions=24)
+             for f in fcfgs]
+    batched = batched_find_fleet_saturation(
+        cat, lanes, slo_p99_ns=2e6, rate_lo=500.0, rate_hi=40_000.0,
+        iters=2, serving=quiet())
+    for lane, got in zip(lanes, batched):
+        want = find_fleet_saturation(
+            cat, lane.base_process(500.0), "conduit", slo_p99_ns=2e6,
+            rate_lo=500.0, rate_hi=40_000.0, iters=2, serving=quiet(),
+            fleet=lane.fleet)
+        assert got.rate_per_sec == want.rate_per_sec
+        assert got.policy == want.policy
+        assert [p.rate_per_sec for p in got.probes] == \
+               [p.rate_per_sec for p in want.probes]
+
+
+# -- (g) observability ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_fleet():
+    res = simulate_fleet(
+        two_kind_catalog(), arrivals(rate=6000, n=18), "conduit",
+        serving=quiet(), telemetry=True,
+        fleet=FleetConfig(n_drives=3, replication=2, hedging=True,
+                          profiles=((0, straggler_profile(150)),)))
+    return res, merge_fleet_trace(res.telemetry)
+
+
+def test_merged_fleet_trace_validates(traced_fleet):
+    res, trace = traced_fleet
+    assert validate_trace(trace) == []
+    meta = trace["otherData"]["meta"]
+    assert meta["entry"] == "simulate_fleet"
+    assert meta["n_drives"] == 3
+    pnames = {(ev["args"] or {}).get("name")
+              for ev in trace["traceEvents"]
+              if ev.get("ph") == "M" and ev.get("name") == "process_name"}
+    assert any(n and n.startswith("d0:") for n in pnames)
+    assert any(n and n.startswith("d2:") for n in pnames)
+
+
+def test_validate_trace_rejects_malformed_drive_prefixes(traced_fleet):
+    _res, trace = traced_fleet
+    for bad in ("dx:fabric", "d1:bogus", "d01x:sessions"):
+        t = copy.deepcopy(trace)
+        for ev in t["traceEvents"]:
+            if ev.get("ph") == "M" and ev.get("name") == "process_name":
+                ev["args"]["name"] = bad
+                break
+        errs = validate_trace(t)
+        assert any("malformed drive-prefixed process name" in e
+                   for e in errs), bad
+
+
+def test_split_fleet_trace_round_trips(traced_fleet, tmp_path):
+    res, trace = traced_fleet
+    # through the file format, as a CI artifact consumer would see it
+    path = tmp_path / "fleet.json"
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    with open(path) as f:
+        per = split_fleet_trace(json.load(f))
+    assert sorted(per) == [0, 1, 2]
+    for k, t in per.items():
+        assert validate_trace(t) == [], k
+        assert t["otherData"]["meta"]["drive"] == k
+        pids = {ev["pid"] for ev in t["traceEvents"]
+                if isinstance(ev.get("pid"), int)}
+        assert pids and all(p < 10 for p in pids)         # base pids restored
+
+
+def test_fleet_blame_names_the_straggler(traced_fleet):
+    _res, trace = traced_fleet
+    blame = fleet_blame(trace)
+    assert blame["schema"] == "conduit-fleet-analysis/v1"
+    assert len(blame["per_drive"]) == 3
+    assert blame["fleet_p99_ns"] > 0
+    assert blame["straggler"]["drive"] == 0
+
+
+def test_simulate_fleet_rejects_single_flight_recorder():
+    from repro.sim import FlightRecorder, TelemetryConfig
+    with pytest.raises(ValueError, match="one recorder per drive"):
+        simulate_fleet(two_kind_catalog(), arrivals(), "conduit",
+                       telemetry=FlightRecorder(TelemetryConfig()))
